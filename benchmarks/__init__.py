@@ -1,0 +1,6 @@
+"""Benchmark harness: one module per paper table/figure + roofline readout.
+
+Each module exposes rows() -> List[Tuple[name, value, derived]] printed as
+CSV by benchmarks.run. Control-plane figures run the real scheduler;
+data-plane ones run/measure JAX; the roofline table reads the dry-run JSONs.
+"""

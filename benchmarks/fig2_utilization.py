@@ -1,0 +1,15 @@
+"""Fig. 2: average CPU utilization of dedicated parameter servers."""
+
+from repro.configs.paper_workloads import standalone_utilization
+
+CASES = [("alexnet", 1, 2), ("vgg19", 1, 2), ("awd-lm", 1, 2), ("bert", 1, 2),
+         ("alexnet", 2, 2), ("vgg19", 2, 2), ("awd-lm", 2, 2), ("bert", 2, 2)]
+
+
+def rows():
+    out = []
+    for model, s, w in CASES:
+        u = standalone_utilization(model, s, w)
+        out.append((f"fig2/util/{model}-{s}s-{w}w", f"{u:.3f}",
+                    "paper: VGG19 1s-2w ~= 0.16; >half CPU unused"))
+    return out

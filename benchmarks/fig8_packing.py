@@ -1,0 +1,28 @@
+"""Fig. 8 + Table 2: Aggregator counts / CPU reduction under multi-job packing."""
+
+from repro.configs.paper_workloads import make_job
+from repro.core import ParameterService
+
+PAPER_TABLE2 = {"alexnet": 0.375, "vgg19": 0.5, "awd-lm": 0.5, "bert": 0.5}
+
+
+def _run(model, n_jobs, servers, workers):
+    svc = ParameterService(total_budget=64, n_clusters=1)
+    for i in range(n_jobs):
+        svc.register_job(make_job(model, f"{model}-{i}", servers, workers))
+    return svc
+
+
+def rows():
+    out = []
+    for model in ("alexnet", "vgg19", "awd-lm", "bert"):
+        for n in (2, 3, 4):
+            svc = _run(model, n, 2, 2)
+            out.append((f"fig8/aggregators/{model}-{n}jobs-2s2w",
+                        str(svc.n_aggregators),
+                        f"baseline={2 * n} reduction={svc.cpu_reduction():.3f}"))
+    for model, expected in PAPER_TABLE2.items():
+        svc = _run(model, 2, 4, 4)
+        out.append((f"table2/reduction/{model}-2jobs-4s4w",
+                    f"{svc.cpu_reduction():.3f}", f"paper={expected}"))
+    return out

@@ -1,0 +1,18 @@
+"""Fig. 9: job performance impact when sharing AutoPS (<= ~9%)."""
+
+from repro.configs.paper_workloads import make_job
+from repro.core import ParameterService
+
+
+def rows():
+    out = []
+    for model in ("alexnet", "vgg19", "awd-lm", "bert"):
+        for n in (2, 4):
+            svc = ParameterService(total_budget=64, n_clusters=1)
+            for i in range(n):
+                svc.register_job(make_job(model, f"{model}-{i}", 2, 2))
+            losses = svc.predicted_losses()
+            out.append((f"fig9/max_loss/{model}-{n}jobs",
+                        f"{max(losses.values()):.4f}",
+                        "paper: up to 9% loss; LossLimit=0.1"))
+    return out

@@ -1,0 +1,56 @@
+"""Roofline table: reads the dry-run JSONs (results/dryrun) and prints the
+per-(arch x shape x mesh) three-term roofline (EXPERIMENTS.md section
+generator)."""
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = (Path("results/dryrun_final")
+           if Path("results/dryrun_final").exists() else Path("results/dryrun"))
+
+
+def load(mesh="pod256"):
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / mesh / "*.json"))):
+        rows.append(json.loads(Path(f).read_text()))
+    return rows
+
+
+def rows(mesh="pod256"):
+    out = []
+    for r in load(mesh):
+        if not r.get("ok"):
+            out.append((f"roofline/{mesh}/{r['arch']}/{r['shape']}", "FAIL",
+                        r.get("error", "")[:80]))
+            continue
+        rf = r["roofline"]
+        out.append((
+            f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+            f"{r['roofline_fraction']:.4f}",
+            f"dom={rf['dominant']} tc={rf['t_compute_s']:.3g}s "
+            f"tm={rf['t_memory_s']:.3g}s tx={rf['t_collective_s']:.3g}s "
+            f"peakGB={r['memory']['peak_estimate_bytes'] / 1e9:.1f} "
+            f"useful={r['useful_flops_ratio']:.2f}",
+        ))
+    return out
+
+
+def markdown_table(mesh="pod256"):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "peak GB/dev | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.3g} | "
+            f"{rf['t_memory_s']:.3g} | {rf['t_collective_s']:.3g} | "
+            f"{rf['dominant']} | {r['memory']['peak_estimate_bytes'] / 1e9:.1f} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.1%} |"
+        )
+    return "\n".join(lines)

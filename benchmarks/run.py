@@ -1,0 +1,47 @@
+"""Run every benchmark; print name,value,derived CSV (one per paper table)."""
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        appd_interference,
+        fig2_utilization,
+        fig7_single_job,
+        fig8_packing,
+        fig9_perf_loss,
+        fig10_case_study,
+        fig11_trace_sim,
+        roofline,
+        table3_migration,
+    )
+
+    modules = [
+        ("fig2", fig2_utilization),
+        ("fig7", fig7_single_job),
+        ("fig8+table2", fig8_packing),
+        ("fig9", fig9_perf_loss),
+        ("fig10", fig10_case_study),
+        ("fig11", fig11_trace_sim),
+        ("table3", table3_migration),
+        ("appd", appd_interference),
+        ("roofline", roofline),
+    ]
+    print("name,value,derived")
+    failures = 0
+    for label, mod in modules:
+        t0 = time.time()
+        try:
+            for name, value, derived in mod.rows():
+                print(f'{name},{value},"{derived}"')
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f'{label}/ERROR,{type(e).__name__},"{e}"', file=sys.stdout)
+        print(f'{label}/elapsed_s,{time.time() - t0:.1f},""')
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Multi-job elastic aggregation: two real JAX training jobs sharing one
+PS-mode data plane, with a live tensor migration between steps.
+
+Job A (an MLP regressor) and job B (a small LM) both train through the
+flat-PS runtime (pull -> compute -> push -> aggregate). Mid-run, job A's
+tensors are migrated to a different owner layout (balanced vs round-robin)
+WITHOUT stopping training -- losses keep decreasing across the migration,
+demonstrating the paper's zero-interruption reassignment on the data plane.
+
+Run: PYTHONPATH=src python examples/multi_job_service.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ps.elastic import migrate_flat_state, migration_bytes
+from repro.ps.runtime import (
+    build_flat_plan,
+    init_ps_state,
+    make_ps_train_step,
+    unflatten_tree,
+)
+
+rng = np.random.default_rng(0)
+
+
+# ----------------------------------------------------------- job A: MLP
+def mlp_init(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(k1, (16, 64)) / 4.0, "b1": jnp.zeros(64),
+        "w2": jax.random.normal(k2, (64, 64)) / 8.0, "b2": jnp.zeros(64),
+        "w3": jax.random.normal(k3, (64, 1)) / 8.0, "b3": jnp.zeros(1),
+    }
+
+
+def mlp_loss(params, batch):
+    h = jnp.tanh(batch["x"] @ params["w1"] + params["b1"])
+    h = jnp.tanh(h @ params["w2"] + params["b2"])
+    pred = (h @ params["w3"] + params["b3"])[:, 0]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def mlp_batch():
+    x = rng.standard_normal((64, 16)).astype(np.float32)
+    y = np.sin(x.sum(1))
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+# ------------------------------------------------------------ job B: tiny LM
+from repro.models import transformer as tf  # noqa: E402
+
+lm_cfg = tf.LMConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
+                     n_kv_heads=2, d_ff=128, vocab=256, loss_chunk=16,
+                     tie_embeddings=True)
+corpus = rng.integers(0, 256, size=(32, 32), dtype=np.int32)
+
+
+def lm_batch():
+    toks = jnp.asarray(corpus[rng.integers(0, 32, size=8)])
+    return {"tokens": toks, "labels": toks}
+
+
+def lm_loss(params, batch):
+    return tf.loss_fn(lm_cfg, params, batch)
+
+
+# ------------------------------------------------- register both with the PS
+jobs = {}
+for job_id, init, loss, batch_fn in (
+    ("mlp", lambda: mlp_init(jax.random.PRNGKey(0)), mlp_loss, mlp_batch),
+    ("lm", lambda: tf.init_params(lm_cfg, jax.random.PRNGKey(1)), lm_loss, lm_batch),
+):
+    params = init()
+    plan = build_flat_plan(params, n_shards=4, mode="round_robin")
+    state = init_ps_state(plan, params)
+    step = jax.jit(make_ps_train_step(loss, plan, params, lr=3e-3),
+                   donate_argnums=(0,))
+    jobs[job_id] = dict(params=params, plan=plan, state=state, step=step,
+                        loss=loss, batch=batch_fn)
+
+print(f"{'step':>4s} {'mlp loss':>10s} {'lm loss':>10s}")
+for i in range(60):
+    if i == 30:
+        # Tensor migration for the MLP job: round-robin -> balanced owners.
+        j = jobs["mlp"]
+        new_plan = build_flat_plan(j["params"], n_shards=4, mode="balanced")
+        moved = migration_bytes(j["plan"], new_plan)
+        j["state"] = migrate_flat_state(j["state"], j["plan"], new_plan)
+        j["step"] = jax.jit(
+            make_ps_train_step(j["loss"], new_plan, j["params"], lr=3e-3),
+            donate_argnums=(0,))
+        j["plan"] = new_plan
+        print(f"-- migrated mlp owner layout ({moved / 1e3:.1f} kB moved), "
+              f"training continues --")
+    losses = {}
+    for job_id, j in jobs.items():
+        j["state"], m = j["step"](j["state"], j["batch"]())
+        losses[job_id] = float(m["loss"])
+    if i % 10 == 0 or i == 59:
+        print(f"{i:4d} {losses['mlp']:10.4f} {losses['lm']:10.4f}")
+
+print("both jobs trained through the shared aggregation service; "
+      "the mid-run migration did not interrupt either.")

@@ -1,0 +1,39 @@
+"""Quickstart: the Parameter Service in 60 lines.
+
+1. Profile two training jobs (the paper's VGG19 + AlexNet testbed models).
+2. Register them with the shared ParameterService -- watch the packing.
+3. See the per-tensor placement an Agent would route by, and what happens
+   on job exit (elastic recycle).
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.configs.paper_workloads import make_job
+from repro.core import ParameterService
+
+svc = ParameterService(total_budget=16, n_clusters=1, loss_limit=0.1)
+
+# A VGG19 job that would need 2 dedicated parameter servers under ps-lite.
+vgg = make_job("vgg19", "vgg-0", n_servers=2, n_workers=2)
+svc.register_job(vgg)
+print(f"vgg-0 registered: {svc.n_aggregators} Aggregators "
+      f"(ps-lite would use {vgg.required_servers})")
+
+# An AlexNet job arrives; AutoPS packs it into the same Aggregators.
+alex = make_job("alexnet", "alex-0", n_servers=2, n_workers=2)
+svc.register_job(alex)
+print(f"alex-0 packed:   {svc.n_aggregators} Aggregators "
+      f"(ps-lite total would be {vgg.required_servers + alex.required_servers})")
+print(f"CPU reduction ratio: {svc.cpu_reduction():.2f}")
+print(f"predicted per-job loss: "
+      f"{ {k: round(v, 3) for k, v in svc.predicted_losses().items()} }")
+
+# The Agent mapping table (tensor -> Aggregator) for the AlexNet job.
+placement = svc.placement("alex-0")
+ids = sorted(set(placement.values()))
+print(f"alex-0 tensors spread over Aggregators: {ids}")
+
+# Job exit: Aggregators are recycled opportunistically.
+svc.job_exit("alex-0")
+print(f"alex-0 exited:   {svc.n_aggregators} Aggregators remain")
+print(f"utilizations: { {k: round(v, 2) for k, v in svc.utilizations().items()} }")

@@ -1,0 +1,14 @@
+"""Batched LM serving with a KV cache (smoke-size granite-8b).
+
+Run: PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "granite-8b",
+     "--smoke", "--batch", "4", "--prompt-len", "8", "--gen", "24",
+     "--temperature", "0.8"],
+    check=True,
+)

@@ -1,0 +1,73 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Exercises the full substrate: synthetic token pipeline, scan-over-layers
+transformer, Adam (optionally the fused Pallas aggregation kernel),
+checkpoint/restart (kill it mid-run and relaunch: it resumes), loss should
+drop markedly from random-init (~ln(vocab)) within a few hundred steps.
+
+Run: PYTHONPATH=src python examples/train_lm_e2e.py [--steps 300]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import lm_batch
+from repro.models import transformer as tf
+from repro.optim import adam
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=16)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_e2e")
+ap.add_argument("--fused-adam", action="store_true",
+                help="route updates through the Pallas agg_adam kernel")
+args = ap.parse_args()
+
+# ~100M params: 12L x d=640 x heads 10 (GQA kv=5), vocab 32k, tied.
+cfg = tf.LMConfig(
+    name="lm-100m", n_layers=12, d_model=640, n_heads=10, n_kv_heads=5,
+    d_ff=1708, vocab=32000, tie_embeddings=True, loss_chunk=64,
+)
+opt = adam(3e-4, fused=args.fused_adam)
+step = jax.jit(tf.make_train_step(cfg, opt), donate_argnums=(0,))
+
+print(f"model: {cfg.param_count / 1e6:.1f}M params")
+
+def init_state():
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    return {"params": params, "opt": opt.init(params)}
+
+mgr = CheckpointManager(args.ckpt_dir, save_every=100, keep_last=2)
+start = 0
+found, restored = mgr.restore_latest(jax.eval_shape(init_state))
+if found is not None:
+    start, state = found + 1, restored
+    print(f"resumed from checkpoint step {found}")
+else:
+    state = init_state()
+
+rng = np.random.default_rng(0)
+# A repeating synthetic corpus so the model can actually fit it (loss drops).
+corpus = rng.integers(0, cfg.vocab, size=(64, args.seq), dtype=np.int32)
+
+t0, first_loss = time.time(), None
+for i in range(start, args.steps):
+    rows = rng.integers(0, corpus.shape[0], size=args.batch)
+    toks = jnp.asarray(corpus[rows])
+    labels = jnp.concatenate([toks[:, 1:], -jnp.ones((args.batch, 1), jnp.int32)], 1)
+    state, m = step(state, {"tokens": toks, "labels": labels})
+    mgr.maybe_save(i, state)
+    if i % 25 == 0 or i == args.steps - 1:
+        loss = float(m["loss"])
+        first_loss = loss if first_loss is None else first_loss
+        tput = args.batch * args.seq * (i - start + 1) / (time.time() - t0)
+        print(f"step={i:4d} loss={loss:.4f} tok/s={tput:,.0f}")
+mgr.wait()
+print(f"loss: {first_loss:.3f} -> {float(m['loss']):.3f} "
+      f"(random-init ~= ln(vocab) = {np.log(cfg.vocab):.2f})")

@@ -1,0 +1,31 @@
+"""Regenerate the EXPERIMENTS.md roofline table from the dry-run JSONs."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline import markdown_table  # noqa: E402
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+exp = Path("EXPERIMENTS.md")
+text = exp.read_text()
+table = markdown_table("pod256")
+if MARK in text:
+    head, _, tail = text.partition(MARK)
+    # Drop any previously injected table (up to the next blank-line+"Reading").
+    tail_lines = tail.split("\n")
+    idx = 0
+    while idx < len(tail_lines) and (
+        not tail_lines[idx].strip() or tail_lines[idx].startswith("|")
+    ):
+        idx += 1
+    rest = "\n".join(tail_lines[idx:])
+    text = head + MARK + "\n\n" + table + "\n\n" + rest
+    exp.write_text(text)
+    print(f"injected {len(table.splitlines()) - 2} rows")
+else:
+    print("marker not found", file=sys.stderr)
+    sys.exit(1)

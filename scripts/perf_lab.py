@@ -1,0 +1,110 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration lab: build a cell with overrides, compile, report the
+roofline terms + top collective sources. Used by the EXPERIMENTS.md section-
+Perf hypothesis->change->measure loop.
+
+  PYTHONPATH=src python scripts/perf_lab.py --arch command-r-plus-104b \
+      --shape train_4k --microbatches 4 --tag mb4
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+from repro.launch import hlo_cost  # noqa: E402
+from repro.launch.cells import build_cell  # noqa: E402
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int)
+    ap.add_argument("--model-override", action="append", default=[],
+                    help="key=value applied to the model config (repeatable)")
+    ap.add_argument("--no-act-shard", action="store_true")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--top", type=int, default=10)
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    # Patch overrides into the arch spec's cell before building.
+    from repro.configs import registry
+
+    spec = registry._module(args.arch).spec()
+    cell_desc = spec.cell(args.shape)
+    if args.microbatches is not None:
+        cell_desc.run_overrides["n_microbatches"] = args.microbatches
+    for kv in args.model_override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        cell_desc.model_overrides[k] = v
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    n_chips = 512 if args.multi_pod else 256
+    from repro.launch import cells as cells_mod
+
+    if spec.family == "lm":
+        cell = cells_mod._lm_cell(spec, cell_desc, mesh)
+    elif spec.family == "gnn":
+        cell = cells_mod._gnn_cell(spec, cell_desc, mesh)
+    else:
+        cell = cells_mod._recsys_cell(spec, cell_desc, mesh)
+    if args.no_act_shard:
+        cell.act_shard = False
+
+    t0 = time.time()
+    with mesh:
+        compiled = cell.lower().compile()
+        hlo = compiled.as_text()
+        ma = compiled.memory_analysis()
+    cost = hlo_cost.analyze(hlo)
+    tc = cost.flops / PEAK_FLOPS
+    tm = cost.bytes / HBM_BW
+    tx = cost.total_collective / ICI_BW
+    bound = max(tc, tm, tx)
+    model_t = cell.model_flops_per_step / PEAK_FLOPS / n_chips
+    peak_gb = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 1e9
+
+    rec = {
+        "tag": args.tag, "arch": args.arch, "shape": args.shape,
+        "compile_s": round(time.time() - t0, 1),
+        "t_compute_s": tc, "t_memory_s": tm, "t_collective_s": tx,
+        "bound_s": bound, "dominant": max(
+            ("compute", tc), ("memory", tm), ("collective", tx),
+            key=lambda kv: kv[1])[0],
+        "roofline_fraction": model_t / bound if bound else 0.0,
+        "peak_gb": peak_gb,
+        "collectives_gb": {k: v / 1e9 for k, v in cost.coll_traffic.items()},
+    }
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{args.arch}__{args.shape}__{args.tag}.json").write_text(
+        json.dumps(rec, indent=1))
+
+    print(f"[{args.tag}] {args.arch} {args.shape}: "
+          f"tc={tc:.2f}s tm={tm:.2f}s tx={tx:.2f}s bound={bound:.2f}s "
+          f"dom={rec['dominant']} frac={rec['roofline_fraction']:.2%} "
+          f"peak={peak_gb:.1f}GB compile={rec['compile_s']}s")
+    print("top collective sources (weighted per-device GB):")
+    for tr, kind, shape, mult, name in hlo_cost.top_collectives(hlo, args.top):
+        print(f"  {tr / 1e9:9.2f}GB x{mult:5.0f} {kind:14s} {shape:40s} {name}")
+
+
+if __name__ == "__main__":
+    main()

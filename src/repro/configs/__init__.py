@@ -1,0 +1,10 @@
+"""Architecture + workload configs.
+
+- `paper_workloads`: the paper's four testbed models (AlexNet, VGG19,
+  AWD-LM, BERT) as profiled aggregation jobs for the control plane/simulator.
+- one module per assigned architecture (command_r_plus_104b.py, ...) exposing
+  `config()` (full published dims) and `smoke_config()` (reduced).
+- `registry`: name -> config constructors, used by --arch flags.
+"""
+
+from .registry import ARCHS, get_config, get_smoke_config  # noqa: F401

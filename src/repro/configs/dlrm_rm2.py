@@ -1,0 +1,55 @@
+"""dlrm-rm2: n_dense=13 n_sparse=26 embed_dim=64 bot=13-512-256-64
+top=512-512-256-1 interaction=dot. [arXiv:1906.00091; paper]
+
+Vocab sizes: the RM2-class model from the DLRM paper does not pin table
+sizes; we use the public Criteo-Terabyte per-field cardinalities capped at
+10M rows (documented synthetic choice) -- the skew across tables is the
+property that matters for the paper's per-tensor aggregation placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.arch import ArchSpec, ShapeCell
+from repro.models.recsys import DLRMConfig
+from .dlrm_mlperf import CRITEO_TB_VOCAB
+
+VOCAB = tuple(min(v, 10_000_000) for v in CRITEO_TB_VOCAB)
+
+
+def config() -> DLRMConfig:
+    return DLRMConfig(
+        name="dlrm-rm2", n_dense=13, n_sparse=26, embed_dim=64,
+        bot_mlp=(512, 256, 64), top_mlp=(512, 512, 256, 1),
+        vocab_sizes=VOCAB,
+    )
+
+
+def smoke_config() -> DLRMConfig:
+    return DLRMConfig(
+        name="dlrm-rm2-smoke", n_dense=13, n_sparse=4, embed_dim=8,
+        bot_mlp=(16, 8), top_mlp=(16, 1), vocab_sizes=(100, 50, 200, 1000),
+    )
+
+
+def recsys_cells():
+    return {
+        "train_batch": ShapeCell("train_batch", "train", batch=65_536),
+        "serve_p99": ShapeCell("serve_p99", "forward", batch=512),
+        "serve_bulk": ShapeCell("serve_bulk", "forward", batch=262_144),
+        "retrieval_cand": ShapeCell("retrieval_cand", "retrieval", batch=1,
+                                    extras={"n_candidates": 1_000_000}),
+    }
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="dlrm-rm2",
+        family="recsys",
+        recsys_kind="dlrm",
+        model=config(),
+        cells=recsys_cells(),
+        notes="Skewed embedding tables: the paper's best-case workload for "
+              "balanced per-tensor placement.",
+    )

@@ -1,0 +1,44 @@
+"""Architecture registry: --arch <id> -> config constructors.
+
+Each arch module exposes `config()` (exact published dims) and
+`smoke_config()` (reduced same-family config for CPU smoke tests).
+Modules are imported lazily so that merely importing repro.configs does not
+pull in JAX model code.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, List
+
+# arch id -> module name under repro.configs
+ARCHS: Dict[str, str] = {
+    "command-r-plus-104b": "command_r_plus_104b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "granite-8b": "granite_8b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "gin-tu": "gin_tu",
+    "dlrm-rm2": "dlrm_rm2",
+    "sasrec": "sasrec",
+    "dien": "dien",
+    "dlrm-mlperf": "dlrm_mlperf",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str) -> Any:
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str) -> Any:
+    return _module(arch).smoke_config()
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCHS)

@@ -1,0 +1,157 @@
+"""Aggregator scaling (paper §3.3.2).
+
+Job arrival: pack via the assignment scheme; if the predicted performance of
+the new job (or any co-located job) is worse than standalone by more than
+LossLimit, revert, allocate one more Aggregator, and re-assign the whole job
+— repeating until the loss is within bounds (the Fig. 10 case study path).
+
+Job exit: remove the job's tasks, return empty Aggregators, then opportunist-
+ically drain the least-loaded Aggregator into the others *without* new
+allocations; recycle on success and repeat on the next least-loaded one.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+from . import perf_model
+from .assignment import (
+    AssignmentConfig,
+    AggregatorAllocator,
+    assign_job,
+    assign_task,
+    remove_job,
+)
+from .types import AggTask, Aggregator, JobProfile
+
+
+def admit_job(
+    job: JobProfile,
+    aggregators: List[Aggregator],
+    jobs: Dict[str, JobProfile],
+    allocator: AggregatorAllocator,
+    config: AssignmentConfig = AssignmentConfig(),
+    max_retries: int = 16,
+) -> Tuple[int, int]:
+    """Admit a job with the feedback-revert loop.
+
+    Returns (n_new_aggregators, n_retries). `jobs` must already contain every
+    running job's profile (used for loss prediction) but NOT the new job.
+    """
+    jobs_after = dict(jobs)
+    jobs_after[job.job_id] = job
+
+    pinned_new = 0  # Aggregators force-allocated by the feedback loop
+    retries = 0
+    while True:
+        n_before = len(aggregators)
+        decisions = assign_job(job, aggregators, allocator, config)
+        new_from_packing = len(aggregators) - n_before
+
+        losses = perf_model.predict_all_losses(jobs_after, aggregators)
+        if max(losses.values(), default=0.0) < config.loss_limit or retries >= max_retries:
+            return pinned_new + new_from_packing, retries
+
+        # Revert the whole job, allocate one more dedicated Aggregator, retry
+        # (paper: "add a new Aggregator and re-assign the entire job").
+        retries += 1
+        remove_job(aggregators, job.job_id)
+        # Drop any aggregators that became empty from the failed packing.
+        aggregators[:] = [a for a in aggregators if not a.is_empty or _is_pinned(a)]
+        fresh = allocator()
+        fresh.pinned = True  # type: ignore[attr-defined]  # keep across revert
+        aggregators.append(fresh)
+        pinned_new += 1
+
+
+def _is_pinned(agg: Aggregator) -> bool:
+    return bool(getattr(agg, "pinned", False))
+
+
+def release_job(
+    job_id: str,
+    aggregators: List[Aggregator],
+    jobs: Dict[str, JobProfile],
+    config: AssignmentConfig = AssignmentConfig(),
+) -> Tuple[int, int]:
+    """Handle job exit. Returns (n_released_empty, n_recycled)."""
+    remove_job(aggregators, job_id)
+    released = [a for a in aggregators if a.is_empty]
+    aggregators[:] = [a for a in aggregators if not a.is_empty]
+    recycled = recycle_aggregators(aggregators, jobs, config)
+    return len(released), recycled
+
+
+def recycle_aggregators(
+    aggregators: List[Aggregator],
+    jobs: Dict[str, JobProfile],
+    config: AssignmentConfig = AssignmentConfig(),
+    max_rounds: int = 4,
+) -> int:
+    """Drain least-loaded Aggregators into the rest, no new allocations.
+
+    Paper §3.3.2: "Starting from the least-loaded Aggregator, Parameter
+    Service reassigns its workload to other Aggregators without new
+    allocations allowed. If it succeeds ... repeat on the next least-loaded."
+    `max_rounds` bounds the O(aggs * tasks) trial work per exit event.
+    """
+    recycled = 0
+    while len(aggregators) > 1 and recycled < max_rounds:
+        victim = min(aggregators, key=lambda a: a.busy_time())
+        survivors = [a for a in aggregators if a is not victim]
+        trial = [a.clone() for a in survivors]
+
+        ok = True
+        for task in sorted(victim.tasks.values(), key=lambda t: -t.exec_time):
+            job = jobs.get(task.job_id)
+            if job is None:
+                ok = False
+                break
+            try:
+                assign_task(task, job, trial, allocator=_refuse_allocation, config=config)
+            except _NoAllocation:
+                ok = False
+                break
+        if ok:
+            losses = perf_model.predict_all_losses(jobs, trial)
+            ok = max(losses.values(), default=0.0) < config.loss_limit
+        if ok and config.preserve_spread:
+            # Optional: keep each job's aggregation spread at its parameter-
+            # server requirement (pull-bandwidth provisioning). Off by
+            # default -- the paper's Fig.-11 savings require consolidation.
+            for job in jobs.values():
+                hosting = sum(
+                    1 for a in trial if any(k[0] == job.job_id for k in a.tasks)
+                )
+                before = sum(
+                    1 for a in aggregators
+                    if any(k[0] == job.job_id for k in a.tasks)
+                )
+                floor = min(job.required_servers, before)
+                if hosting < floor:
+                    ok = False
+                    break
+
+        if not ok:
+            return recycled
+        # Commit the trial placement.
+        aggregators[:] = trial
+        recycled += 1
+    return recycled
+
+
+def _refuse_allocation() -> Aggregator:
+    raise _NoAllocation()
+
+
+class _NoAllocation(Exception):
+    pass
+
+
+# assign_task calls allocator() when nothing fits; catch that as "failed".
+def _safe_assign(task: AggTask, job: JobProfile, aggs: List[Aggregator], config) -> bool:
+    try:
+        assign_task(task, job, aggs, _refuse_allocation, config)
+        return True
+    except _NoAllocation:
+        return False

@@ -1,0 +1,103 @@
+"""ParameterService facade: the user-visible surface of the control plane.
+
+Ties together pMaster + cluster controllers (cluster.py), the assignment
+scheme (assignment.py), scaling (scaling.py), and migration bookkeeping
+(migration.py). The data plane (repro.ps) asks this object where each
+tensor's aggregation lives; the simulator (repro.sim) drives it with job
+arrival/exit events.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .assignment import AssignmentConfig
+from .cluster import PMaster
+from .migration import TensorMigration
+from .perf_model import predict_all_losses, predict_iteration
+from .types import Aggregator, JobProfile, cpu_reduction_ratio
+
+
+@dataclass
+class ParameterService:
+    """Cluster-wide shared model-aggregation service (the paper's system)."""
+
+    total_budget: int = 1024
+    n_clusters: int = 1
+    loss_limit: float = 0.1
+    strict_paper: bool = False
+    preserve_spread: bool = False
+
+    def __post_init__(self) -> None:
+        self._config = AssignmentConfig(
+            loss_limit=self.loss_limit, strict_paper=self.strict_paper,
+            preserve_spread=self.preserve_spread,
+        )
+        self._pmaster = PMaster(
+            total_budget=self.total_budget,
+            n_clusters=self.n_clusters,
+            config=self._config,
+        )
+        self._jobs: Dict[str, JobProfile] = {}
+        self._migrations: List[TensorMigration] = []
+
+    # ------------------------------------------------------------------- API
+    def register_job(self, job: JobProfile) -> str:
+        """Admit a job (assign all its model aggregations); returns cluster id."""
+        if job.job_id in self._jobs:
+            raise ValueError(f"job {job.job_id} already registered")
+        cluster_id = self._pmaster.submit_job(job)
+        self._jobs[job.job_id] = job
+        return cluster_id
+
+    def job_exit(self, job_id: str) -> None:
+        self._jobs.pop(job_id)
+        self._pmaster.job_exit(job_id)
+
+    def placement(self, job_id: str) -> Dict[int, str]:
+        """tensor_id -> aggregator_id for a job (the Agent mapping table)."""
+        out: Dict[int, str] = {}
+        for agg in self.aggregators:
+            for (jid, tid) in agg.tasks:
+                if jid == job_id:
+                    out[tid] = agg.agg_id
+        return out
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def aggregators(self) -> List[Aggregator]:
+        return [
+            a
+            for ctrl in self._pmaster.clusters.values()
+            for a in ctrl.aggregators
+        ]
+
+    @property
+    def n_aggregators(self) -> int:
+        return len(self.aggregators)
+
+    def predicted_losses(self) -> Dict[str, float]:
+        return predict_all_losses(self._jobs, self.aggregators)
+
+    def predicted_iteration(self, job_id: str) -> float:
+        return predict_iteration(self._jobs[job_id], self.aggregators)
+
+    def cpu_reduction(self) -> float:
+        required = sum(j.required_servers for j in self._jobs.values())
+        return cpu_reduction_ratio(required, self.n_aggregators)
+
+    def utilizations(self) -> Dict[str, float]:
+        return {a.agg_id: a.utilization for a in self.aggregators}
+
+    def periodic_rebalance(self) -> None:
+        self._pmaster.periodic_rebalance()
+
+    def stats(self) -> Dict[str, float]:
+        s = self._pmaster.stats()
+        losses = self.predicted_losses()
+        s["max_loss"] = max(losses.values(), default=0.0)
+        s["mean_utilization"] = (
+            sum(self.utilizations().values()) / max(1, self.n_aggregators)
+        )
+        return s

@@ -1,0 +1,22 @@
+"""Data pipeline: synthetic generators + graph neighbor sampling."""
+
+from .synthetic import (
+    lm_batch,
+    recsys_batch,
+    dien_batch,
+    sasrec_batch,
+    random_graph,
+    molecule_batch,
+)
+from .graph_sampler import NeighborSampler, build_csr
+
+__all__ = [
+    "lm_batch",
+    "recsys_batch",
+    "dien_batch",
+    "sasrec_batch",
+    "random_graph",
+    "molecule_batch",
+    "NeighborSampler",
+    "build_csr",
+]

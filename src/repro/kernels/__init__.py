@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+agg_adam    fused W-way gradient aggregation + Adam update -- the paper's
+            model-aggregation op (PS Update): one VMEM pass per tile instead
+            of 3 + W HBM round-trips.
+flash_attn  blockwise online-softmax attention (training/prefill shapes);
+            the jnp chunked_attention in models/attention.py is its oracle.
+embed_bag   embedding-bag gather-reduce with scalar-prefetch row streaming
+            (recsys lookup hot path).
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper
+with interpret fallback on CPU), ref.py (pure-jnp oracle). All validated in
+interpret mode on CPU; TPU is the lowering target.
+"""

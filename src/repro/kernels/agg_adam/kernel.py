@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused W-way gradient aggregation + Adam update.
+
+The PS Update op. Naive XLA path reads/writes p, mu, nu and reads W grad
+buffers in separate HBM passes; this kernel makes one pass: each grid step
+streams a (BLOCK,) tile of every operand into VMEM, sums the W worker
+gradients on the VPU, applies the Adam update, and writes p/mu/nu tiles
+back -- arithmetic intensity goes from ~1/7 to ~1 fused op per byte, which
+is what makes aggregation burst-friendly on a shared Aggregator core.
+
+VMEM budget at BLOCK=16384 fp32: (W + 5) x 64 KiB tiles -- e.g. W=8 -> 832
+KiB, comfortably inside the ~16 MiB v5e VMEM with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 16384  # elements per tile; 128-aligned for VPU lanes
+
+
+def _kernel(p_ref, g_ref, mu_ref, nu_ref, bc_ref, out_p, out_mu, out_nu,
+            *, lr, b1, b2, eps, wd):
+    g = g_ref[...].astype(jnp.float32)
+    if g.ndim == 2:  # (W, BLOCK) worker pushes -> sum-aggregate
+        g = g.sum(axis=0)
+    mu = b1 * mu_ref[...] + (1.0 - b1) * g
+    nu = b2 * nu_ref[...] + (1.0 - b2) * g * g
+    mu_hat = mu * bc_ref[0]  # 1/(1-b1^t)
+    nu_hat = nu * bc_ref[1]  # 1/(1-b2^t)
+    p32 = p_ref[...].astype(jnp.float32)
+    upd = mu_hat / (jnp.sqrt(nu_hat) + eps)
+    if wd:
+        upd = upd + wd * p32
+    out_p[...] = (p32 - lr * upd).astype(out_p.dtype)
+    out_mu[...] = mu
+    out_nu[...] = nu
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lr", "b1", "b2", "eps", "wd", "block", "interpret"),
+)
+def aggregate_adam(p, grads, mu, nu, count, *, lr, b1=0.9, b2=0.999,
+                   eps=1e-8, wd=0.0, block=BLOCK, interpret=False):
+    """p, mu, nu: (N,); grads: (N,) or (W, N); count: int32 scalar (1-based).
+
+    N must be a multiple of `block` (ops.py pads)."""
+    n = p.shape[-1]
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    grid = (n // block,)
+    t = count.astype(jnp.float32)
+    bc = jnp.stack([1.0 / (1.0 - b1 ** t), 1.0 / (1.0 - b2 ** t)])
+
+    if grads.ndim == 2:
+        g_spec = pl.BlockSpec((grads.shape[0], block), lambda i: (0, i))
+    else:
+        g_spec = pl.BlockSpec((block,), lambda i: (i,))
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    bc_spec = pl.BlockSpec((2,), lambda i: (0,))
+
+    kernel = functools.partial(_kernel, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec, g_spec, vec, vec, bc_spec],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(mu.shape, jnp.float32),
+            jax.ShapeDtypeStruct(nu.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(p, grads, mu, nu, bc)

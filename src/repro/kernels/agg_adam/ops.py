@@ -1,0 +1,59 @@
+"""Jit'd wrappers for the fused aggregation-Adam kernel.
+
+`adam_update` matches repro.optim.adam's per-tensor signature so the fused
+path is a drop-in (used with fused=True). Handles arbitrary shapes by
+flattening + padding to the kernel block size; on CPU the kernel runs in
+interpret mode (TPU is the lowering target).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_flat(x, block):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, pad
+
+
+def aggregate_adam(p, grads, mu, nu, count, *, lr, b1=0.9, b2=0.999,
+                   eps=1e-8, wd=0.0, block=K.BLOCK, interpret=None):
+    """grads: (W,) + p.shape worker stack, or p.shape single gradient."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    shape = p.shape
+    pf, _ = _pad_flat(p, block)
+    muf, _ = _pad_flat(mu, block)
+    nuf, _ = _pad_flat(nu, block)
+    if grads.ndim == p.ndim + 1:
+        w = grads.shape[0]
+        gf = grads.reshape(w, -1)
+        pad = (-gf.shape[1]) % block
+        if pad:
+            gf = jnp.concatenate([gf, jnp.zeros((w, pad), gf.dtype)], axis=1)
+    else:
+        gf, _ = _pad_flat(grads, block)
+    new_p, new_mu, new_nu = K.aggregate_adam(
+        pf, gf, muf, nuf, count, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
+        block=block, interpret=interpret)
+    n = 1
+    for s in shape:
+        n *= s
+    return (new_p[:n].reshape(shape), new_mu[:n].reshape(shape),
+            new_nu[:n].reshape(shape))
+
+
+def adam_update(p, g, mu, nu, count, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                wd=0.0):
+    """Drop-in for the optim.adam per-tensor update (single gradient)."""
+    return aggregate_adam(p, g, mu, nu, count, lr=lr, b1=b1, b2=b2,
+                          eps=eps, wd=wd)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused aggregation + Adam update."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aggregate_adam_ref(p, grads, mu, nu, count, *, lr, b1=0.9, b2=0.999,
+                       eps=1e-8, wd=0.0, grad_scale=None):
+    """grads: (W, N) worker pushes (sum-aggregated) or (N,) single gradient.
+
+    Returns (new_p, new_mu, new_nu), computed in fp32, cast back to p.dtype.
+    """
+    # Worker pushes accumulate in fp32 (matching the kernel's VPU sum).
+    if grads.ndim == p.ndim + 1:
+        g = grads.astype(jnp.float32).sum(axis=0)
+    else:
+        g = grads.astype(jnp.float32)
+    if grad_scale is not None:
+        g = g * grad_scale
+    mu = b1 * mu + (1.0 - b1) * g
+    nu = b2 * nu + (1.0 - b2) * jnp.square(g)
+    t = count.astype(jnp.float32)
+    mu_hat = mu / (1.0 - b1 ** t)
+    nu_hat = nu / (1.0 - b2 ** t)
+    upd = mu_hat / (jnp.sqrt(nu_hat) + eps)
+    if wd:
+        upd = upd + wd * p.astype(jnp.float32)
+    new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+    return new_p, mu, nu

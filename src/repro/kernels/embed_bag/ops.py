@@ -1,0 +1,16 @@
+"""Jit'd wrapper for the embedding-bag kernel with interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from . import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def embedding_bag(table, indices, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return K.embedding_bag(table, indices, interpret=interpret)

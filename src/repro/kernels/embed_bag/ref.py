@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the embedding-bag gather-reduce."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, weights=None, mode="sum"):
+    """table: (V, D); indices: (B, L) -> (B, D) reduced bags."""
+    rows = jnp.take(table, indices, axis=0)  # (B, L, D)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    out = jnp.sum(rows, axis=1)
+    if mode == "mean":
+        out = out / indices.shape[1]
+    return out

@@ -1,0 +1,42 @@
+"""Jit'd wrapper: GQA-aware flash attention with interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, causal=True, scale=None, interpret=None):
+    """q: (B, S, HQ, D); k, v: (B, S, HK, D) (model layout). Expands GQA KV
+    heads, transposes to (B, H, S, D), and pads S to the tile size."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, sq, hq, d = q.shape
+    hk = k.shape[2]
+    if hk != hq:
+        rep = hq // hk
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    bq = min(K.BQ, sq)
+    bk = min(K.BK, kt.shape[2])
+    pad_q = (-sq) % bq
+    pad_k = (-kt.shape[2]) % bk
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = K.flash_attention(qt, kt, vt, causal=causal, scale=scale,
+                            bq=bq, bk=bk, interpret=interpret)
+    if pad_q:
+        out = out[:, :, :sq]
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for blockwise attention (MHA layout, fp32 softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, scale=None):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D). Plain softmax attention."""
+    d = q.shape[-1]
+    scale = d ** -0.5 if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q * scale, k).astype(jnp.float32)
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,352 @@
+"""Cell builders: (arch x shape x mesh) -> jit-able step + abstract inputs.
+
+Returns a `LoweredCell` carrying the function, ShapeDtypeStruct args,
+in/out shardings and donation info, plus roofline metadata (MODEL_FLOPS).
+This is the single place the dry-run, benchmarks, and perf loop construct
+work from, so a sharding fix here fixes every consumer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.arch import ArchSpec, ShapeCell
+from repro.configs import registry
+from repro.optim import adagrad, adam
+from repro.ps import sharding as shd
+
+
+@dataclass
+class LoweredCell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: Tuple[Any, ...]  # ShapeDtypeStructs (pytrees)
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    model_flops_per_step: float  # 6ND (dense) / 6 N_active D (MoE); fwd-only for serving
+    mesh: Optional[Mesh] = None
+    act_shard: bool = True  # activation-sharding constraints (SP/TP/EP)
+    notes: str = ""
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        from repro.ps import act_sharding
+
+        if self.mesh is not None:
+            with act_sharding.activate(self.mesh, enabled=self.act_shard):
+                return self.jitted().lower(*self.args)
+        return self.jitted().lower(*self.args)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def get_spec(arch: str) -> ArchSpec:
+    return registry._module(arch).spec()
+
+
+# ==================================================================== LM cells
+def _lm_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> LoweredCell:
+    from repro.models import transformer as tf
+
+    cfg = dataclasses.replace(spec.model, **cell.model_overrides)
+    n_params = cfg.param_count
+    n_active = cfg.active_param_count
+    dp = shd.data_axes(mesh)
+
+    abstract_params = jax.eval_shape(
+        lambda: tf.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    p_shard = shd.param_shardings(mesh, abstract_params, "lm")
+
+    if cell.kind == "train":
+        opt = adam(3e-4)
+        n_micro = cell.run_overrides.get("n_microbatches", 1)
+        accum_dt = jnp.bfloat16 if n_params > 5e10 else jnp.float32
+        abstract_opt = jax.eval_shape(
+            lambda: opt.init(tf.init_params(cfg, jax.random.PRNGKey(0)))
+        )
+        o_shard = shd.opt_state_shardings(mesh, abstract_opt, p_shard, "lm")
+        # Gradients follow the optimizer-state layout (ZeRO-1): keeps EP
+        # expert-weight grads dp-sharded even though the weights replicate.
+        step = tf.make_train_step(cfg, opt, n_microbatches=n_micro,
+                                  grad_accum_dtype=accum_dt,
+                                  grad_shardings=o_shard.mu)
+        state = {"params": abstract_params, "opt": abstract_opt}
+        s_shard = {"params": p_shard, "opt": o_shard}
+        batch = {
+            "tokens": _sds((cell.batch, cell.seq), jnp.int32),
+            "labels": _sds((cell.batch, cell.seq), jnp.int32),
+        }
+        b_shard = shd.batch_shardings(mesh, batch)
+        flops = 6.0 * n_active * cell.batch * cell.seq
+        return LoweredCell(spec.arch_id, cell.name, step, (state, batch),
+                           (s_shard, b_shard), (0,), flops, mesh=mesh)
+
+    if cell.kind == "prefill":
+        fn = tf.make_prefill(cfg)
+        toks = _sds((cell.batch, cell.seq), jnp.int32)
+        t_shard = shd.batch_shardings(mesh, toks)
+        flops = 2.0 * n_active * cell.batch * cell.seq
+        return LoweredCell(spec.arch_id, cell.name, fn, (abstract_params, toks),
+                           (p_shard, t_shard), (), flops, mesh=mesh)
+
+    if cell.kind == "decode":
+        fn = tf.make_serve_step(cfg)
+        cache = jax.eval_shape(
+            lambda: tf.init_kv_cache(cfg, cell.batch, cell.seq)
+        )
+        c_shard = shd.kv_cache_shardings(mesh, cache, cell.batch)
+        toks = _sds((cell.batch, 1), jnp.int32)
+        t_shard = shd.batch_shardings(mesh, toks)
+        flops = 2.0 * n_active * cell.batch  # one token per sequence
+        return LoweredCell(spec.arch_id, cell.name, fn,
+                           (abstract_params, cache, toks),
+                           (p_shard, c_shard, t_shard), (1,), flops, mesh=mesh)
+
+    raise ValueError(f"unknown LM cell kind {cell.kind}")
+
+
+# =================================================================== GNN cells
+def _gnn_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> LoweredCell:
+    from repro.configs import gin_tu
+    from repro.models import gnn
+
+    cfg = gin_tu.model_for_shape(cell.name)
+    sh = cell.extras
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    dp = shd.data_axes(mesh)
+    axes_all = shd.all_axes(mesh)
+
+    abstract_params = jax.eval_shape(
+        lambda: gnn.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    p_shard = shd.param_shardings(mesh, abstract_params, "gnn")
+
+    opt = adam(1e-3)
+    step = gnn.make_train_step(cfg, opt)
+    abstract_opt = jax.eval_shape(
+        lambda: opt.init(gnn.init_params(cfg, jax.random.PRNGKey(0)))
+    )
+    o_shard = shd.opt_state_shardings(mesh, abstract_opt, p_shard, "gnn")
+
+    rep = NamedSharding(mesh, P())
+    if cell.name == "molecule":
+        n_nodes = sh["batch"] * sh["n_nodes"]  # 128 x 30
+        n_edges = _round_up(sh["batch"] * sh["n_edges"], n_dev)
+        batch = {
+            "feats": _sds((n_nodes, sh["d_feat"]), jnp.float32),
+            "edge_src": _sds((n_edges,), jnp.int32),
+            "edge_dst": _sds((n_edges,), jnp.int32),
+            "edge_mask": _sds((n_edges,), jnp.bool_),
+            "graph_ids": _sds((n_nodes,), jnp.int32),
+            "labels": _sds((sh["batch"],), jnp.int32),
+        }
+        b_shard = {
+            "feats": NamedSharding(mesh, P(dp)),
+            "edge_src": NamedSharding(mesh, P(axes_all)),
+            "edge_dst": NamedSharding(mesh, P(axes_all)),
+            "edge_mask": NamedSharding(mesh, P(axes_all)),
+            "graph_ids": NamedSharding(mesh, P(dp)),
+            "labels": NamedSharding(mesh, P(dp)),
+        }
+    else:
+        if cell.name == "minibatch_lg":
+            from repro.data.graph_sampler import NeighborSampler
+
+            # fanout-(15,10) padded block sizes around 1024 seeds
+            n_nodes = 1024 * (1 + 15 + 150)  # 169,984
+            n_edges = 1024 * (15 + 150)  # 168,960
+        else:
+            n_nodes = _round_up(sh["n_nodes"], n_dev)
+            n_edges = _round_up(sh["n_edges"], n_dev)
+        feats_shard = (
+            NamedSharding(mesh, P(axes_all))
+            if n_nodes % n_dev == 0 and n_nodes >= (1 << 16)
+            else rep
+        )
+        batch = {
+            "feats": _sds((n_nodes, sh["d_feat"]), jnp.float32),
+            "edge_src": _sds((n_edges,), jnp.int32),
+            "edge_dst": _sds((n_edges,), jnp.int32),
+            "edge_mask": _sds((n_edges,), jnp.bool_),
+            "labels": _sds((n_nodes,), jnp.int32),
+            "label_mask": _sds((n_nodes,), jnp.bool_),
+        }
+        b_shard = {
+            "feats": feats_shard,
+            "edge_src": NamedSharding(mesh, P(axes_all)),
+            "edge_dst": NamedSharding(mesh, P(axes_all)),
+            "edge_mask": NamedSharding(mesh, P(axes_all)),
+            "labels": feats_shard if feats_shard is not rep else rep,
+            "label_mask": feats_shard if feats_shard is not rep else rep,
+        }
+        b_shard["labels"] = NamedSharding(mesh, P(axes_all)) if n_nodes % n_dev == 0 else rep
+        b_shard["label_mask"] = b_shard["labels"]
+
+    state = {"params": abstract_params, "opt": abstract_opt}
+    s_shard = {"params": p_shard, "opt": o_shard}
+    # GNN "model flops": 2 x (edges x d + nodes x d x d_hidden) x layers x 3 (fwd+bwd)
+    d = cfg.d_hidden
+    flops = 3.0 * 2.0 * cfg.n_layers * (
+        batch["edge_src"].shape[0] * d + batch["feats"].shape[0] * (cfg.d_feat if cfg.n_layers else d) * d
+    )
+    return LoweredCell(spec.arch_id, cell.name, step, (state, batch),
+                       (s_shard, b_shard), (0,), flops, mesh=mesh)
+
+
+# ================================================================ RecSys cells
+def _recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> LoweredCell:
+    from repro.models import recsys
+
+    cfg = spec.model
+    dp = shd.data_axes(mesh)
+    rep = NamedSharding(mesh, P())
+    kind = spec.recsys_kind
+
+    if kind == "dlrm":
+        init = functools.partial(recsys.dlrm_init, cfg)
+        loss = lambda p, b: recsys.dlrm_loss(cfg, p, b)
+        opt = adagrad(0.01)
+        dense_flops = 2 * sum(
+            a * b for a, b in zip((cfg.n_dense,) + cfg.bot_mlp[:-1], cfg.bot_mlp)
+        ) + 2 * sum(
+            a * b for a, b in zip(
+                (cfg.bot_mlp[-1] + cfg.n_pairs,) + cfg.top_mlp[:-1], cfg.top_mlp)
+        )
+
+        def batch_of(b):
+            return {
+                "dense": _sds((b, cfg.n_dense), jnp.float32),
+                "sparse": _sds((b, cfg.n_sparse), jnp.int32),
+                "labels": _sds((b,), jnp.float32),
+            }
+
+        fwd = lambda p, b: recsys.dlrm_forward(cfg, p, b["dense"], b["sparse"])
+    elif kind == "sasrec":
+        init = functools.partial(recsys.sasrec_init, cfg)
+        loss = lambda p, b: recsys.sasrec_loss(cfg, p, b)
+        opt = adam(1e-3)
+        dense_flops = 2 * cfg.seq_len * (
+            cfg.n_blocks * (4 * cfg.embed_dim ** 2 + 2 * cfg.embed_dim ** 2)
+            + cfg.seq_len * cfg.embed_dim * cfg.n_blocks
+        )
+
+        def batch_of(b):
+            return {
+                "seq": _sds((b, cfg.seq_len), jnp.int32),
+                "pos": _sds((b, cfg.seq_len), jnp.int32),
+                "neg": _sds((b, cfg.seq_len), jnp.int32),
+            }
+
+        fwd = lambda p, b: recsys.sasrec_states(cfg, p, b["seq"])[:, -1]
+    else:  # dien
+        init = functools.partial(recsys.dien_init, cfg)
+        loss = lambda p, b: recsys.dien_loss(cfg, p, b)
+        opt = adam(1e-3)
+        dense_flops = 2 * cfg.seq_len * (
+            6 * (cfg.d_in + cfg.gru_dim) * cfg.gru_dim  # GRU + AUGRU
+            + (cfg.gru_dim + cfg.d_in) * 80
+        )
+
+        def batch_of(b):
+            return {
+                "hist_items": _sds((b, cfg.seq_len), jnp.int32),
+                "hist_cats": _sds((b, cfg.seq_len), jnp.int32),
+                "target_item": _sds((b,), jnp.int32),
+                "target_cat": _sds((b,), jnp.int32),
+                "labels": _sds((b,), jnp.float32),
+            }
+
+        fwd = lambda p, b: recsys.dien_forward(cfg, p, b)
+
+    abstract_params = jax.eval_shape(lambda: init(jax.random.PRNGKey(0)))
+    p_shard = shd.param_shardings(mesh, abstract_params, "recsys")
+
+    if cell.kind == "train":
+        step = recsys.make_train_step(loss, opt)
+        abstract_opt = jax.eval_shape(lambda: opt.init(init(jax.random.PRNGKey(0))))
+        o_shard = shd.opt_state_shardings(mesh, abstract_opt, p_shard, "recsys")
+        batch = batch_of(cell.batch)
+        b_shard = shd.batch_shardings(mesh, batch)
+        state = {"params": abstract_params, "opt": abstract_opt}
+        s_shard = {"params": p_shard, "opt": o_shard}
+        flops = 3.0 * cell.batch * dense_flops
+        return LoweredCell(spec.arch_id, cell.name, step, (state, batch),
+                           (s_shard, b_shard), (0,), flops, mesh=mesh)
+
+    if cell.kind == "forward":
+        batch = batch_of(cell.batch)
+        b_shard = shd.batch_shardings(mesh, batch)
+        flops = float(cell.batch) * dense_flops
+        return LoweredCell(spec.arch_id, cell.name, fwd,
+                           (abstract_params, batch), (p_shard, b_shard), (),
+                           flops, mesh=mesh)
+
+    if cell.kind == "retrieval":
+        n_cand = cell.extras["n_candidates"]
+        cand_shard = NamedSharding(mesh, P(dp))
+        if kind == "sasrec":
+            # Retrieval encodes ONE history then dots against N candidates.
+            dense_flops = 2 * cfg.embed_dim
+        if kind == "dlrm":
+            fn = lambda p, d1, us, cand: recsys.dlrm_retrieval(cfg, p, d1, us, cand)
+            args = (abstract_params,
+                    _sds((1, cfg.n_dense), jnp.float32),
+                    _sds((1, cfg.n_sparse - 1), jnp.int32),
+                    _sds((n_cand,), jnp.int32))
+            ins = (p_shard, rep, rep, cand_shard)
+        elif kind == "sasrec":
+            fn = lambda p, seq, cand: recsys.sasrec_retrieval(cfg, p, seq, cand)
+            args = (abstract_params, _sds((1, cfg.seq_len), jnp.int32),
+                    _sds((n_cand,), jnp.int32))
+            ins = (p_shard, rep, cand_shard)
+        else:
+            fn = lambda p, hi, hc, ci, cc: recsys.dien_retrieval(cfg, p, hi, hc, ci, cc)
+            args = (abstract_params,
+                    _sds((cfg.seq_len,), jnp.int32),
+                    _sds((cfg.seq_len,), jnp.int32),
+                    _sds((n_cand,), jnp.int32),
+                    _sds((n_cand,), jnp.int32))
+            ins = (p_shard, rep, rep, cand_shard, cand_shard)
+        flops = float(n_cand) * dense_flops
+        return LoweredCell(spec.arch_id, cell.name, fn, args, ins, (), flops, mesh=mesh)
+
+    raise ValueError(f"unknown recsys cell kind {cell.kind}")
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh) -> LoweredCell:
+    spec = get_spec(arch)
+    cell = spec.cell(shape)
+    if spec.family == "lm":
+        return _lm_cell(spec, cell, mesh)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, cell, mesh)
+    return _recsys_cell(spec, cell, mesh)
+
+
+def all_cells():
+    for arch in sorted(registry.ARCHS):
+        spec = get_spec(arch)
+        for shape in spec.cells:
+            yield arch, shape

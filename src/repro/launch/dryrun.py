@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 placeholder host devices to build the
+production meshes (16x16 single pod, 2x16x16 multi-pod). Smoke tests and
+benchmarks never import this module, so they see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results]
+
+Per cell, writes results/<mesh>/<arch>__<shape>.json with:
+  memory_analysis (per-device bytes), cost_analysis flops/bytes (per-device),
+  collective traffic parsed from the partitioned HLO, MODEL_FLOPS, and the
+  three roofline terms under TPU v5e constants.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.launch import hlo_cost, hlo_stats
+from repro.launch.mesh import make_production_mesh
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
+             overrides=None) -> dict:
+    from repro.launch.cells import build_cell
+
+    mesh_name = "pod512" if multi_pod else "pod256"
+    out_path = out_dir / mesh_name / f"{arch}__{shape}.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "chips": n_chips,
+           "ok": False}
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape, mesh)
+        if overrides:
+            for k, v in overrides.items():
+                setattr(cell, k, v)
+        with mesh:
+            lowered = cell.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+            # Trip-count-weighted cost walk (XLA's cost_analysis counts scan
+            # bodies once; ours multiplies by known_trip_count).
+            cost = hlo_cost.analyze(hlo)
+
+        flops_dev = float(cost.flops)
+        bytes_dev = float(cost.bytes)
+        coll_dev = float(cost.total_collective)
+
+        # Roofline terms (seconds; per-device quantities / per-chip rates)
+        t_compute = flops_dev / PEAK_FLOPS
+        t_memory = bytes_dev / HBM_BW
+        t_coll = coll_dev / ICI_BW
+        dominant = max(
+            ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+            key=lambda kv: kv[1],
+        )[0]
+        model_flops = cell.model_flops_per_step
+        hlo_flops_global = flops_dev * n_chips
+
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_estimate_bytes": ma.argument_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+            "per_device_flops": flops_dev,
+            "per_device_bytes": bytes_dev,
+            "per_device_collective_bytes": coll_dev,
+            "collectives": {
+                "counts": cost.coll_counts,
+                "raw_bytes": cost.coll_raw,
+                "traffic_bytes": cost.coll_traffic,
+            },
+            "xla_cost_analysis": {
+                "flops_unweighted": float(ca.get("flops", 0.0)),
+                "bytes_unweighted": float(ca.get("bytes accessed", 0.0)),
+            },
+            "roofline": {
+                "t_compute_s": t_compute,
+                "t_memory_s": t_memory,
+                "t_collective_s": t_coll,
+                "dominant": dominant,
+                "bound_s": max(t_compute, t_memory, t_coll),
+            },
+            "model_flops_per_step": model_flops,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_flops_ratio": (model_flops / hlo_flops_global
+                                   if hlo_flops_global else 0.0),
+            "roofline_fraction": (
+                (model_flops / PEAK_FLOPS / n_chips)
+                / max(t_compute, t_memory, t_coll)
+                if max(t_compute, t_memory, t_coll) > 0 else 0.0
+            ),
+        })
+    except Exception as e:  # noqa: BLE001 -- record the failure, don't die
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        rec["elapsed_s"] = round(time.time() - t0, 2)
+
+    out_path.write_text(json.dumps(rec, indent=2))
+    status = "OK " if rec["ok"] else "FAIL"
+    frac = rec.get("roofline_fraction", 0.0)
+    print(f"[{status}] {mesh_name} {arch:24s} {shape:14s} "
+          f"compile={rec.get('compile_s', 0):7.1f}s "
+          f"dominant={rec.get('roofline', {}).get('dominant', '-'):10s} "
+          f"roofline={frac:6.1%}" if rec["ok"] else
+          f"[{status}] {mesh_name} {arch} {shape}: {rec.get('error', '')[:200]}",
+          flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    if args.all:
+        from repro.launch.cells import all_cells
+
+        todo = list(all_cells())
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        todo = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for multi_pod in meshes:
+        mesh_name = "pod512" if multi_pod else "pod256"
+        for arch, shape in todo:
+            out_path = out_dir / mesh_name / f"{arch}__{shape}.json"
+            if args.skip_existing and out_path.exists():
+                rec = json.loads(out_path.read_text())
+                if rec.get("ok"):
+                    continue
+            rec = run_cell(arch, shape, multi_pod, out_dir)
+            n_fail += 0 if rec["ok"] else 1
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,415 @@
+"""Trip-count-weighted cost model over compiled (post-SPMD) HLO text.
+
+XLA's cost_analysis() counts while-loop bodies ONCE (scan bodies are visited
+a single time), which under-counts flops/bytes/collectives by the trip count
+-- fatal for roofline math on scan-over-layers models. This walker parses
+the HLO text, computes per-computation costs bottom-up, and multiplies while
+bodies by the `known_trip_count` XLA records in backend_config.
+
+Costs per op:
+  dot            flops = 2 * numel(result) * prod(lhs contracting dims)
+  fusion         bytes = result + operands; flops of the fused computation
+  collectives    result bytes x ring-algorithm multipliers (group size G)
+  while          trips x (body + cond) + own operands once
+  other ops      bytes = result + operands (GTE/tuple/param/constant free)
+
+Shapes are per-partition in partitioned HLO, so totals are per-device.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0, "s2": 1, "u2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e3m4": 1, "f4e2m1fn": 1, "f8e8m0fnu": 1,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([\d,]*)\](?:\{[^}]*\})?")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {
+    "get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_COLLECTIVE_KINDS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "reduce-scatter-start", "all-to-all-start",
+    "ragged-all-to-all",
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of a shape string; tuple shapes sum their elements."""
+    total = 0
+    for m in _SHAPE_TOKEN.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        bpe = _DTYPE_BYTES.get(dtype)
+        if bpe is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * bpe
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_TOKEN.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_traffic: Dict[str, float] = field(default_factory=dict)
+    coll_raw: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for d_self, d_other in (
+            (self.coll_traffic, other.coll_traffic),
+            (self.coll_raw, other.coll_raw),
+            (self.coll_counts, other.coll_counts),
+        ):
+            for k, v in d_other.items():
+                d_self[k] = d_self.get(k, 0.0) + mult * v
+
+    @property
+    def total_collective(self) -> float:
+        return sum(self.coll_traffic.values())
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_traffic_bytes": self.coll_traffic,
+            "collective_raw_bytes": self.coll_raw,
+            "collective_counts": self.coll_counts,
+            "total_collective_bytes": self.total_collective,
+        }
+
+
+@dataclass
+class _Op:
+    name: str
+    shape: str
+    kind: str
+    rest: str  # remainder of the line (operands + attrs)
+
+
+def _collective_traffic(kind: str, nbytes: float, g: int) -> float:
+    kind = kind.replace("-start", "")
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * nbytes
+    if kind == "all-gather":
+        return (g - 1) / g * nbytes
+    if kind == "reduce-scatter":
+        return float(g - 1) * nbytes
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return (g - 1) / g * nbytes
+    if kind == "collective-permute":
+        return float(nbytes)
+    return float(nbytes)
+
+
+def _group_size(rest: str) -> int:
+    m = _IOTA_GROUPS_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _EXPLICIT_GROUPS_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[_Op]] = {}
+        self.entry: Optional[str] = None
+        self._memo: Dict[str, Cost] = {}
+        self._parse(hlo_text)
+        # computations called from fusion ops: bytes counted at the call site
+        self.fused: set = set()
+        for ops in self.comps.values():
+            for op in ops:
+                if op.kind == "fusion":
+                    m = _CALLS_RE.search(op.rest)
+                    if m:
+                        self.fused.add(m.group(1))
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str) -> None:
+        current: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and line.endswith("{"):
+                m = _COMP_HEADER.match(line.strip())
+                if m:
+                    current = m.group(1)
+                    self.comps[current] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = current
+                    continue
+            if line.strip() == "}":
+                current = None
+                continue
+            if current is None:
+                continue
+            m = _OP_LINE.match(line)
+            if m:
+                name, shape, kind, rest = m.groups()
+                self.comps[current].append(_Op(name, shape, kind, rest))
+
+    # ---------------------------------------------------------- evaluation
+    def comp_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()  # cycle guard
+        ops = self.comps.get(comp, [])
+        shapes = {op.name: op.shape for op in ops}
+        cost = Cost()
+        for op in ops:
+            kind = op.kind
+            if kind.endswith("-done"):
+                continue
+            if kind == "while":
+                trips = 1.0
+                m = _TRIP_RE.search(op.rest)
+                if m:
+                    trips = float(m.group(1))
+                body = _BODY_RE.search(op.rest)
+                cond = _COND_RE.search(op.rest)
+                if body:
+                    cost.add(self.comp_cost(body.group(1)), trips)
+                if cond:
+                    cost.add(self.comp_cost(cond.group(1)), trips)
+                cost.bytes += _shape_bytes(op.shape)  # carry moves once
+                continue
+            if kind == "conditional":
+                m = _BRANCHES_RE.search(op.rest)
+                if m:
+                    branches = _OPERAND_RE.findall(m.group(1))
+                    if branches:
+                        worst = max(
+                            (self.comp_cost(b) for b in branches),
+                            key=lambda c: c.flops + c.bytes,
+                        )
+                        cost.add(worst)
+                continue
+            if kind in ("call", "async-start"):
+                m = _CALLS_RE.search(op.rest) or _BODY_RE.search(op.rest)
+                if m:
+                    cost.add(self.comp_cost(m.group(1)))
+                continue
+            if kind in _COLLECTIVE_KINDS:
+                nbytes = _shape_bytes(op.shape)
+                g = _group_size(op.rest)
+                base = kind.replace("-start", "")
+                traffic = _collective_traffic(kind, nbytes, g)
+                cost.coll_traffic[base] = cost.coll_traffic.get(base, 0.0) + traffic
+                cost.coll_raw[base] = cost.coll_raw.get(base, 0.0) + nbytes
+                cost.coll_counts[base] = cost.coll_counts.get(base, 0.0) + 1
+                cost.bytes += nbytes
+                continue
+            if kind == "fusion":
+                m = _CALLS_RE.search(op.rest)
+                inner_name = m.group(1) if m else None
+                if inner_name:
+                    inner = self.comp_cost(inner_name)
+                    cost.flops += inner.flops  # dots inside fusions
+                    cost.add(
+                        Cost(coll_traffic=dict(inner.coll_traffic),
+                             coll_raw=dict(inner.coll_raw),
+                             coll_counts=dict(inner.coll_counts))
+                    )
+                cost.bytes += _shape_bytes(op.shape)
+                sliced = self._sliced_params(inner_name) if inner_name else {}
+                for i, operand in enumerate(self._operand_names(op)):
+                    if i in sliced:
+                        cost.bytes += sliced[i]  # indexed access: slice size
+                    else:
+                        cost.bytes += _shape_bytes(shapes.get(operand, ""))
+                continue
+            if kind == "dot":
+                res = _shape_dims(op.shape)
+                numel = 1
+                for d in res:
+                    numel *= d
+                lhs_name = None
+                names = self._operand_names(op)
+                if names:
+                    lhs_name = names[0]
+                contract = 1
+                mC = _LHS_CONTRACT_RE.search(op.rest)
+                if mC and lhs_name and lhs_name in shapes:
+                    lhs_dims = _shape_dims(shapes[lhs_name])
+                    for ci in mC.group(1).split(","):
+                        if ci:
+                            idx = int(ci)
+                            if idx < len(lhs_dims):
+                                contract *= lhs_dims[idx]
+                cost.flops += 2.0 * numel * contract
+                cost.bytes += _shape_bytes(op.shape)
+                for operand in names:
+                    cost.bytes += _shape_bytes(shapes.get(operand, ""))
+                continue
+            if kind in _FREE_OPS:
+                continue
+            if kind == "dynamic-slice":
+                # XLA reads only the slice, not the operand (and scan xs
+                # indexing would otherwise count the whole stacked tensor
+                # per trip -- measured 100x overcount on decode caches).
+                cost.bytes += 2 * _shape_bytes(op.shape)
+                continue
+            if kind == "dynamic-update-slice":
+                # In-place update: traffic ~ the updated region (operand 1).
+                names = self._operand_names(op)
+                upd = shapes.get(names[1], "") if len(names) > 1 else ""
+                cost.bytes += 2 * _shape_bytes(upd)
+                continue
+            if kind == "gather":
+                cost.bytes += 2 * _shape_bytes(op.shape)  # rows read+written
+                continue
+            if kind == "scatter":
+                names = self._operand_names(op)
+                upd = shapes.get(names[-1], "") if names else ""
+                cost.bytes += 2 * _shape_bytes(upd) + _shape_bytes(op.shape)
+                continue
+            # generic op: result + operand bytes
+            cost.bytes += _shape_bytes(op.shape)
+            for operand in self._operand_names(op):
+                cost.bytes += _shape_bytes(shapes.get(operand, ""))
+
+        self._memo[comp] = cost
+        return cost
+
+    def _sliced_params(self, comp: str) -> Dict[int, float]:
+        """Parameters of a fused computation consumed by indexed ops
+        (dynamic-slice / gather / dynamic-update-slice): charge them at the
+        touched-region size instead of full operand size (XLA reads only
+        the slice; counting the stacked operand per scan trip overcounts
+        ~trip_count x)."""
+        if comp in getattr(self, "_sliced_memo", {}):
+            return self._sliced_memo[comp]
+        if not hasattr(self, "_sliced_memo"):
+            self._sliced_memo: Dict[str, Dict[int, float]] = {}
+        ops = self.comps.get(comp, [])
+        param_index = {}
+        for op in ops:
+            if op.kind == "parameter":
+                mnum = re.match(r"\s*(\d+)", op.rest)
+                if mnum:
+                    param_index[op.name] = int(mnum.group(1))
+        out: Dict[int, float] = {}
+        for op in ops:
+            names = self._operand_names(op)
+            if op.kind in ("dynamic-slice", "gather") and names:
+                if names[0] in param_index:
+                    out[param_index[names[0]]] = 2.0 * _shape_bytes(op.shape)
+            elif op.kind == "dynamic-update-slice" and names:
+                shapes_local = {o.name: o.shape for o in ops}
+                upd = shapes_local.get(names[1], "") if len(names) > 1 else ""
+                if names[0] in param_index:
+                    out[param_index[names[0]]] = 2.0 * _shape_bytes(upd)
+        self._sliced_memo[comp] = out
+        return out
+
+    def _operand_names(self, op: _Op) -> List[str]:
+        # operands live before the first "), " attr boundary
+        depth = 0
+        end = len(op.rest)
+        for i, ch in enumerate(op.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        return _OPERAND_RE.findall(op.rest[:end])
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).total()
+
+
+def top_collectives(hlo_text: str, n: int = 12):
+    """Attribute collective traffic to op sources: returns the top-n
+    (weighted_bytes, kind, per_device_shape, trip_multiplier, op_name)."""
+    m = HloCostModel(hlo_text)
+    mult: Dict[str, float] = {m.entry: 1.0}
+    order = [m.entry]
+    seen = {m.entry}
+    items = []
+    opname_re = re.compile(r'op_name="([^"]*)"')
+    while order:
+        comp = order.pop(0)
+        cmult = mult.get(comp, 0.0)
+        for op in m.comps.get(comp, []):
+            rest = op.rest
+            if op.kind == "while":
+                trips = 1.0
+                mm = _TRIP_RE.search(rest)
+                if mm:
+                    trips = float(mm.group(1))
+                for r in (_BODY_RE.search(rest), _COND_RE.search(rest)):
+                    if r:
+                        c2 = r.group(1)
+                        mult[c2] = mult.get(c2, 0.0) + cmult * trips
+                        if c2 not in seen:
+                            seen.add(c2)
+                            order.append(c2)
+            elif op.kind == "fusion":
+                mm = _CALLS_RE.search(rest)
+                if mm:
+                    c2 = mm.group(1)
+                    mult[c2] = mult.get(c2, 0.0) + cmult
+                    if c2 not in seen:
+                        seen.add(c2)
+                        order.append(c2)
+            elif op.kind in _COLLECTIVE_KINDS and not op.kind.endswith("-done"):
+                nb = _shape_bytes(op.shape)
+                g = _group_size(rest)
+                tr = _collective_traffic(op.kind, nb, g)
+                meta = opname_re.search(rest)
+                items.append((tr * cmult, op.kind, op.shape[:48], cmult,
+                              meta.group(1)[:120] if meta else ""))
+    items.sort(reverse=True)
+    return items[:n]

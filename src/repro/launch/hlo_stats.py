@@ -1,0 +1,135 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+cost_analysis() has no collective numbers, so the roofline's collective term
+comes from here: for every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute op we take the per-partition result shape
+(post-partitioning HLO shapes are per-device) and apply the standard ring-
+algorithm byte multipliers:
+
+  all-reduce       2 (G-1)/G x bytes     (reduce-scatter + all-gather)
+  all-gather       (G-1)/G x out_bytes   (each device receives G-1 shards)
+  reduce-scatter   (G-1) x out_bytes     (sends G-1 output-sized shards)
+  all-to-all       (G-1)/G x bytes
+  collective-permute  1 x bytes
+
+G = replica group size, parsed from either explicit `{{0,1,...}}` lists or
+iota `[n_groups,group_size]<=[...]` form.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.group(1), m.group(2)
+    if dtype == "tuple" or dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the op's result: handles tuple results `(f32[..], f32[..])`."""
+    lhs = line.split("=", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1].strip()
+    if rhs.startswith("("):
+        end = rhs.index(")")
+        return sum(_shape_bytes(s.strip()) for s in rhs[1:end].split(","))
+    return _shape_bytes(rhs)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        # [n_groups, group_size] <= [...]
+        return int(m.group(2))
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    raw_bytes: Dict[str, int] = field(default_factory=dict)  # sum of result sizes
+    traffic_bytes: Dict[str, float] = field(default_factory=dict)  # algo-adjusted
+    max_group: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_traffic(self) -> float:
+        return sum(self.traffic_bytes.values())
+
+    def to_dict(self) -> Dict:
+        return {
+            "counts": self.counts,
+            "raw_bytes": self.raw_bytes,
+            "traffic_bytes": self.traffic_bytes,
+            "max_group": self.max_group,
+            "total_traffic": self.total_traffic,
+        }
+
+
+def _traffic(kind: str, nbytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * nbytes
+    if kind == "all-gather":
+        return (g - 1) / g * nbytes
+    if kind == "reduce-scatter":
+        return float(g - 1) * nbytes  # result is the scattered shard
+    if kind == "all-to-all":
+        return (g - 1) / g * nbytes
+    if kind == "collective-permute":
+        return float(nbytes)
+    return float(nbytes)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        for kind in _COLLECTIVES:
+            token = f" {kind}("
+            alt = f" {kind}-start("
+            alt_done = f" {kind}-done("
+            if token in s or alt in s:
+                if alt_done in s:
+                    continue
+                nbytes = _result_bytes(s)
+                g = _group_size(s)
+                stats.counts[kind] = stats.counts.get(kind, 0) + 1
+                stats.raw_bytes[kind] = stats.raw_bytes.get(kind, 0) + nbytes
+                stats.traffic_bytes[kind] = stats.traffic_bytes.get(kind, 0.0) + _traffic(kind, nbytes, g)
+                stats.max_group[kind] = max(stats.max_group.get(kind, 0), g)
+                break
+    return stats

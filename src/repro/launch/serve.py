@@ -1,0 +1,73 @@
+"""Serving driver: --arch <LM id>, batched decode with a KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    spec = registry._module(args.arch).spec()
+    if spec.family != "lm":
+        ap.error(f"{args.arch} is not an LM; serve supports decode archs")
+    from repro.models import transformer as tf
+
+    cfg = registry.get_smoke_config(args.arch) if args.smoke else spec.model
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    serve = jax.jit(tf.make_serve_step(cfg), donate_argnums=(1,))
+
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.gen
+    cache = tf.init_kv_cache(cfg, args.batch, max_len)
+    prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len), dtype=np.int32)
+    )
+
+    # Prefill via repeated decode (correct; the prefill_32k cell lowers the
+    # batched prefill path used on real hardware).
+    for i in range(args.prompt_len):
+        logits, cache = serve(params, cache, prompt[:, i : i + 1])
+
+    key = jax.random.PRNGKey(1)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = serve(params, cache, tok)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / args.temperature)[:, None]
+            tok = tok.astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    toks = args.batch * (args.gen - 1)
+    print(f"[serve] generated {toks} tokens in {dt:.2f}s "
+          f"({toks / max(dt, 1e-9):.1f} tok/s batch={args.batch})")
+    ids = jnp.concatenate(out, axis=1)
+    print("[serve] first sequence token ids:", np.asarray(ids[0])[:16], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model definitions (pure JAX, no flax).
+
+transformer.py  decoder-only LMs: GQA / QKV-bias / MLA attention, dense or
+                MoE FFN, lax.scan over layers, KV-cache prefill/decode.
+gnn.py          GIN message passing via segment_sum.
+recsys.py       DLRM (dot interaction), SASRec, DIEN (AUGRU), EmbeddingBag.
+attention.py    full / chunked online-softmax / decode attention.
+layers.py       norms, MLPs, RoPE, initializers.
+"""

@@ -1,0 +1,125 @@
+"""Attention variants.
+
+- `full_attention`: einsum GQA attention (training shapes; S x S scores).
+- `chunked_attention`: online-softmax over KV chunks via lax.scan -- never
+  materializes S x S; used for 32k prefill and as the jnp reference for the
+  Pallas flash kernel.
+- `decode_attention`: one new query token against a (possibly sequence-
+  sharded) KV cache. Written as plain reductions so GSPMD partitions the
+  softmax across cache shards (flash-decoding semantics fall out of the
+  partitioner: partial max/sum get combined with collectives).
+
+All support GQA: q heads HQ, kv heads HK, HQ % HK == 0.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k, n_rep: int):
+    """(B,S,HK,D) -> (B,S,HK*n_rep,D) by head repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    b, s, hk, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hk, n_rep, d)).reshape(
+        b, s, hk * n_rep, d
+    )
+
+
+def full_attention(q, k, v, causal: bool = True, scale: Optional[float] = None):
+    """q: (B,S,HQ,D); k,v: (B,S,HK,D). Returns (B,S,HQ,D)."""
+    b, sq, hq, d = q.shape
+    hk = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    g = hq // hk
+    qg = q.reshape(b, sq, hk, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg * scale, k).astype(jnp.float32)
+    if causal:
+        sk = k.shape[1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, v.shape[-1])
+
+
+def chunked_attention(
+    q, k, v, causal: bool = True, chunk_k: int = 1024, scale: Optional[float] = None
+):
+    """Online-softmax attention, scanning KV chunks. Memory O(S * chunk).
+
+    Under activation sharding (TP on the head dim), GQA KV heads are expanded
+    to the full query-head count so every intermediate carries the tp-sharded
+    head dim (hk alone is usually not divisible by the model axis)."""
+    from repro.ps import act_sharding
+
+    b, sq, hq, d = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    if act_sharding.enabled() and hk != hq:
+        k = _expand_kv(k, hq // hk)
+        v = _expand_kv(v, hq // hk)
+        hk = hq
+    g = hq // hk
+    n_chunks = max(1, sk // chunk_k)
+    chunk_k = sk // n_chunks
+    qg = (q * scale).reshape(b, sq, hk, g, d)
+    kc = k.reshape(b, n_chunks, chunk_k, hk, d).swapaxes(0, 1)  # (n,B,c,hk,d)
+    vc = v.reshape(b, n_chunks, chunk_k, hk, v.shape[-1]).swapaxes(0, 1)
+    q_pos = jnp.arange(sq) + (sk - sq)  # aligned to the END of the kv sequence
+
+    def body(carry, xs):
+        acc, m, l = carry  # acc:(B,S,hk,g,d) fp32; m,l:(B,hk,g,S)
+        k_i, v_i, base = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_i).astype(jnp.float32)
+        if causal:
+            kv_pos = base + jnp.arange(chunk_k)
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_i = jnp.max(s, axis=-1)  # (B,hk,g,S)
+        m_new = jnp.maximum(m, m_i)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bqhgd", p.astype(v_i.dtype), v_i
+        ).astype(jnp.float32)
+        return (acc, m_new, l_new), None
+
+    dv = v.shape[-1]
+    acc0 = jnp.zeros((b, sq, hk, g, dv), jnp.float32)
+    m0 = jnp.full((b, hk, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, sq), jnp.float32)
+    bases = jnp.arange(n_chunks) * chunk_k
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, bases))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len=None, scale: Optional[float] = None):
+    """q: (B,1,HQ,D); caches: (B,Smax,HK,D); cache_len: scalar or (B,) valid
+    lengths (positions >= cache_len are masked). Softmax reductions are plain
+    jnp ops so a sequence-sharded cache partitions into partial-softmax +
+    collective combine under GSPMD."""
+    b, _, hq, d = q.shape
+    smax, hk = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    g = hq // hk
+    qg = (q * scale).reshape(b, hk, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32)
+    if cache_len is not None:
+        pos = jnp.arange(smax)
+        valid = pos[None] < jnp.broadcast_to(jnp.asarray(cache_len), (b,))[:, None]
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgk,bkhd->bhgd", (p / l).astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, hq, d)

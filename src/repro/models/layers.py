@@ -1,0 +1,132 @@
+"""Shared layers and initializers (pure JAX)."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+def lecun_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape) / jnp.sqrt(float(fan_in))).astype(dtype)
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return y * gamma + beta
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * gamma).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """LLaMA-style gated MLP: down( silu(x@gate) * (x@up) )."""
+    return jnp.einsum("...f,fd->...d", silu(x @ w_gate) * (x @ w_up), w_down)
+
+
+def mlp(x, weights: Sequence, biases: Sequence, act=jax.nn.relu, final_act=None):
+    """Plain MLP used by recsys towers."""
+    h = x
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        h = h @ w + b
+        if i < len(weights) - 1:
+            h = act(h)
+        elif final_act is not None:
+            h = final_act(h)
+    return h
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_row(position, d_head: int, theta: float = 10000.0):
+    """cos/sin tables with a single row for `position` (decode path: avoids
+    materializing a (max_len, d/2) table per step). Returns ((1,d/2), (1,d/2))."""
+    import jax.numpy as jnp  # local to avoid cycle at import time
+
+    inv = 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+    ang = position.astype(jnp.float32) * inv  # (d/2,)
+    return jnp.cos(ang)[None], jnp.sin(ang)[None]
+
+
+def rope_frequencies(d_head: int, max_len: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+    t = jnp.arange(max_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)  # (max_len, d_head/2)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin, positions=None):
+    """x: (..., S, H, D). cos/sin: (max_len, D/2). positions: (..., S) or None."""
+    if positions is None:
+        s = x.shape[-3]
+        cos_p, sin_p = cos[:s], sin[:s]  # (S, D/2)
+        cos_p = cos_p[:, None, :]
+        sin_p = sin_p[:, None, :]
+    else:
+        cos_p = cos[positions][..., None, :]  # (..., S, 1, D/2)
+        sin_p = sin[positions][..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out1 = x1 * cos_p - x2 * sin_p
+    out2 = x2 * cos_p + x1 * sin_p
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------- chunked cross-entropy
+def chunked_softmax_xent(
+    hidden, unembed, labels, chunk: int = 512, label_smoothing: float = 0.0,
+    real_vocab: Optional[int] = None,
+):
+    """Cross-entropy over a huge vocab without materializing full (B,S,V)
+    logits: scan over sequence chunks. hidden: (B,S,D); unembed: (D,V);
+    labels: (B,S) int32. Returns mean loss (fp32).
+
+    Positions with label < 0 are masked out. If `real_vocab` < V (padded
+    embedding for shardability), the padding columns are masked to -inf.
+    """
+    b, s, d = hidden.shape
+    v = unembed.shape[-1]
+    n_chunks = max(1, s // chunk)
+    chunk = s // n_chunks  # require divisibility; configs ensure it
+    hid = hidden.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)  # (n,B,c,d)
+    lab = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        from repro.ps import act_sharding as act
+
+        h, y = xs
+        logits = jnp.einsum("bcd,dv->bcv", h, unembed).astype(jnp.float32)
+        logits = act.constrain(logits, "dp", None, "tp")  # vocab over tp
+        if real_vocab is not None and real_vocab < v:
+            pad_mask = jnp.arange(v) < real_vocab
+            logits = jnp.where(pad_mask[None, None], logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (y >= 0).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        if label_smoothing:
+            nll = (1 - label_smoothing) * nll + label_smoothing * mask * (
+                lse - jnp.mean(logits, axis=-1)
+            )
+        loss_sum, count = carry
+        return (loss_sum + jnp.sum(nll), count + jnp.sum(mask)), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hid, lab)
+    )
+    return loss_sum / jnp.maximum(count, 1.0)

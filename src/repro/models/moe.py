@@ -1,0 +1,264 @@
+"""Mixture-of-Experts FFN (token-choice top-k, capacity-based dispatch).
+
+Dispatch uses sort-free position assignment (segment counts + stable ranks)
+and k scatter-adds of (T, d) into an (E, C+1, d) buffer -- no (T*k, d) or
+(T, E, C) materialization. With experts sharded over the "model" mesh axis
+and tokens over "data", GSPMD lowers the scatter/gather pair to the expert-
+parallel all-to-all exchange.
+
+Aggregation relevance (the paper): every expert tensor is an independent
+aggregation task; the PS control plane treats experts as first-class
+migration units (hot-expert rebalancing).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import silu
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden width
+    n_shared: int = 0
+    d_ff_shared: int = 0  # total shared-expert hidden width (= n_shared * d_ff usually)
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    normalize_gates: bool = True  # DeepSeek/Mixtral renormalize top-k probs
+
+
+def expert_positions(eid: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Position of each slot within its expert's queue, preserving slot order.
+
+    eid: (N,) int32 expert ids. Returns (N,) int32 ranks. Uses a stable
+    argsort + exclusive segment starts; O(N log N), O(N) memory.
+    """
+    n = eid.shape[0]
+    order = jnp.argsort(eid, stable=True)
+    sorted_eid = eid[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(eid), eid, num_segments=n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(n, dtype=eid.dtype) - starts[sorted_eid]
+    return jnp.zeros_like(eid).at[order].set(rank_sorted)
+
+
+def route(x, router_w, cfg: MoEConfig):
+    """Router: returns (gates (T,k) fp32, idx (T,k) int32, aux_loss, z_loss)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.normalize_gates:
+        gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    pe = jnp.mean(probs, axis=0)  # (E,)
+    fe = jnp.mean(
+        jax.nn.one_hot(idx[:, 0], cfg.n_experts, dtype=jnp.float32), axis=0
+    )
+    aux = cfg.n_experts * jnp.sum(fe * pe)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return gates, idx, aux, z
+
+
+def moe_ffn(
+    x: jnp.ndarray,  # (T, d)
+    params: dict,
+    cfg: MoEConfig,
+    capacity: Optional[int] = None,
+    n_groups: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (T, d), aux_losses scalar).
+
+    GShard-style grouped dispatch: tokens are split into `n_groups` groups
+    (sharded over the data axes), each with its own capacity C_g, so the
+    dispatch scatter and combine gather never cross data shards -- the only
+    communication left is the expert-parallel exchange around the expert
+    GEMM. A global (ungrouped) scatter lowers to full-buffer all-reduces
+    under GSPMD (measured: 9.3 TB/step on granite-moe train_4k).
+    """
+    from repro.ps import act_sharding as act
+
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = n_groups if t % n_groups == 0 else 1
+    tg = t // g
+    if capacity is None:
+        capacity = max(1, int(cfg.capacity_factor * tg * k / e))
+
+    gates, idx, aux, z = route(x, params["router"], cfg)
+
+    # Per-group slot positions within each expert queue.
+    idx_g = idx.reshape(g, tg, k)
+    gates_g = gates.reshape(g, tg, k)
+    pos_g = jax.vmap(
+        lambda ei: expert_positions(ei.reshape(-1), e).reshape(tg, k)
+    )(idx_g)  # (g, tg, k)
+
+    xg = act.constrain(x.reshape(g, tg, d), "dp", None, None)
+    gidx = jnp.arange(g, dtype=idx.dtype)[:, None]  # (g, 1) broadcast index
+
+    # Dispatch: k group-local scatter-adds; overflow lands in slot C (dropped).
+    buf = jnp.zeros((g, e, capacity + 1, d), x.dtype)
+    for j in range(k):
+        safe = jnp.minimum(pos_g[:, :, j], capacity)
+        buf = buf.at[gidx, idx_g[:, :, j], safe].add(xg, mode="drop")
+    buf = buf[:, :, :capacity]  # (g, E, C, d)
+    buf = act.constrain(buf, "dp", "tp", None, None)  # EP exchange happens here
+
+    # Expert computation (SwiGLU), experts sharded over "model".
+    h = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])
+    h = act.constrain(h, "dp", "tp", None, None)
+    u = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    out = jnp.einsum("gecf,efd->gecd", silu(h) * u, params["w_down"])
+    out = act.constrain(out, "dp", "tp", None, None)
+    out = jnp.concatenate([out, jnp.zeros((g, e, 1, d), out.dtype)], axis=2)
+    out = act.constrain(out, "dp", None, None, None)  # back to group-local
+
+    # Combine: k group-local gathers, gate-weighted.
+    y = jnp.zeros((g, tg, d), x.dtype)
+    for j in range(k):
+        slot = jnp.minimum(pos_g[:, :, j], capacity)
+        slot = jnp.where(pos_g[:, :, j] >= capacity, capacity, slot)
+        y = y + gates_g[:, :, j, None].astype(x.dtype) * out[gidx, idx_g[:, :, j], slot]
+    y = y.reshape(t, d)
+
+    # Shared experts (always-on path, DeepSeek-style).
+    if cfg.d_ff_shared > 0:
+        sh = silu(x @ params["shared_gate"]) * (x @ params["shared_up"])
+        sh = act.constrain(sh, "dp", "tp")
+        y = y + sh @ params["shared_down"]
+
+    losses = cfg.aux_loss_coef * aux + cfg.router_z_coef * z
+    return y, losses
+
+
+def moe_ffn_sharded(
+    x3d: jnp.ndarray,  # (B, S, d): B % dp == 0 and (ideally) S % tp == 0
+    params: dict,
+    cfg: MoEConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-parallel MoE via shard_map with all-to-all exchange
+    (production path).
+
+    Tokens stay in their sequence-parallel layout (B over data axes, S over
+    the model axis) all the way through -- flattening (B, S/tp, d) to a
+    global (T, d) forces GSPMD to replicate the whole token tensor
+    (measured: 4.9 TB/step of backward psum on deepseek-v2 train_4k).
+
+    Per device: local routing + capacity dispatch into an (E, C_loc, d)
+    buffer, all-to-all over the model axis so each shard receives the rows
+    bound for its E/tp experts from every peer, local expert GEMM,
+    all-to-all back, local gate-weighted combine. Per-layer exchange is
+    2 x E x C_loc x d -- proportional to the DEVICE's tokens, not the step's.
+
+    Capacity is per device (C_loc = cf * t_loc * k / E), the semantics of
+    deployed EP systems.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.ps import act_sharding as act
+
+    ctx = act._current()
+    mesh = ctx["mesh"]
+    dp_axes, tp_axes = ctx["dp"], ctx["tp"]
+    tp = tp_axes[0]
+    n_tp = mesh.shape[tp]
+
+    b, s, d = x3d.shape
+    e, k = cfg.n_experts, cfg.top_k
+    assert e % n_tp == 0, f"experts {e} must divide model axis {n_tp}"
+    s_sharded = s % n_tp == 0
+
+    # Routing on the SP-sharded tensor (einsum over unsharded d: no comm).
+    logits = (x3d.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    if cfg.normalize_gates:
+        gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    gates = gates.astype(x3d.dtype)
+    pe = jnp.mean(probs, axis=(0, 1))
+    fe = jnp.mean(jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(fe * pe)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    s_spec = tp if s_sharded else None
+
+    def body(x_loc, gates_loc, idx_loc, w_gate, w_up, w_down):
+        bl, sl, _ = x_loc.shape
+        t_loc = bl * sl
+        x2 = x_loc.reshape(t_loc, d)
+        cap = max(1, -(-int(cfg.capacity_factor * t_loc * k) // e))
+        eid = idx_loc.reshape(-1)  # (t*k,)
+        pos = expert_positions(eid, e)
+        safe = jnp.minimum(pos, cap)
+        x_rep = jnp.broadcast_to(x2[:, None, :], (t_loc, k, d)).reshape(-1, d)
+        buf = jnp.zeros((e, cap + 1, d), x2.dtype)
+        buf = buf.at[eid, safe].add(x_rep, mode="drop")[:, :cap]
+
+        # EP exchange: send each peer its expert block, receive my experts'
+        # rows from every peer.  (n_tp, E/tp, cap, d) <-> all_to_all.
+        send = buf.reshape(n_tp, e // n_tp, cap, d)
+        recv = jax.lax.all_to_all(send, tp, split_axis=0, concat_axis=0,
+                                  tiled=False)
+        rows = recv.transpose(1, 0, 2, 3).reshape(e // n_tp, n_tp * cap, d)
+
+        h = jnp.einsum("ecd,edf->ecf", rows, w_gate)
+        u = jnp.einsum("ecd,edf->ecf", rows, w_up)
+        out = jnp.einsum("ecf,efd->ecd", silu(h) * u, w_down)
+
+        back = out.reshape(e // n_tp, n_tp, cap, d).transpose(1, 0, 2, 3)
+        mine = jax.lax.all_to_all(back, tp, split_axis=0, concat_axis=0,
+                                  tiled=False)  # (n_tp, E/tp, cap, d)
+        out_full = mine.reshape(e, cap, d)
+        out_full = jnp.concatenate(
+            [out_full, jnp.zeros((e, 1, d), out_full.dtype)], axis=1)
+
+        slot = jnp.where(pos >= cap, cap, safe)
+        picked = out_full[eid, slot].reshape(t_loc, k, d)
+        y = jnp.einsum("tk,tkd->td", gates_loc.reshape(t_loc, k), picked)
+        return y.reshape(bl, sl, d)
+
+    y = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(dp_spec, s_spec, None), P(dp_spec, s_spec, None),
+                  P(dp_spec, s_spec, None),
+                  P(tp, None, None), P(tp, None, None), P(tp, None, None)),
+        out_specs=P(dp_spec, s_spec, None),
+        check_rep=False,
+    )(x3d, gates, idx, params["w_gate"], params["w_up"], params["w_down"])
+
+    if cfg.d_ff_shared > 0:
+        sh = silu(x3d @ params["shared_gate"]) * (x3d @ params["shared_up"])
+        sh = act.constrain(sh, "dp", None, "tp")
+        y = y + sh @ params["shared_down"]
+
+    losses = cfg.aux_loss_coef * aux + cfg.router_z_coef * z
+    return y, losses
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 7)
+    scale_in = d_model ** -0.5
+    scale_ff = cfg.d_ff ** -0.5
+    p = {
+        "router": (scale_in * jax.random.normal(ks[0], (d_model, cfg.n_experts))).astype(jnp.float32),
+        "w_gate": (scale_in * jax.random.normal(ks[1], (cfg.n_experts, d_model, cfg.d_ff))).astype(dtype),
+        "w_up": (scale_in * jax.random.normal(ks[2], (cfg.n_experts, d_model, cfg.d_ff))).astype(dtype),
+        "w_down": (scale_ff * jax.random.normal(ks[3], (cfg.n_experts, cfg.d_ff, d_model))).astype(dtype),
+    }
+    if cfg.d_ff_shared > 0:
+        p["shared_gate"] = (scale_in * jax.random.normal(ks[4], (d_model, cfg.d_ff_shared))).astype(dtype)
+        p["shared_up"] = (scale_in * jax.random.normal(ks[5], (d_model, cfg.d_ff_shared))).astype(dtype)
+        p["shared_down"] = ((cfg.d_ff_shared ** -0.5) * jax.random.normal(ks[6], (cfg.d_ff_shared, d_model))).astype(dtype)
+    return p

@@ -1,0 +1,439 @@
+"""RecSys models: DLRM (dot interaction), SASRec, DIEN (GRU + AUGRU).
+
+JAX has no nn.EmbeddingBag: `embedding_bag` below builds it from jnp.take +
+jax.ops.segment_sum (a first-class system component, also available as a
+Pallas kernel in repro.kernels.embed_bag). Embedding tables are the paper's
+best-case workload: 26 tables of wildly different vocab make per-tensor
+balanced aggregation placement matter (ps-lite round-robin is provably bad).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp, normal_init
+
+
+# ------------------------------------------------------------- EmbeddingBag
+def embedding_bag(table, indices, offsets=None, weights=None, mode="sum"):
+    """torch.nn.EmbeddingBag semantics from take + segment_sum.
+
+    table: (V, D). With offsets=None, indices is (B, L) (fixed-size bags);
+    otherwise indices is flat (N,) and offsets (B,) marks bag starts.
+    """
+    if offsets is None:
+        rows = jnp.take(table, indices, axis=0)  # (B, L, D)
+        if weights is not None:
+            rows = rows * weights[..., None]
+        out = jnp.sum(rows, axis=1)
+        if mode == "mean":
+            out = out / indices.shape[1]
+        return out
+    n = indices.shape[0]
+    b = offsets.shape[0]
+    seg = jnp.cumsum(
+        jnp.zeros((n,), jnp.int32).at[offsets].add(1)
+    ) - 1  # bag id per element
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, seg, num_segments=b)
+    if mode == "mean":
+        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), seg, num_segments=b)
+        out = out / jnp.maximum(counts, 1.0)[:, None]
+    return out
+
+
+# ------------------------------------------------- sharded embedding lookup
+def sharded_embedding_lookup(tables, ids, chunk: int = 65536):
+    """PS-style model-parallel embedding lookup.
+
+    tables: list of (V_i_padded, D) row-sharded over the FULL mesh;
+    ids: (B, n_fields) int32. Every device computes partial rows for the
+    table rows it owns (ids broadcast), then a psum_scatter over the batch
+    dim combines partials and leaves the result batch-sharded -- the
+    pull/push pattern of a sharded parameter server. Batches larger than
+    `chunk` are processed in a lax.map to bound the partial buffer.
+
+    Requires act_sharding context; falls back to plain takes on 1 device.
+    GSPMD cannot partition a gather from row-sharded operands (it
+    replicates the tables: measured 96 GB/device on dlrm-mlperf).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.ps import act_sharding as act
+
+    ctx = act._current()
+    if ctx is None:
+        return jnp.stack(
+            [jnp.take(t, ids[:, i], axis=0) for i, t in enumerate(tables)],
+            axis=1,
+        )
+
+    mesh = ctx["mesh"]
+    axes_all = ctx["all"]
+    n_dev = 1
+    for a in axes_all:
+        n_dev *= mesh.shape[a]
+    b, n_fields = ids.shape
+    d = tables[0].shape[1]
+    spec_all = axes_all if len(axes_all) > 1 else axes_all[0]
+
+    def body(ids_rep, *tables_loc):
+        flat = jnp.zeros((), jnp.int32)
+        for a in axes_all:
+            flat = flat * mesh.shape[a] + jax.lax.axis_index(a)
+        parts = []
+        for i, tl in enumerate(tables_loc):
+            vloc = tl.shape[0]
+            local = ids_rep[:, i] - flat * vloc
+            ok = (local >= 0) & (local < vloc)
+            rows = jnp.take(tl, jnp.clip(local, 0, vloc - 1), axis=0)
+            parts.append(rows * ok[:, None].astype(rows.dtype))
+        part = jnp.stack(parts, axis=1)  # (chunk, F, D) partial
+        return jax.lax.psum_scatter(
+            part, axes_all, scatter_dimension=0, tiled=True
+        )  # (chunk/n_dev, F, D)
+
+    lookup = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(None, None),) + tuple(P(spec_all, None) for _ in tables),
+        out_specs=P(spec_all, None, None),
+        check_rep=False,
+    )
+
+    # psum_scatter needs b (or the chunk) divisible by the device count;
+    # large batches pad to a whole number of chunks.
+    pad_unit = chunk if b > chunk else n_dev
+    pad = (-b) % pad_unit
+    if pad:
+        ids = jnp.concatenate([ids, jnp.zeros((pad, n_fields), ids.dtype)])
+    bp = b + pad
+    if bp <= chunk or bp % chunk != 0:
+        out = lookup(ids, *tables)
+    else:
+        ids_c = ids.reshape(bp // chunk, chunk, n_fields)
+        out = jax.lax.map(lambda c: lookup(c, *tables), ids_c)
+        out = out.reshape(bp, n_fields, d)
+    if pad:
+        out = out[:b]
+    return act.constrain(out, "dp", None, None)
+
+
+def pad_vocab(v: int, multiple: int = 512) -> int:
+    """Row-shardable table size (rows padded up; ids never reach padding)."""
+    return -(-v // multiple) * multiple
+
+
+# ======================================================================= DLRM
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    bot_mlp: Tuple[int, ...] = (512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    vocab_sizes: Tuple[int, ...] = ()
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[self.dtype]
+
+    @property
+    def n_features(self) -> int:
+        return self.n_sparse + 1  # embeddings + bottom-MLP output
+
+    @property
+    def n_pairs(self) -> int:
+        f = self.n_features
+        return f * (f - 1) // 2
+
+
+def _init_mlp(key, dims: Sequence[int], dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    ws = [ (dims[i] ** -0.5) * jax.random.normal(ks[i], (dims[i], dims[i + 1]))
+          for i in range(len(dims) - 1)]
+    return {
+        "w": [w.astype(dtype) for w in ws],
+        "b": [jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)],
+    }
+
+
+def dlrm_init(cfg: DLRMConfig, key) -> Dict:
+    assert len(cfg.vocab_sizes) == cfg.n_sparse
+    ks = jax.random.split(key, cfg.n_sparse + 2)
+    dt = cfg.jdtype
+    # Rows padded to a shardable multiple; ids never reach the padding.
+    tables = [
+        normal_init(ks[i], (pad_vocab(v), cfg.embed_dim),
+                    stddev=1.0 / jnp.sqrt(float(v)), dtype=dt)
+        for i, v in enumerate(cfg.vocab_sizes)
+    ]
+    bot_dims = (cfg.n_dense,) + cfg.bot_mlp
+    top_in = cfg.bot_mlp[-1] + cfg.n_pairs
+    top_dims = (top_in,) + cfg.top_mlp
+    return {
+        "tables": tables,
+        "bot": _init_mlp(ks[-2], bot_dims, dt),
+        "top": _init_mlp(ks[-1], top_dims, dt),
+    }
+
+
+def dlrm_forward(cfg: DLRMConfig, params, dense, sparse_ids):
+    """dense: (B, n_dense) float; sparse_ids: (B, n_sparse) int32 -> logits (B,)."""
+    dt = cfg.jdtype
+    bot = mlp(dense.astype(dt), params["bot"]["w"], params["bot"]["b"])  # (B, D)
+    embs = sharded_embedding_lookup(params["tables"], sparse_ids)  # (B, n_sparse, D)
+    z = jnp.concatenate([bot[:, None, :], embs], axis=1)  # (B, F, D)
+    inter = jnp.einsum("bfd,bgd->bfg", z, z)  # (B, F, F)
+    f = cfg.n_features
+    iu, ju = jnp.triu_indices(f, k=1)
+    pairs = inter[:, iu, ju]  # (B, F*(F-1)/2)
+    top_in = jnp.concatenate([bot, pairs.astype(dt)], axis=1)
+    logit = mlp(top_in, params["top"]["w"], params["top"]["b"])
+    return logit[:, 0]
+
+
+def dlrm_loss(cfg: DLRMConfig, params, batch) -> jnp.ndarray:
+    logits = dlrm_forward(cfg, params, batch["dense"], batch["sparse"]).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def dlrm_retrieval(cfg: DLRMConfig, params, dense_1, user_sparse, candidate_ids):
+    """Score one user against N candidate items (retrieval_cand shape).
+
+    dense_1: (1, n_dense); user_sparse: (1, n_sparse - 1) fixed user fields;
+    candidate_ids: (N,) ids into the LAST table (the item table).
+    """
+    n = candidate_ids.shape[0]
+    dense = jnp.broadcast_to(dense_1, (n, cfg.n_dense))
+    user = jnp.broadcast_to(user_sparse, (n, cfg.n_sparse - 1))
+    sparse = jnp.concatenate([user, candidate_ids[:, None]], axis=1)
+    return dlrm_forward(cfg, params, dense, sparse)
+
+
+# ===================================================================== SASRec
+@dataclass(frozen=True)
+class SASRecConfig:
+    name: str
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[self.dtype]
+
+
+def sasrec_init(cfg: SASRecConfig, key) -> Dict:
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    dt, d = cfg.jdtype, cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        bk = jax.random.split(ks[2 + i], 6)
+        s = d ** -0.5
+        blocks.append({
+            "ln1_g": jnp.ones((d,), jnp.float32), "ln1_b": jnp.zeros((d,), jnp.float32),
+            "w_q": (s * jax.random.normal(bk[0], (d, d))).astype(dt),
+            "w_k": (s * jax.random.normal(bk[1], (d, d))).astype(dt),
+            "w_v": (s * jax.random.normal(bk[2], (d, d))).astype(dt),
+            "w_o": (s * jax.random.normal(bk[3], (d, d))).astype(dt),
+            "ln2_g": jnp.ones((d,), jnp.float32), "ln2_b": jnp.zeros((d,), jnp.float32),
+            "w_ff1": (s * jax.random.normal(bk[4], (d, d))).astype(dt),
+            "b_ff1": jnp.zeros((d,), dt),
+            "w_ff2": (s * jax.random.normal(bk[5], (d, d))).astype(dt),
+            "b_ff2": jnp.zeros((d,), dt),
+        })
+    return {
+        "item_emb": normal_init(ks[0], (cfg.n_items, d), 0.02, dt),
+        "pos_emb": normal_init(ks[1], (cfg.seq_len, d), 0.02, dt),
+        "blocks": blocks,
+        "final_ln_g": jnp.ones((d,), jnp.float32),
+        "final_ln_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _ln(x, g, b, eps=1e-6):
+    m = jnp.mean(x, -1, keepdims=True)
+    v = jnp.var(x, -1, keepdims=True)
+    return ((x - m) * jax.lax.rsqrt(v + eps)) * g + b
+
+
+def sasrec_states(cfg: SASRecConfig, params, item_seq):
+    """item_seq: (B, S) int32 (0 = padding) -> hidden states (B, S, D)."""
+    b, s = item_seq.shape
+    h = jnp.take(params["item_emb"], item_seq, axis=0) + params["pos_emb"][None, :s]
+    h = h * (item_seq != 0)[..., None].astype(h.dtype)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    for blk in params["blocks"]:
+        q = _ln(h, blk["ln1_g"], blk["ln1_b"]).astype(h.dtype)
+        scores = jnp.einsum("bqd,bkd->bqk", q @ blk["w_q"], h @ blk["w_k"])
+        scores = scores / jnp.sqrt(float(cfg.embed_dim))
+        scores = jnp.where(causal[None], scores.astype(jnp.float32), -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+        att = jnp.einsum("bqk,bkd->bqd", probs, h @ blk["w_v"]) @ blk["w_o"]
+        h = h + att
+        f = _ln(h, blk["ln2_g"], blk["ln2_b"]).astype(h.dtype)
+        h = h + jax.nn.relu(f @ blk["w_ff1"] + blk["b_ff1"]) @ blk["w_ff2"] + blk["b_ff2"]
+    return _ln(h, params["final_ln_g"], params["final_ln_b"]).astype(h.dtype)
+
+
+def sasrec_loss(cfg: SASRecConfig, params, batch) -> jnp.ndarray:
+    """batch: seq (B,S), pos (B,S) next items, neg (B,S) sampled negatives.
+
+    BCE over positive/negative next-item scores (the SASRec objective)."""
+    h = sasrec_states(cfg, params, batch["seq"])
+    pos_e = jnp.take(params["item_emb"], batch["pos"], axis=0)
+    neg_e = jnp.take(params["item_emb"], batch["neg"], axis=0)
+    pos_s = jnp.sum(h * pos_e, -1).astype(jnp.float32)
+    neg_s = jnp.sum(h * neg_e, -1).astype(jnp.float32)
+    mask = (batch["pos"] != 0).astype(jnp.float32)
+    loss = -jnp.log(jax.nn.sigmoid(pos_s) + 1e-12) - jnp.log(1 - jax.nn.sigmoid(neg_s) + 1e-12)
+    return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def sasrec_retrieval(cfg: SASRecConfig, params, item_seq, candidate_ids):
+    """(B,S) history x (N,) candidates -> (B,N) scores (batched dot)."""
+    h = sasrec_states(cfg, params, item_seq)[:, -1]  # (B, D)
+    cand = jnp.take(params["item_emb"], candidate_ids, axis=0)  # (N, D)
+    return jnp.einsum("bd,nd->bn", h, cand)
+
+
+# ======================================================================= DIEN
+@dataclass(frozen=True)
+class DIENConfig:
+    name: str
+    n_items: int = 1_000_000
+    n_cats: int = 10_000
+    embed_dim: int = 18  # per-field; item+cat concat -> 36
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: Tuple[int, ...] = (200, 80)
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[self.dtype]
+
+    @property
+    def d_in(self) -> int:
+        return 2 * self.embed_dim  # item emb + category emb
+
+
+def _gru_params(key, d_in, d_h, dtype):
+    ks = jax.random.split(key, 3)
+    s = (d_in + d_h) ** -0.5
+    mk = lambda k: (s * jax.random.normal(k, (d_in + d_h, d_h))).astype(dtype)
+    return {"wz": mk(ks[0]), "wr": mk(ks[1]), "wh": mk(ks[2]),
+            "bz": jnp.zeros((d_h,), dtype), "br": jnp.zeros((d_h,), dtype),
+            "bh": jnp.zeros((d_h,), dtype)}
+
+
+def _gru_cell(p, h, x, att=None):
+    xh = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(xh @ p["wz"] + p["bz"])
+    r = jax.nn.sigmoid(xh @ p["wr"] + p["br"])
+    xh2 = jnp.concatenate([x, r * h], axis=-1)
+    h_tilde = jnp.tanh(xh2 @ p["wh"] + p["bh"])
+    if att is not None:  # AUGRU: attention scales the update gate
+        z = z * att[:, None]
+    return (1 - z) * h + z * h_tilde
+
+
+def dien_init(cfg: DIENConfig, key) -> Dict:
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    att_in = cfg.gru_dim + cfg.d_in
+    return {
+        "item_emb": normal_init(ks[0], (cfg.n_items, cfg.embed_dim), 0.02, dt),
+        "cat_emb": normal_init(ks[1], (cfg.n_cats, cfg.embed_dim), 0.02, dt),
+        "gru1": _gru_params(ks[2], cfg.d_in, cfg.gru_dim, dt),
+        "augru": _gru_params(ks[3], cfg.gru_dim, cfg.gru_dim, dt),
+        "att": _init_mlp(ks[4], (att_in, 80, 1), dt),
+        "head": _init_mlp(
+            ks[5], (cfg.gru_dim + 2 * cfg.d_in,) + cfg.mlp_dims + (1,), dt
+        ),
+    }
+
+
+def _embed_pair(cfg, params, items, cats):
+    return jnp.concatenate(
+        [jnp.take(params["item_emb"], items, axis=0),
+         jnp.take(params["cat_emb"], cats, axis=0)], axis=-1)
+
+
+def dien_forward(cfg: DIENConfig, params, batch):
+    """batch: hist_items/hist_cats (B,S), target_item/target_cat (B,) ->
+    logits (B,). Interest extraction GRU -> target attention -> AUGRU."""
+    hist = _embed_pair(cfg, params, batch["hist_items"], batch["hist_cats"])  # (B,S,36)
+    target = _embed_pair(cfg, params, batch["target_item"], batch["target_cat"])  # (B,36)
+    b, s, _ = hist.shape
+
+    def gru_scan(h, x):
+        h = _gru_cell(params["gru1"], h, x)
+        return h, h
+
+    h0 = jnp.zeros((b, cfg.gru_dim), hist.dtype)
+    _, states = jax.lax.scan(gru_scan, h0, hist.swapaxes(0, 1))  # (S,B,H)
+
+    # Attention of each interest state vs the target ad.
+    tgt = jnp.broadcast_to(target[None], (s, b, cfg.d_in))
+    att_in = jnp.concatenate([states, tgt], axis=-1)
+    scores = mlp(att_in, params["att"]["w"], params["att"]["b"])[..., 0]  # (S,B)
+    att = jax.nn.softmax(scores.astype(jnp.float32), axis=0).astype(hist.dtype)
+
+    def augru_scan(h, xs):
+        x, a = xs
+        h = _gru_cell(params["augru"], h, x, att=a)
+        return h, None
+
+    hT, _ = jax.lax.scan(augru_scan, h0, (states, att))  # final interest (B,H)
+
+    hist_mean = jnp.mean(hist, axis=1)
+    head_in = jnp.concatenate([hT, target, hist_mean], axis=-1)
+    return mlp(head_in, params["head"]["w"], params["head"]["b"])[:, 0]
+
+
+def dien_loss(cfg: DIENConfig, params, batch) -> jnp.ndarray:
+    logits = dien_forward(cfg, params, batch).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def dien_retrieval(cfg: DIENConfig, params, hist_items, hist_cats, cand_items, cand_cats):
+    """1 user x N candidates: shared interest GRU, per-candidate AUGRU."""
+    n = cand_items.shape[0]
+    batch = {
+        "hist_items": jnp.broadcast_to(hist_items, (n,) + hist_items.shape[-1:]),
+        "hist_cats": jnp.broadcast_to(hist_cats, (n,) + hist_cats.shape[-1:]),
+        "target_item": cand_items,
+        "target_cat": cand_cats,
+    }
+    return dien_forward(cfg, params, batch)
+
+
+def make_train_step(loss, optimizer):
+    """Generic recsys train step from a loss(params, batch) closure."""
+
+    def train_step(state, batch):
+        l, grads = jax.value_and_grad(loss)(state["params"], batch)
+        new_params, new_opt = optimizer.step(state["params"], grads, state["opt"])
+        return {"params": new_params, "opt": new_opt}, {"loss": l}
+
+    return train_step

@@ -1,0 +1,562 @@
+"""Decoder-only LM supporting the five assigned LM architectures.
+
+Features: GQA (command-r-plus, granite-8b, qwen), QKV bias (qwen), parallel
+attention+FFN residual (command-r family), MLA compressed-KV attention with
+absorbed decode (deepseek-v2), MoE FFN with shared experts (granite-moe,
+deepseek-v2), tied embeddings, RoPE, RMS/LayerNorm, lax.scan over layers
+(keeps HLO size flat in depth), microbatched gradient accumulation, chunked
+cross-entropy, and KV-cache prefill/decode for serving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.ps import act_sharding as act
+
+from . import attention as attn_lib
+from .layers import (
+    apply_rope,
+    chunked_softmax_xent,
+    layer_norm,
+    rms_norm,
+    rope_frequencies,
+    rope_row,
+    silu,
+)
+from .moe import MoEConfig, init_moe_params, moe_ffn
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None  # default d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    parallel_block: bool = False  # command-r: x + attn(norm x) + ffn(norm x)
+    norm: str = "rmsnorm"  # or "layernorm"
+    rope_theta: float = 10000.0
+    max_seq_len: int = 8192
+    moe: Optional[MoEConfig] = None
+    first_k_dense: int = 0  # leading layers use dense FFN even in MoE models
+    mla: Optional[MLAConfig] = None
+    dtype: str = "float32"
+    remat: bool = True
+    loss_chunk: int = 512
+    attn_chunk_k: int = 0  # 0 -> full attention; >0 -> online-softmax chunks
+    moe_capacity_factor_override: Optional[float] = None
+    moe_groups: int = 1  # GShard-style dispatch groups (shard-local scatter)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded to a shardable multiple (embedding rows + logit
+        columns); CE masks the padding columns so semantics are unchanged.
+        (granite-moe's 49155 is prime-ish -- unsharded it costs a 24 GB/step
+        fp32 all-reduce in the CE backward.)"""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def jdtype(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[self.dtype]
+
+    @property
+    def param_count(self) -> int:
+        """Total parameters (for roofline MODEL_FLOPS)."""
+        return sum(
+            int(np_prod(l.shape))
+            for l in jax.tree_util.tree_leaves(
+                jax.eval_shape(lambda: init_params(self, jax.random.PRNGKey(0)))
+            )
+        )
+
+    @property
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        total = self.param_count
+        if self.moe is None:
+            return total
+        m = self.moe
+        per_expert = 3 * self.d_model * m.d_ff
+        n_moe_layers = self.n_layers - self.first_k_dense
+        inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+        return total - inactive
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# =============================================================== init
+def _norm_params(cfg, d):
+    if cfg.norm == "layernorm":
+        return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["g"], p["b"]).astype(x.dtype)
+    return rms_norm(x, p["g"])
+
+
+def _init_attn(cfg: LMConfig, key) -> Dict[str, Any]:
+    d, hq, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    if cfg.mla is not None:
+        m = cfg.mla
+        dqk = m.qk_nope_dim + m.qk_rope_dim
+        p = {
+            "w_dq": (s * jax.random.normal(ks[0], (d, m.q_lora_rank))).astype(dt),
+            "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+            "w_uq": ((m.q_lora_rank ** -0.5) * jax.random.normal(ks[1], (m.q_lora_rank, hq, dqk))).astype(dt),
+            "w_dkv": (s * jax.random.normal(ks[2], (d, m.kv_lora_rank))).astype(dt),
+            "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+            "w_kr": (s * jax.random.normal(ks[3], (d, m.qk_rope_dim))).astype(dt),
+            "w_uk": ((m.kv_lora_rank ** -0.5) * jax.random.normal(ks[4], (m.kv_lora_rank, hq, m.qk_nope_dim))).astype(dt),
+            "w_uv": ((m.kv_lora_rank ** -0.5) * jax.random.normal(ks[5], (m.kv_lora_rank, hq, m.v_head_dim))).astype(dt),
+            "w_o": (((hq * m.v_head_dim) ** -0.5) * jax.random.normal(ks[6], (hq, m.v_head_dim, d))).astype(dt),
+        }
+        return p
+    p = {
+        "w_q": (s * jax.random.normal(ks[0], (d, hq, dh))).astype(dt),
+        "w_k": (s * jax.random.normal(ks[1], (d, hk, dh))).astype(dt),
+        "w_v": (s * jax.random.normal(ks[2], (d, hk, dh))).astype(dt),
+        "w_o": (((hq * dh) ** -0.5) * jax.random.normal(ks[3], (hq, dh, d))).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((hq, dh), dt)
+        p["b_k"] = jnp.zeros((hk, dh), dt)
+        p["b_v"] = jnp.zeros((hk, dh), dt)
+    return p
+
+
+def _init_dense_ffn(cfg: LMConfig, key, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": ((d ** -0.5) * jax.random.normal(ks[0], (d, f))).astype(dt),
+        "w_up": ((d ** -0.5) * jax.random.normal(ks[1], (d, f))).astype(dt),
+        "w_down": ((f ** -0.5) * jax.random.normal(ks[2], (f, d))).astype(dt),
+    }
+
+
+def _init_layer(cfg: LMConfig, key, dense: bool) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": _norm_params(cfg, cfg.d_model),
+        "attn": _init_attn(cfg, k1),
+    }
+    if not cfg.parallel_block:
+        p["ln2"] = _norm_params(cfg, cfg.d_model)
+    if dense or cfg.moe is None:
+        p["ffn"] = _init_dense_ffn(cfg, k2)
+    else:
+        p["moe"] = init_moe_params(k2, cfg.d_model, cfg.moe, cfg.jdtype)
+    return p
+
+
+def init_params(cfg: LMConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    dt = cfg.jdtype
+    params: Dict[str, Any] = {
+        "embed": ((cfg.d_model ** -0.5) * jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model))).astype(dt),
+        "final_norm": _norm_params(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = ((cfg.d_model ** -0.5) * jax.random.normal(keys[1], (cfg.d_model, cfg.padded_vocab))).astype(dt)
+    # Leading dense layers (unrolled), then a stacked scan block.
+    for i in range(cfg.first_k_dense):
+        params[f"dense_layer_{i}"] = _init_layer(cfg, keys[2 + i], dense=True)
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    if n_scan > 0:
+        scan_keys = jax.random.split(keys[-1], n_scan)
+        layers = [_init_layer(cfg, k, dense=False) for k in scan_keys]
+        params["layers"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *layers
+        )
+    return params
+
+
+# ============================================================ forward pieces
+def _attention_block(cfg: LMConfig, p, x, cos, sin, positions=None):
+    """x: (B,S,d) -> (B,S,d). Training/prefill path."""
+    b, s, d = x.shape
+    if cfg.mla is not None:
+        return _mla_attention(cfg, p, x, cos, sin, positions)
+    q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["w_k"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = apply_rope(q, cos, sin, positions)
+    k = apply_rope(k, cos, sin, positions)
+    q = act.constrain(q, "dp", None, "tp", None)  # TP over query heads
+    k = act.constrain(k, "dp", None, "tp", None)
+    v = act.constrain(v, "dp", None, "tp", None)
+    if cfg.attn_chunk_k and s > cfg.attn_chunk_k:
+        o = attn_lib.chunked_attention(q, k, v, causal=True, chunk_k=cfg.attn_chunk_k)
+    else:
+        o = attn_lib.full_attention(q, k, v, causal=True)
+    o = act.constrain(o, "dp", None, "tp", None)
+    return jnp.einsum("bshe,hed->bsd", o, p["w_o"])
+
+
+def _mla_attention(cfg: LMConfig, p, x, cos, sin, positions=None):
+    m = cfg.mla
+    b, s, d = x.shape
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])  # (B,S,H,nope+rope)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, cos, sin, positions)
+
+    ckv = rms_norm(x @ p["w_dkv"], p["kv_norm"])  # (B,S,r)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], cos, sin, positions)  # (B,S,1,rope)
+    k_nope = jnp.einsum("bsr,rhe->bshe", ckv, p["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", ckv, p["w_uv"])
+
+    q_full = act.constrain(jnp.concatenate([q_nope, q_rope], axis=-1),
+                           "dp", None, "tp", None)
+    k_full = act.constrain(jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, cfg.n_heads, m.qk_rope_dim))], axis=-1
+    ), "dp", None, "tp", None)
+    v = act.constrain(v, "dp", None, "tp", None)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    if cfg.attn_chunk_k and s > cfg.attn_chunk_k:
+        o = attn_lib.chunked_attention(q_full, k_full, v, causal=True,
+                                       chunk_k=cfg.attn_chunk_k, scale=scale)
+    else:
+        o = attn_lib.full_attention(q_full, k_full, v, causal=True, scale=scale)
+    return jnp.einsum("bshe,hed->bsd", o, p["w_o"])
+
+
+def _ffn_block(cfg: LMConfig, p, x):
+    """Dense or MoE FFN on (B,S,d). Returns (out, aux_loss)."""
+    if "ffn" in p:
+        f = p["ffn"]
+        h = silu(x @ f["w_gate"]) * (x @ f["w_up"])
+        h = act.constrain(h, "dp", None, "tp")  # TP over FFN hidden
+        return h @ f["w_down"], jnp.zeros((), jnp.float32)
+    b, s, d = x.shape
+    cfg_moe = cfg.moe
+    if cfg.moe_capacity_factor_override is not None:
+        cfg_moe = dataclasses.replace(
+            cfg_moe, capacity_factor=cfg.moe_capacity_factor_override
+        )
+    if act.enabled():
+        ctx = act._current()
+        dp_size = 1
+        for a in ctx["dp"]:
+            dp_size *= ctx["mesh"].shape[a]
+        tp_size = ctx["mesh"].shape[ctx["tp"][0]]
+        if b % dp_size == 0 and cfg_moe.n_experts % tp_size == 0:
+            from .moe import moe_ffn_sharded
+
+            # SP-preserving all-to-all expert parallelism (tokens never
+            # leave their (dp, tp) shard except through the EP exchange).
+            return moe_ffn_sharded(x, p["moe"], cfg_moe)
+    y, aux = moe_ffn(x.reshape(b * s, d), p["moe"], cfg_moe,
+                     n_groups=cfg.moe_groups)
+    return y.reshape(b, s, d), aux
+
+
+def _layer_fn(cfg: LMConfig, p, x, cos, sin, positions=None):
+    """One transformer block. Returns (x_out, aux_loss).
+
+    Row-parallel projection outputs (attention w_o, FFN w_down) are
+    constrained straight to the sequence-parallel layout so GSPMD lowers
+    their pending partial-sums as reduce-scatters instead of all-reduce +
+    slice (halves the dominant TP collective)."""
+    if cfg.parallel_block:
+        h = _apply_norm(cfg, p["ln1"], x)
+        a = _attention_block(cfg, p["attn"], h, cos, sin, positions)
+        f, aux = _ffn_block(cfg, p, h)
+        return x + act.constrain(a + f, "dp", "tp", None), aux
+    a = _attention_block(cfg, p["attn"], _apply_norm(cfg, p["ln1"], x), cos, sin, positions)
+    x = x + act.constrain(a, "dp", "tp", None)
+    f, aux = _ffn_block(cfg, p, _apply_norm(cfg, p["ln2"], x))
+    return x + act.constrain(f, "dp", "tp", None), aux
+
+
+def forward_hidden(cfg: LMConfig, params, tokens) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B,S) -> hidden (B,S,d), total aux loss.
+
+    The residual stream is sequence-sharded between layers (sequence
+    parallelism): the scan carry -- which remat saves per layer -- is
+    (B, S/tp, d) instead of (B, S, d)."""
+    x = params["embed"][tokens]
+    x = act.constrain(x, "dp", "tp", None)
+    cos, sin = rope_frequencies(
+        cfg.mla.qk_rope_dim if cfg.mla else cfg.head_dim,
+        tokens.shape[1],
+        cfg.rope_theta,
+    )
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(cfg.first_k_dense):
+        x, aux = _layer_fn(cfg, params[f"dense_layer_{i}"], x, cos, sin)
+        x = act.constrain(x, "dp", "tp", None)
+        aux_total += aux
+
+    if "layers" in params:
+        def body(carry, layer_p):
+            x, aux_acc = carry
+            x = act.constrain(x, "dp", "tp", None)
+            fn = _layer_fn
+            if cfg.remat:
+                fn = jax.checkpoint(
+                    _layer_fn, policy=jax.checkpoint_policies.nothing_saveable,
+                    static_argnums=(0,),
+                )
+            x, aux = fn(cfg, layer_p, x, cos, sin)
+            return (x, aux_acc + aux), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+    return _apply_norm(cfg, params["final_norm"], x), aux_total
+
+
+def _unembed(cfg: LMConfig, params):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def loss_fn(cfg: LMConfig, params, batch) -> jnp.ndarray:
+    """batch: {'tokens': (B,S), 'labels': (B,S)} -> scalar fp32 loss."""
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"])
+    ce = chunked_softmax_xent(hidden, _unembed(cfg, params), batch["labels"],
+                              chunk=min(cfg.loss_chunk, hidden.shape[1]),
+                              real_vocab=cfg.vocab)
+    return ce + aux
+
+
+def make_train_step(
+    cfg: LMConfig, optimizer, n_microbatches: int = 1,
+    grad_accum_dtype=jnp.float32, grad_shardings=None,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {'params', 'opt'}; batch tokens (B,S). With n_microbatches > 1,
+    grads accumulate over a scan of microbatches (B must divide evenly);
+    aggregation (optimizer step) runs once -- this is the 'Push/Update'
+    aggregation op the Parameter Service places per-tensor.
+    `grad_accum_dtype` trades accumulation precision for memory on the
+    100B+ configs (bf16 accum halves the gradient-buffer HBM).
+    `grad_shardings` (params-shaped tree of NamedShardings, or None) pins
+    the gradient/accumulator layout -- needed when parameters are
+    replicated along an axis (EP expert weights) but gradients must stay
+    sharded (ZeRO-1), else the accumulator replicates too.
+    """
+
+    def _constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s)
+            if s is not None else g,
+            grads, grad_shardings,
+        )
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+            grads = _constrain_grads(grads)
+        else:
+            b = batch["tokens"].shape[0]
+            mb = b // n_microbatches
+            toks = batch["tokens"].reshape(n_microbatches, mb, -1)
+            labs = batch["labels"].reshape(n_microbatches, mb, -1)
+
+            def micro(carry, xs):
+                loss_acc, grad_acc = carry
+                t, l = xs
+                loss, grads = jax.value_and_grad(
+                    lambda p: loss_fn(cfg, p, {"tokens": t, "labels": l})
+                )(params)
+                grad_acc = _constrain_grads(jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(a.dtype), grad_acc, grads
+                ))
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = _constrain_grads(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, grad_accum_dtype), params
+            ))
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zeros), (toks, labs)
+            )
+            loss = loss / n_microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / n_microbatches, grads)
+
+        new_params, new_opt = optimizer.step(params, grads, state["opt"])
+        metrics = {"loss": loss}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+# ================================================================= serving
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dt = cfg.jdtype
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    if cfg.mla is not None:
+        m = cfg.mla
+        mk = lambda L: {
+            "ckv": jnp.zeros((L, batch, max_len, m.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((L, batch, max_len, m.qk_rope_dim), dt),
+        }
+    else:
+        hk, dh = cfg.n_kv_heads, cfg.head_dim
+        mk = lambda L: {
+            "k": jnp.zeros((L, batch, max_len, hk, dh), dt),
+            "v": jnp.zeros((L, batch, max_len, hk, dh), dt),
+        }
+    cache = {"scan": mk(n_scan)}
+    if cfg.first_k_dense:
+        cache["dense"] = mk(cfg.first_k_dense)
+    cache["length"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def _decode_attn_gqa(cfg, p, x, cache_k, cache_v, cache_len, cos, sin):
+    """x: (B,1,d); caches (B,Smax,HK,Dh). Returns (out, new_k_row, new_v_row).
+    cos/sin are single-row tables for the current position (index 0)."""
+    pos = jnp.zeros((x.shape[0], 1), jnp.int32)
+    q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["w_k"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = apply_rope(q, cos, sin, pos)
+    k = apply_rope(k, cos, sin, pos)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k, cache_len, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v, cache_len, axis=1)
+    o = attn_lib.decode_attention(q, ck, cv, cache_len + 1)
+    return jnp.einsum("bshe,hed->bsd", o, p["w_o"]), ck, cv
+
+
+def _decode_attn_mla(cfg, p, x, cache_ckv, cache_kr, cache_len, cos, sin):
+    """MLA absorbed decode: attention in latent space (no k/v expansion).
+    cos/sin are single-row tables for the current position (index 0)."""
+    m = cfg.mla
+    b = x.shape[0]
+    pos = jnp.zeros((b, 1), jnp.int32)
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])[:, 0]  # (B,H,nope+rope)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope[:, None], cos, sin, pos)[:, 0]
+
+    ckv_new = rms_norm(x @ p["w_dkv"], p["kv_norm"])  # (B,1,r)
+    kr_new = apply_rope((x @ p["w_kr"])[:, :, None, :], cos, sin, pos)[:, :, 0]  # (B,1,rope)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, ckv_new, cache_len, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache_kr, kr_new, cache_len, axis=1)
+
+    # Absorb W_uk into q: scores = (q_nope @ W_uk^T) . ckv + q_rope . k_rope
+    q_lat = jnp.einsum("bhe,rhe->bhr", q_nope, p["w_uk"])  # (B,H,r)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    s = (jnp.einsum("bhr,bkr->bhk", q_lat, ckv)
+         + jnp.einsum("bhe,bke->bhk", q_rope, kr)).astype(jnp.float32) * scale
+    valid = jnp.arange(ckv.shape[1])[None] < (cache_len + 1)
+    s = jnp.where(valid[:, None], s, attn_lib.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(ckv.dtype)
+    o_lat = jnp.einsum("bhk,bkr->bhr", pr, ckv)  # (B,H,r)
+    o = jnp.einsum("bhr,rhe->bhe", o_lat, p["w_uv"])  # (B,H,v_dim)
+    out = jnp.einsum("bhe,hed->bd", o, p["w_o"])[:, None]
+    return out, ckv, kr
+
+
+def make_serve_step(cfg: LMConfig):
+    """decode: (params, cache, tokens (B,1)) -> (logits (B,V), new cache)."""
+
+    def serve_step(params, cache, tokens):
+        x = params["embed"][tokens]  # (B,1,d)
+        cache_len = cache["length"]
+        # Single-row rope table for the current position (avoids a
+        # (max_len, d/2) table per decode step at 500k context).
+        cos, sin = rope_row(
+            cache_len, cfg.mla.qk_rope_dim if cfg.mla else cfg.head_dim,
+            cfg.rope_theta,
+        )
+        new_cache: Dict[str, Any] = {"length": cache_len + 1}
+
+        def run_layer(p, x, layer_cache):
+            h = _apply_norm(cfg, p["ln1"], x)
+            if cfg.mla is not None:
+                a, ckv, kr = _decode_attn_mla(
+                    cfg, p["attn"], h, layer_cache["ckv"], layer_cache["k_rope"],
+                    cache_len, cos, sin)
+                upd = {"ckv": ckv, "k_rope": kr}
+            else:
+                a, ck, cv = _decode_attn_gqa(
+                    cfg, p["attn"], h, layer_cache["k"], layer_cache["v"],
+                    cache_len, cos, sin)
+                upd = {"k": ck, "v": cv}
+            if cfg.parallel_block:
+                f, _ = _ffn_block(cfg, p, h)
+                return x + a + f, upd
+            x = x + a
+            f, _ = _ffn_block(cfg, p, _apply_norm(cfg, p["ln2"], x))
+            return x + f, upd
+
+        if cfg.first_k_dense:
+            dense_upds = []
+            for i in range(cfg.first_k_dense):
+                lc = jax.tree_util.tree_map(lambda c: c[i], cache["dense"])
+                x, upd = run_layer(params[f"dense_layer_{i}"], x, lc)
+                dense_upds.append(upd)
+            new_cache["dense"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *dense_upds
+            )
+
+        if "layers" in params:
+            def body(x, xs):
+                layer_p, layer_cache = xs
+                x, upd = run_layer(layer_p, x, layer_cache)
+                return x, upd
+
+            x, scan_upd = jax.lax.scan(body, x, (params["layers"], cache["scan"]))
+            new_cache["scan"] = scan_upd
+
+        h = _apply_norm(cfg, params["final_norm"], x)
+        logits = (h[:, 0] @ _unembed(cfg, params)).astype(jnp.float32)
+        return logits[:, : cfg.vocab], new_cache
+
+    return serve_step
+
+
+def make_prefill(cfg: LMConfig):
+    """prefill: (params, tokens (B,S)) -> (hidden (B,S,d),) -- inference
+    forward (no loss); used by the prefill_32k shape."""
+
+    def prefill(params, tokens):
+        hidden, _ = forward_hidden(cfg, params, tokens)
+        logits_last = (hidden[:, -1] @ _unembed(cfg, params)).astype(jnp.float32)
+        return logits_last[:, : cfg.vocab]
+
+    return prefill

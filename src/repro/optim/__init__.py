@@ -1,0 +1,15 @@
+"""Hand-built optimizers (no optax offline).
+
+Each factory returns an `Optimizer(init, step)` pair operating on pytrees.
+`step(params, grads, state) -> (new_params, new_state)`. The Adam update can
+route through the fused Pallas aggregation kernel (repro.kernels.agg_adam)
+when `fused=True` -- that kernel is the paper's hot op (sum worker gradients
++ apply update in one pass over the tensor).
+"""
+
+from .base import Optimizer, OptState
+from .sgd import sgd
+from .adam import adam, adamw
+from .adagrad import adagrad
+
+__all__ = ["Optimizer", "OptState", "sgd", "adam", "adamw", "adagrad"]

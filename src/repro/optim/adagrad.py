@@ -1,0 +1,41 @@
+"""Adagrad -- the classic PS-era optimizer; standard for DLRM embeddings."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+
+class AdagradState(NamedTuple):
+    accum: object
+    count: jnp.ndarray
+
+
+def adagrad(lr: float, eps: float = 1e-10, initial_accum: float = 0.0) -> Optimizer:
+    def init(params):
+        return AdagradState(
+            accum=jax.tree_util.tree_map(
+                lambda p: jnp.full(p.shape, initial_accum, jnp.float32), params
+            ),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def step(params, grads, state):
+        def upd(p, g, a):
+            g32 = g.astype(jnp.float32)
+            a = a + jnp.square(g32)
+            new_p = p.astype(jnp.float32) - lr * g32 / (jnp.sqrt(a) + eps)
+            return new_p.astype(p.dtype), a
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.accum)
+        treedef = jax.tree_util.tree_structure(params)
+        flat = treedef.flatten_up_to(out)
+        new_params = treedef.unflatten([o[0] for o in flat])
+        new_accum = treedef.unflatten([o[1] for o in flat])
+        return new_params, AdagradState(new_accum, state.count + 1)
+
+    return Optimizer(init=init, step=step, name="adagrad")

@@ -1,0 +1,82 @@
+"""Adam / AdamW.
+
+Moments are kept in fp32 regardless of parameter dtype (mixed-precision
+training with bf16 params); the update is computed in fp32 and cast back.
+`fused=True` routes the elementwise update through the Pallas agg_adam kernel
+(interpret mode on CPU) -- numerically identical, used to validate the
+kernel against this reference path.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    count: jnp.ndarray
+
+
+def _adam_update(p, g, mu, nu, count, lr, b1, b2, eps, wd):
+    g32 = g.astype(jnp.float32)
+    mu = b1 * mu + (1 - b1) * g32
+    nu = b2 * nu + (1 - b2) * jnp.square(g32)
+    t = count.astype(jnp.float32)
+    mu_hat = mu / (1 - b1 ** t)
+    nu_hat = nu / (1 - b2 ** t)
+    upd = mu_hat / (jnp.sqrt(nu_hat) + eps)
+    if wd:
+        upd = upd + wd * p.astype(jnp.float32)
+    new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+    return new_p, mu, nu
+
+
+def adam(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    fused: bool = False,
+) -> Optimizer:
+    def init(params):
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            mu=jax.tree_util.tree_map(zeros32, params),
+            nu=jax.tree_util.tree_map(zeros32, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def step(params, grads, state):
+        count = state.count + 1
+        if fused:
+            from repro.kernels.agg_adam import ops as agg_ops
+
+            def upd(p, g, mu, nu):
+                return agg_ops.adam_update(
+                    p, g, mu, nu, count, lr=lr, b1=b1, b2=b2, eps=eps, wd=weight_decay
+                )
+        else:
+            def upd(p, g, mu, nu):
+                return _adam_update(p, g, mu, nu, count, lr, b1, b2, eps, weight_decay)
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+        # out is a pytree of (p, mu, nu) tuples; unzip it.
+        treedef = jax.tree_util.tree_structure(params)
+        flat = treedef.flatten_up_to(out)
+        new_params = treedef.unflatten([o[0] for o in flat])
+        new_mu = treedef.unflatten([o[1] for o in flat])
+        new_nu = treedef.unflatten([o[2] for o in flat])
+        return new_params, AdamState(new_mu, new_nu, count)
+
+    return Optimizer(init=init, step=step, name="adam")
+
+
+def adamw(lr: float, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)._replace(name="adamw")

@@ -1,0 +1,30 @@
+"""Optimizer interface shared by sgd/adam/adagrad and the PS runtime."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+
+PyTree = Any
+OptState = Any
+
+
+class Optimizer(NamedTuple):
+    """A pytree optimizer.
+
+    init(params) -> state
+    step(params, grads, state) -> (new_params, new_state)
+    """
+
+    init: Callable[[PyTree], OptState]
+    step: Callable[[PyTree, PyTree, OptState], Tuple[PyTree, OptState]]
+    name: str = "optimizer"
+
+
+def tree_zeros_like(params: PyTree, dtype=None) -> PyTree:
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params
+    )

@@ -1,0 +1,41 @@
+"""SGD with optional momentum and weight decay."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, tree_zeros_like
+
+
+class SgdState(NamedTuple):
+    momentum: object
+    count: jnp.ndarray
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = tree_zeros_like(params) if momentum else None
+        return SgdState(momentum=mom, count=jnp.zeros((), jnp.int32))
+
+    def step(params, grads, state):
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params
+            )
+        if momentum:
+            new_mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state.momentum, grads
+            )
+            upd = new_mom
+        else:
+            new_mom = None
+            upd = grads
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p - lr * u.astype(p.dtype)), params, upd
+        )
+        return new_params, SgdState(new_mom, state.count + 1)
+
+    return Optimizer(init=init, step=step, name="sgd")

@@ -1,0 +1,11 @@
+"""Data-plane Parameter Service runtime (JAX/SPMD).
+
+sharding.py     per-tensor sharding rules: the control plane's assignment
+                plan realized as NamedShardings (TP + FSDP "aggregation"
+                placement per tensor).
+runtime.py      paper-faithful flat PS runtime: pull = all-gather,
+                push = reduce-scatter, update shard-local on the owner
+                segments chosen by the assignment plan.
+compression.py  int8 gradient compression with error feedback (push path).
+elastic.py      tensor migration / elastic re-mesh via resharding.
+"""

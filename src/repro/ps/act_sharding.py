@@ -1,0 +1,71 @@
+"""Activation-sharding constraints, injectable per-mesh.
+
+Model code calls `constrain(x, "dp", None, "tp", ...)` with symbolic axis
+roles; when a mesh context has been `activate()`d the roles resolve to real
+mesh axes and become `with_sharding_constraint`s; with no context (smoke
+tests on 1 CPU device) they are no-ops. Dims that do not divide evenly by
+the axis size degrade to None automatically, so the same model code serves
+every mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current():
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, enabled: bool = True):
+    """Enable activation constraints for code traced inside this context.
+
+    Roles: "dp" -> batch/data axes (("pod","data") if present), "tp" ->
+    "model", "all" -> every axis.
+    """
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    prev = _current()
+    _STATE.ctx = {"mesh": mesh, "dp": tuple(dp), "tp": ("model",),
+                  "all": tuple(mesh.axis_names)} if enabled else None
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, *roles: Optional[str]):
+    """Apply a sharding constraint with symbolic axis roles (or None)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    spec = []
+    for dim, role in enumerate(roles):
+        if role is None:
+            spec.append(None)
+            continue
+        axes = ctx[role]
+        if dim < x.ndim and x.shape[dim] % _axis_size(mesh, axes) == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def enabled() -> bool:
+    return _current() is not None

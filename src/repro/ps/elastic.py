@@ -1,0 +1,63 @@
+"""Elastic re-mesh + tensor migration in the data plane.
+
+`migrate_flat_state` re-lays a PS flat state from one FlatPlan to another
+(the data-plane half of the paper's tensor migration: the owner segments
+move, everything else stays). `reshard_tree` moves any pytree onto new
+shardings (elastic scale up/down, spot-instance drain from §6).
+
+Both are expressible as pure gathers + device_put, so the runtime can issue
+them while workers compute (the paper's hidden-copy window); the benchmark
+(benchmarks/table3_migration.py) measures the visible stall against the
+checkpoint-restart strawman.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .runtime import FlatPlan
+
+
+def _perm_old_to_new(old: FlatPlan, new: FlatPlan) -> np.ndarray:
+    """index array `idx` with new_flat[i] = old_flat[idx[i]] (pad -> 0)."""
+    old_by_key = {s.key: s for s in old.segments}
+    idx = np.zeros(new.total_len, dtype=np.int64)
+    for seg in new.segments:
+        o = old_by_key[seg.key]
+        src = o.shard * old.shard_len + o.offset
+        dst = seg.shard * new.shard_len + seg.offset
+        idx[dst : dst + seg.size] = np.arange(src, src + seg.size)
+    return idx
+
+
+def migrate_flat_state(state: Dict[str, Any], old: FlatPlan, new: FlatPlan):
+    """Move a PS state onto a new assignment plan (tensor migration)."""
+    idx = jnp.asarray(_perm_old_to_new(old, new))
+
+    def move(x):
+        if x.ndim == 0:
+            return x
+        return jnp.take(x, idx, axis=0)
+
+    return {k: (move(v) if k != "count" else v) for k, v in state.items()}
+
+
+def migration_bytes(old: FlatPlan, new: FlatPlan, bytes_per_element: int = 12) -> int:
+    """Bytes that actually cross shards (master copy + both Adam moments)."""
+    old_by_key = {s.key: s for s in old.segments}
+    moved = 0
+    for seg in new.segments:
+        if old_by_key[seg.key].shard != seg.shard:
+            moved += seg.size * bytes_per_element
+    return moved
+
+
+def reshard_tree(tree, shardings):
+    """Move a pytree onto new shardings (elastic re-mesh / migration)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, shardings
+    )

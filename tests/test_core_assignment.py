@@ -1,0 +1,287 @@
+"""Control-plane unit + property tests: Pseudocode 1, cyclic execution,
+scaling, migration protocol, IP model."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AggTask,
+    Aggregator,
+    AssignmentConfig,
+    JobProfile,
+    assign_job,
+    balanced_shard_assignment,
+    cyclic_loss,
+    effective_iteration,
+    iterations_per_cycle,
+    round_robin_shard_assignment,
+    shard_imbalance,
+)
+from repro.core import ip_model, perf_model, scaling
+from repro.core.cyclic import admit_late_request, build_schedule
+from repro.core.migration import (
+    MigrationState,
+    ProtocolError,
+    TensorMigration,
+    checkpoint_restart_cost,
+    migration_cost,
+)
+
+
+def _job(job_id, duration, exec_times, n_workers=2, required=1):
+    tasks = [
+        AggTask(job_id, i, f"t{i}", nbytes=int(e * 1e9), exec_time=e)
+        for i, e in enumerate(exec_times)
+    ]
+    return JobProfile(job_id, "m", duration, tasks, n_workers, required)
+
+
+def _alloc_factory():
+    counter = [0]
+
+    def alloc():
+        counter[0] += 1
+        return Aggregator(agg_id=f"a{counter[0]}")
+
+    return alloc
+
+
+# ---------------------------------------------------------------- cyclic math
+def test_paper_toy_example_cycles():
+    """Figure 5: J1 iter=6 agg=2, J2 iter=12 agg=3; packed cycle is 12 and J1
+    runs twice per cycle."""
+    assert iterations_per_cycle(12.0, 6.0) == 2
+    assert effective_iteration(12.0, 6.0) == 6.0  # no loss: 12 divides evenly
+    assert cyclic_loss(12.0, 6.0) == 0.0
+
+
+def test_paper_17pct_loss_example():
+    """§3.3.1: a task with D=5 joining a cycle of 12 gets d=6 -> ~17% loss."""
+    d = effective_iteration(12.0, 5.0)
+    assert d == 6.0
+    assert abs(cyclic_loss(12.0, 5.0) - 1.0 / 6.0) < 1e-12
+
+
+@given(
+    cycle=st.floats(0.01, 1e3),
+    duration=st.floats(0.01, 1e3),
+)
+def test_effective_iteration_invariants(cycle, duration):
+    c = max(cycle, duration)  # cycle is always >= any member's D
+    d = effective_iteration(c, duration)
+    reps = iterations_per_cycle(c, duration)
+    assert d >= duration - 1e-9  # never faster than standalone
+    assert reps * d == pytest.approx(c)  # executions tile the cycle exactly
+    assert 0.0 <= cyclic_loss(c, duration) < 1.0
+
+
+# ------------------------------------------------------------- Pseudocode 1
+def test_assignment_packs_when_it_fits():
+    aggs = []
+    alloc = _alloc_factory()
+    j1 = _job("j1", 1.0, [0.3, 0.2])
+    j2 = _job("j2", 1.0, [0.25, 0.15])
+    assign_job(j1, aggs, alloc)
+    assign_job(j2, aggs, alloc)
+    assert len(aggs) == 1  # total load 0.9 fits one server
+    assert aggs[0].utilization <= 1.0 + 1e-9
+
+
+def test_assignment_spills_on_capacity():
+    aggs = []
+    alloc = _alloc_factory()
+    assign_job(_job("j1", 1.0, [0.7]), aggs, alloc)
+    assign_job(_job("j2", 1.0, [0.7]), aggs, alloc)
+    assert len(aggs) == 2  # 1.4 load cannot fit one unit server
+
+
+def test_assignment_rejects_cyclic_loss():
+    """A job with D=5 must not join an Aggregator whose cycle is 12 (17% loss
+    >= LossLimit)."""
+    aggs = []
+    alloc = _alloc_factory()
+    assign_job(_job("slow", 12.0, [0.5]), aggs, alloc)
+    assign_job(_job("fast", 5.0, [0.1]), aggs, alloc)
+    assert len(aggs) == 2  # forced onto its own Aggregator
+
+
+def test_assignment_accepts_harmonic_periods():
+    aggs = []
+    alloc = _alloc_factory()
+    assign_job(_job("slow", 12.0, [0.5]), aggs, alloc)
+    assign_job(_job("fast", 6.0, [0.1]), aggs, alloc)  # 12/6 integral: no loss
+    assert len(aggs) == 1
+
+
+def test_best_fit_prefers_fullest_fitting_aggregator():
+    aggs = []
+    alloc = _alloc_factory()
+    assign_job(_job("j1", 1.0, [0.6]), aggs, alloc)
+    assign_job(_job("j2", 1.0, [0.2]), aggs, alloc)  # packs with j1 (best fit)
+    assert len(aggs) == 1
+    assign_job(_job("j3", 1.0, [0.5]), aggs, alloc)  # must spill
+    assert len(aggs) == 2
+    # j4 task of 0.15: best fit is the fuller aggregator that still fits.
+    assign_job(_job("j4", 1.0, [0.15]), aggs, alloc)
+    assert len(aggs) == 2
+    loads = sorted(a.busy_time() for a in aggs)
+    assert loads == pytest.approx([0.5, 0.95])
+
+
+@settings(deadline=None, max_examples=60)
+@given(
+    execs=st.lists(st.floats(0.01, 0.5), min_size=1, max_size=12),
+    duration=st.floats(0.5, 4.0),
+)
+def test_assignment_never_overloads(execs, duration):
+    """Property: after any single-job assignment, every Aggregator satisfies
+    the App. C capacity constraint W_n <= capacity * C_n."""
+    aggs = []
+    assign_job(_job("j", duration, execs), aggs, _alloc_factory())
+    for a in aggs:
+        assert a.busy_time() <= a.capacity * a.cycle + 1e-9
+    # and every task landed exactly once
+    placed = sum(len(a.tasks) for a in aggs)
+    assert placed == len(execs)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n_jobs=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_multi_job_losses_bounded(n_jobs, seed):
+    """Property: predicted loss of every packed job stays below LossLimit
+    after admission with the feedback loop."""
+    import random
+
+    rng = random.Random(seed)
+    aggs, jobs = [], {}
+    alloc = _alloc_factory()
+    for i in range(n_jobs):
+        duration = rng.choice([0.5, 1.0, 2.0, 4.0])
+        execs = [rng.uniform(0.02, 0.3) for _ in range(rng.randint(1, 8))]
+        job = _job(f"j{i}", duration, execs)
+        scaling.admit_job(job, aggs, jobs, alloc)
+        jobs[job.job_id] = job
+    losses = perf_model.predict_all_losses(jobs, aggs)
+    assert max(losses.values()) < AssignmentConfig().loss_limit + 1e-9
+
+
+# ------------------------------------------------------ balanced vs RR shards
+def test_balanced_beats_round_robin_on_skew():
+    """Fig. 7: AutoPS's balanced placement beats ps-lite round-robin on models
+    with skewed tensor sizes (the up-to-1.17x single-job speedup)."""
+    job = _job("j", 1.0, [0.5, 0.04, 0.04, 0.3, 0.02, 0.1])
+    rr = shard_imbalance(round_robin_shard_assignment(job, 2))
+    bal = shard_imbalance(balanced_shard_assignment(job, 2))
+    assert bal <= rr
+    assert bal < 1.1  # LPT greedy is near-balanced here
+
+
+# ------------------------------------------------------------------- scaling
+def test_job_exit_recycles_aggregators():
+    aggs, jobs = [], {}
+    alloc = _alloc_factory()
+    for i in range(3):
+        job = _job(f"j{i}", 1.0, [0.4])
+        scaling.admit_job(job, aggs, jobs, alloc)
+        jobs[job.job_id] = job
+    assert len(aggs) == 2  # 1.2 load over unit servers
+    jobs.pop("j0")
+    scaling.release_job("j0", aggs, jobs)
+    assert len(aggs) == 1  # 0.8 load consolidates after exit
+
+
+def test_recycle_respects_loss_limit():
+    aggs, jobs = [], {}
+    alloc = _alloc_factory()
+    j_slow = _job("slow", 12.0, [0.5])
+    j_fast = _job("fast", 5.0, [0.4])
+    for j in (j_slow, j_fast):
+        scaling.admit_job(j, aggs, jobs, alloc)
+        jobs[j.job_id] = j
+    assert len(aggs) == 2
+    # Nothing exits; recycling must not merge them (17% cyclic loss).
+    n = scaling.recycle_aggregators(aggs, jobs)
+    assert n == 0 and len(aggs) == 2
+
+
+# ----------------------------------------------------------------- outliers
+def test_late_request_executes_in_spare_slots():
+    agg = Aggregator("a0")
+    job = _job("j", 1.0, [0.2, 0.1])
+    for t in job.tasks:
+        agg.add_task(t, job.iteration_duration)
+    sched = build_schedule(agg)
+    assert sched.utilization == pytest.approx(0.3)
+    out = admit_late_request(sched, arrival=0.5, exec_time=0.1)
+    assert out.executed_now and out.postponed_iterations == 0
+
+
+def test_late_request_postpones_when_full():
+    agg = Aggregator("a0")
+    job = _job("j", 1.0, [0.5, 0.45])
+    for t in job.tasks:
+        agg.add_task(t, job.iteration_duration)
+    sched = build_schedule(agg)
+    out = admit_late_request(sched, arrival=0.9, exec_time=0.3)
+    assert not out.executed_now
+    assert out.postponed_iterations == 1  # worst case: one iteration (paper)
+
+
+# ---------------------------------------------------------------- migration
+def test_migration_protocol_order_enforced():
+    m = TensorMigration("j", 0, "a0", "a1")
+    with pytest.raises(ProtocolError):
+        m.advance(MigrationState.COPYING)  # must repoint Agents first
+    m.advance(MigrationState.INIT)
+    assert not m.update_allowed_on("a1")  # I2: stale master copy
+    m.advance(MigrationState.REPOINTED)
+    m.advance(MigrationState.COPYING)
+    assert not m.update_allowed_on("a1")
+    m.advance(MigrationState.COPY_DONE)
+    assert m.update_allowed_on("a1")  # now legal
+    assert not m.update_allowed_on("a0")  # old owner must never update again
+    m.run_to_completion()
+    assert m.state is MigrationState.COMPLETE
+
+
+def test_migration_hidden_by_compute_window():
+    """Table 3: migration visible stall is tens of ms, vs tens of seconds for
+    checkpoint-restart."""
+    # VGG19-scale: 575 MB over a 100 Gbps link inside a 0.5 s fwd/bwd window.
+    cost = migration_cost(575_000_000, link_bandwidth=12.5e9, compute_window=0.5)
+    assert cost.visible_stall < 0.050  # paper: 21.5 ms for VGG19
+    naive = checkpoint_restart_cost(575_000_000, storage_bandwidth=1e9)
+    assert naive > 10.0
+    assert naive / max(cost.visible_stall, 1e-9) > 100
+
+
+# ----------------------------------------------------------------- IP model
+def test_heuristic_close_to_bruteforce_optimum():
+    jobs = [
+        _job("j1", 2.0, [0.6, 0.3]),
+        _job("j2", 3.0, [0.5, 0.2]),
+    ]
+    best = ip_model.brute_force(jobs, n_aggregators=2)
+    assert best is not None
+    _, ev_opt = best
+
+    aggs = []
+    alloc = _alloc_factory()
+    running = {}
+    for j in jobs:
+        scaling.admit_job(j, aggs, running, alloc)
+        running[j.job_id] = j
+    assignment = {}
+    ids = {a.agg_id: i for i, a in enumerate(aggs)}
+    for a in aggs:
+        for key in a.tasks:
+            assignment[key] = ids[a.agg_id]
+    ev_h = ip_model.evaluate(jobs, assignment, len(aggs))
+    assert ev_h.feasible
+    # Heuristic stays within LossLimit of the optimum (usually equal).
+    assert ev_h.max_loss <= ev_opt.max_loss + 0.1

@@ -1,0 +1,84 @@
+"""Unit tests for the trip-weighted HLO cost model (the roofline's source)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import HloCostModel, analyze
+
+
+def _compiled_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    cost = analyze(_compiled_text(f, x, w))
+    assert cost.flops == pytest.approx(10 * 2 * 128 * 256 * 256)
+
+
+def test_nested_scan_flops():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    cost = analyze(_compiled_text(g, x, w))
+    assert cost.flops == pytest.approx(20 * 2 * 64 * 128 * 128)
+
+
+def test_plain_matmul_flops_and_bytes():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    cost = analyze(_compiled_text(f, a, b))
+    assert cost.flops == pytest.approx(2 * 64 * 32 * 16)
+    # operands + result, give or take copies
+    min_bytes = (64 * 32 + 32 * 16 + 64 * 16) * 4
+    assert cost.bytes >= min_bytes
+
+
+def test_dynamic_slice_counted_at_slice_size():
+    """Scan xs-indexing must not charge the full stacked tensor per trip."""
+    def f(stack):
+        def body(acc, row):
+            return acc + jnp.sum(row), None
+        out, _ = jax.lax.scan(body, jnp.zeros(()), stack)
+        return out
+
+    stack = jax.ShapeDtypeStruct((64, 1024, 32), jnp.float32)
+    cost = analyze(_compiled_text(f, stack))
+    full = 64 * 1024 * 32 * 4
+    # Traffic should be O(one pass over the stack), not O(trips x stack).
+    assert cost.bytes < 10 * full, cost.bytes
+
+
+def test_tuple_shape_lines_parse():
+    """Tuple results with /*index=N*/ comments (the historical parser bug)."""
+    def f(x):
+        def body(c, _):
+            a, b, d, e, g, h, i = c
+            return (a + 1, b * 2, d - 1, e, g, h, jnp.tanh(i @ i)), None
+        init = tuple(jnp.ones((4,)) * x[0] for _ in range(6)) + (
+            jnp.ones((8, 8)) * x[0],)
+        out, _ = jax.lax.scan(body, init, None, length=3)
+        return sum(o.sum() for o in out)  # keep every carry element alive
+
+    cost = analyze(_compiled_text(f, jax.ShapeDtypeStruct((1,), jnp.float32)))
+    assert cost.flops == pytest.approx(3 * 2 * 8 * 8 * 8)

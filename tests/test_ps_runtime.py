@@ -1,0 +1,136 @@
+"""PS data-plane tests: flat plan round-trips, PS training step,
+compression with error feedback, migration equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ps.compression import ErrorFeedback, compress_decompress, quantize_int8, dequantize_int8
+from repro.ps.elastic import migrate_flat_state, migration_bytes
+from repro.ps.runtime import (
+    build_flat_plan,
+    flatten_tree,
+    init_ps_state,
+    make_ps_train_step,
+    plan_padding_waste,
+    unflatten_tree,
+)
+
+
+def _params(key, sizes=(100, 37, 260, 8)):
+    ks = jax.random.split(key, len(sizes))
+    return {f"t{i}": jax.random.normal(k, (n,)) for i, (k, n) in
+            enumerate(zip(ks, sizes))}
+
+
+# ------------------------------------------------------------ plan round-trip
+@settings(deadline=None, max_examples=25)
+@given(
+    sizes=st.lists(st.integers(1, 300), min_size=1, max_size=8),
+    n_shards=st.integers(1, 4),
+    mode=st.sampled_from(["balanced", "round_robin"]),
+)
+def test_flatten_unflatten_roundtrip(sizes, n_shards, mode):
+    params = _params(jax.random.PRNGKey(0), tuple(sizes))
+    plan = build_flat_plan(params, n_shards, mode=mode)
+    flat = flatten_tree(plan, params)
+    assert flat.shape[0] == plan.total_len
+    back = unflatten_tree(plan, flat, params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(params[k]))
+
+
+def test_balanced_plan_wastes_less_padding():
+    # Skewed tensor sizes: round-robin's biggest shard forces more padding.
+    params = {f"t{i}": jnp.zeros((n,)) for i, n in
+              enumerate([1000, 10, 10, 900, 20, 15])}
+    bal = plan_padding_waste(build_flat_plan(params, 2, mode="balanced", pad_to=1))
+    rr = plan_padding_waste(build_flat_plan(params, 2, mode="round_robin", pad_to=1))
+    assert bal <= rr
+
+
+# --------------------------------------------------------------- PS training
+def _quad_loss(params, batch):
+    # Simple convex problem: params should move toward batch["target"].
+    diffs = [jnp.sum((params[k] - batch["target"][k]) ** 2) for k in params]
+    return sum(diffs)
+
+
+@pytest.mark.parametrize("compression", [None, "bf16", "int8"])
+def test_ps_train_step_converges(compression):
+    params = _params(jax.random.PRNGKey(0))
+    target = jax.tree_util.tree_map(lambda p: p * 0 + 1.0, params)
+    plan = build_flat_plan(params, n_shards=2)
+    state = init_ps_state(plan, params, push_compression=compression)
+    step = jax.jit(make_ps_train_step(
+        _quad_loss, plan, params, lr=0.05, push_compression=compression))
+    losses = []
+    for _ in range(60):
+        state, m = step(state, {"target": target})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.05 * losses[0], (losses[0], losses[-1])
+
+
+def test_migration_preserves_training_state():
+    params = _params(jax.random.PRNGKey(1))
+    plan_a = build_flat_plan(params, 2, mode="round_robin")
+    plan_b = build_flat_plan(params, 3, mode="balanced")
+    state = init_ps_state(plan_a, params)
+    state["mu"] = state["mu"] + 0.5  # non-trivial moments
+    migrated = migrate_flat_state(state, plan_a, plan_b)
+    # Every tensor readable identically from the new layout.
+    a = unflatten_tree(plan_a, state["flat"], params)
+    b = unflatten_tree(plan_b, migrated["flat"], params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert migration_bytes(plan_a, plan_b) >= 0
+
+
+def test_ps_training_survives_live_migration():
+    """Train - migrate mid-run - keep training: loss keeps decreasing and
+    matches an unmigrated run exactly (migration is semantically free)."""
+    params = _params(jax.random.PRNGKey(0))
+    target = jax.tree_util.tree_map(lambda p: p * 0 + 1.0, params)
+    batch = {"target": target}
+
+    plan_a = build_flat_plan(params, 2, mode="round_robin")
+    plan_b = build_flat_plan(params, 2, mode="balanced")
+    step_a = jax.jit(make_ps_train_step(_quad_loss, plan_a, params, lr=0.05))
+    step_b = jax.jit(make_ps_train_step(_quad_loss, plan_b, params, lr=0.05))
+
+    s_mig = init_ps_state(plan_a, params)
+    s_ref = init_ps_state(plan_a, params)
+    for i in range(20):
+        s_ref, m_ref = step_a(s_ref, batch)
+        if i == 10:
+            s_mig = migrate_flat_state(s_mig, plan_a, plan_b)
+        s_mig, m_mig = (step_b if i >= 10 else step_a)(s_mig, batch)
+        np.testing.assert_allclose(float(m_ref["loss"]), float(m_mig["loss"]),
+                                   rtol=1e-5)
+
+
+# --------------------------------------------------------------- compression
+def test_int8_quantization_bounded_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (10000,)) * 3.0
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    blockmax = jnp.max(jnp.abs(x))
+    assert float(jnp.max(jnp.abs(back - x))) <= float(blockmax) / 127.0 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """EF compensates quantization: the accumulated transmitted signal
+    tracks the accumulated true gradient."""
+    rng = np.random.default_rng(0)
+    ef = ErrorFeedback((512,))
+    total_true = np.zeros(512)
+    total_sent = np.zeros(512)
+    for _ in range(50):
+        g = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+        total_true += np.asarray(g)
+        total_sent += np.asarray(ef.step(g, "int8"))
+    # Residual is bounded by one round's worth of quantization error.
+    err = np.abs(total_sent - total_true).max()
+    assert err < 0.2, err
