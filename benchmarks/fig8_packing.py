@@ -1,7 +1,13 @@
-"""Fig. 8 + Table 2: Aggregator counts / CPU reduction under multi-job packing."""
+"""Fig. 8 + Table 2: Aggregator counts / CPU reduction under multi-job packing.
+
+The data-plane columns (shards, padding waste) come from the *compiled*
+ServicePlan (`ParameterService.compile_plan()`), i.e. the exact layout the
+shared flat aggregation space would use -- not a synthetic re-assignment.
+"""
 
 from repro.configs.paper_workloads import make_job
 from repro.core import ParameterService
+from repro.ps.plan import plan_padding_waste
 
 PAPER_TABLE2 = {"alexnet": 0.375, "vgg19": 0.5, "awd-lm": 0.5, "bert": 0.5}
 
@@ -18,9 +24,15 @@ def rows():
     for model in ("alexnet", "vgg19", "awd-lm", "bert"):
         for n in (2, 3, 4):
             svc = _run(model, n, 2, 2)
+            plan = svc.compile_plan()
             out.append((f"fig8/aggregators/{model}-{n}jobs-2s2w",
                         str(svc.n_aggregators),
                         f"baseline={2 * n} reduction={svc.cpu_reduction():.3f}"))
+            out.append((f"fig8/plan_waste/{model}-{n}jobs-2s2w",
+                        f"{plan_padding_waste(plan):.4f}",
+                        f"{len(plan.segments)} segments over "
+                        f"{plan.n_shards} shards, "
+                        f"{plan.payload_elements * 4 / 1e6:.1f} MB payload"))
     for model, expected in PAPER_TABLE2.items():
         svc = _run(model, 2, 4, 4)
         out.append((f"table2/reduction/{model}-2jobs-4s4w",

@@ -1,0 +1,87 @@
+"""Plan-scaling microbenchmark: packing cost on a 2k-tensor, 256-shard plan.
+
+The old `flatten_tree` rescanned every segment once per shard
+(O(n_shards * n_segments) -- 512k segment visits here); precomputing
+`FlatPlan.shard_segments` makes packing O(n_segments).  The host-side
+packing loops are timed with numpy payloads to isolate the scan cost from
+JAX op-dispatch overhead; the end-to-end `flatten_tree` time is reported
+alongside.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ps.runtime import build_flat_plan, flatten_tree
+
+N_TENSORS = 2000
+N_SHARDS = 256
+
+
+def _pack_quadratic(plan, by_key):
+    """Pre-refactor reference: rescan all segments for every shard."""
+    parts = []
+    for s in range(plan.n_shards):
+        used = 0
+        for seg in plan.segments:
+            if seg.shard != s:
+                continue
+            parts.append(by_key[seg.key])
+            used += seg.size
+        if used < plan.shard_len:
+            parts.append(np.zeros(plan.shard_len - used, np.float32))
+    return np.concatenate(parts)
+
+
+def _pack_linear(plan, by_key):
+    """Post-refactor: walk the precomputed per-shard segment lists."""
+    parts = []
+    for shard_idx in plan.shard_segments:
+        used = 0
+        for i in shard_idx:
+            seg = plan.segments[i]
+            parts.append(by_key[seg.key])
+            used += seg.size
+        if used < plan.shard_len:
+            parts.append(np.zeros(plan.shard_len - used, np.float32))
+    return np.concatenate(parts)
+
+
+def _time(fn, repeats=5):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(8, 512, size=N_TENSORS)
+    tree = {f"t{i:04d}": rng.standard_normal(n).astype(np.float32)
+            for i, n in enumerate(sizes)}
+    plan = build_flat_plan(tree, N_SHARDS, mode="balanced", pad_to=8)
+    plan.shard_segments  # build the index outside the timed region
+
+    by_key = dict(tree)
+    t_quad = _time(lambda: _pack_quadratic(plan, by_key))
+    t_lin = _time(lambda: _pack_linear(plan, by_key))
+    np.testing.assert_array_equal(_pack_quadratic(plan, by_key),
+                                  _pack_linear(plan, by_key))
+
+    jtree = jax.tree_util.tree_map(jnp.asarray, tree)
+    t_e2e = _time(
+        lambda: jax.block_until_ready(flatten_tree(plan, jtree)), repeats=3)
+
+    label = f"{N_TENSORS}t-{N_SHARDS}s"
+    return [
+        (f"plan/pack_quadratic_ms/{label}", f"{t_quad * 1e3:.1f}",
+         "pre-refactor O(shards*segments) scan"),
+        (f"plan/pack_linear_ms/{label}", f"{t_lin * 1e3:.1f}",
+         f"precomputed shard_segments; {t_quad / max(t_lin, 1e-9):.1f}x faster"),
+        (f"plan/flatten_tree_e2e_ms/{label}", f"{t_e2e * 1e3:.1f}",
+         "end-to-end (JAX op dispatch dominates)"),
+    ]

@@ -13,6 +13,7 @@ def main() -> None:
         fig9_perf_loss,
         fig10_case_study,
         fig11_trace_sim,
+        plan_scaling,
         roofline,
         table3_migration,
     )
@@ -25,6 +26,7 @@ def main() -> None:
         ("fig10", fig10_case_study),
         ("fig11", fig11_trace_sim),
         ("table3", table3_migration),
+        ("plan", plan_scaling),
         ("appd", appd_interference),
         ("roofline", roofline),
     ]

@@ -1,10 +1,13 @@
 """Table 3 + App. B: tensor-migration overhead vs checkpoint-restart.
 
-Measures, on the real data plane (qwen1.5-0.5b smoke-size PS state):
-  * migration: relayout of the flat PS state between two assignment plans
-    (jnp.take permutation), wall-clock on this host + the overlap model's
+Measures, on the real data plane:
+  * migration: relayout of the shared flat PS state between two *compiled*
+    ServicePlans -- the plans a live ParameterService produced before and
+    after a placement change (job exit + Aggregator recycling), not a
+    synthetic re-assignment.  Wall-clock on this host + the overlap model's
     worker-visible stall for the published testbed parameters;
-  * strawman: full checkpoint save + restore through repro.checkpoint.
+  * strawman: full (plan, state) checkpoint save + cross-plan restore
+    through repro.checkpoint.
 """
 
 import tempfile
@@ -13,11 +16,24 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import restore_ps_checkpoint, save_ps_checkpoint
 from repro.configs.paper_workloads import model_bytes
+from repro.core import ParameterService
 from repro.core.migration import checkpoint_restart_cost, migration_cost
 from repro.ps.elastic import migrate_flat_state, migration_bytes
-from repro.ps.runtime import build_flat_plan, init_ps_state
+from repro.ps.runtime import init_shared_state, job_profile_from_tree
+
+# Two ~8M-parameter jobs (32 MB of master copy each); aggregation profiled
+# at 40 MB/s per server unit so packing decisions are non-degenerate.
+_SIZES = (3_000_000, 2_500_000, 1_000_000, 800_000, 500_000, 200_000)
+_AGG_THROUGHPUT = 4e7
+
+
+def _tree(key, sizes=_SIZES):
+    return {
+        f"t{i}": jax.random.normal(k, (n,))
+        for i, (k, n) in enumerate(zip(jax.random.split(key, len(sizes)), sizes))
+    }
 
 
 def rows():
@@ -32,19 +48,23 @@ def rows():
                     f"{cost.visible_stall * 1e3:.1f}",
                     f"paper: 13.6-43.8 ms; ckpt-restart {naive:.0f}s"))
 
-    # Measured on the data plane: a ~32M-param state (AWD-LM scale, 384 MB
-    # of master copy + moments), 4-shard plan change.
-    key = jax.random.PRNGKey(0)
-    params = {
-        f"t{i}": jax.random.normal(k, (n,))
-        for i, (k, n) in enumerate(zip(
-            jax.random.split(key, 6),
-            (13_000_000, 10_000_000, 7_000_000, 2_000_000, 500_000, 33_000),
-        ))
-    }
-    plan_a = build_flat_plan(params, n_shards=4, mode="round_robin")
-    plan_b = build_flat_plan(params, n_shards=4, mode="balanced")
-    state = init_ps_state(plan_a, params)
+    # Measured on the data plane: two jobs share one service; job A's exit
+    # triggers Aggregator recycling, so job B's tensors consolidate -- the
+    # replan every surviving job rides through without restart.
+    svc = ParameterService(total_budget=16, n_clusters=1)
+    trees = {jid: _tree(jax.random.PRNGKey(i))
+             for i, jid in enumerate(("a", "b"))}
+    for jid, tree in trees.items():
+        profile, specs = job_profile_from_tree(
+            jid, tree, required_servers=2, agg_throughput=_AGG_THROUGHPUT)
+        svc.register_job(profile, specs=specs)
+    plan_a = svc.compile_plan()
+    svc.job_exit("a")
+    plan_b = svc.compile_plan()
+
+    state = init_shared_state(plan_a)
+    state["flat"] = jax.random.normal(jax.random.PRNGKey(9), (plan_a.total_len,))
+    jax.block_until_ready(state["flat"])
 
     t0 = time.perf_counter()
     new_state = migrate_flat_state(state, plan_a, plan_b)
@@ -52,12 +72,13 @@ def rows():
     t_mig = time.perf_counter() - t0
     moved = migration_bytes(plan_a, plan_b)
     out.append(("table3/measured_migration_s", f"{t_mig:.4f}",
-                f"{moved / 1e6:.1f} MB of master+moments moved"))
+                f"{moved / 1e6:.1f} MB of master+moments crossed shards "
+                f"({plan_a.n_shards}->{plan_b.n_shards} aggregators)"))
 
     with tempfile.TemporaryDirectory() as d:
         t0 = time.perf_counter()
-        save_checkpoint(d, 0, state)
-        restored = restore_checkpoint(d, 0, jax.eval_shape(lambda: state))
+        save_ps_checkpoint(d, 0, plan_a, state)
+        _, restored = restore_ps_checkpoint(d, 0, plan=plan_b)
         jax.block_until_ready(restored["flat"])
         t_ckpt = time.perf_counter() - t0
     out.append(("table3/measured_ckpt_restart_s", f"{t_ckpt:.4f}",

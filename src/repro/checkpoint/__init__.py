@@ -1,9 +1,13 @@
 from .checkpoint import (
     save_checkpoint,
     restore_checkpoint,
+    save_ps_checkpoint,
+    restore_ps_checkpoint,
+    load_aux,
     latest_step,
     CheckpointManager,
 )
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+__all__ = ["save_checkpoint", "restore_checkpoint", "save_ps_checkpoint",
+           "restore_ps_checkpoint", "load_aux", "latest_step",
            "CheckpointManager"]

@@ -8,6 +8,11 @@ Design for 1000+ node runs:
   * elastic restore: leaves are loaded as full arrays and re-sharded onto
     whatever mesh the restoring job runs (mesh shape may differ from the
     saving job's -- checkpoint format is placement-free);
+  * plan-aware PS checkpoints: ``save_ps_checkpoint`` commits the shared
+    flat state together with the ServicePlan that laid it out, and
+    ``restore_ps_checkpoint`` migrates the state onto whatever plan the
+    restoring service compiled -- a checkpoint taken under one packing
+    restores under another;
   * integrity: restore verifies hashes (configurable off for speed);
   * retention: keep_last N steps, old steps garbage-collected after a
     successful commit;
@@ -30,6 +35,7 @@ import jax
 import numpy as np
 
 MANIFEST = "manifest.json"
+AUX = "aux.json"  # side-channel metadata committed atomically with the step
 
 
 def _leaf_key(path) -> str:
@@ -41,8 +47,11 @@ def _tree_paths(tree):
 
 
 def save_checkpoint(directory, step: int, tree, keep_last: Optional[int] = None,
-                    verify: bool = True) -> Path:
-    """Atomically save `tree` under directory/step_{step:08d}."""
+                    verify: bool = True, aux: Optional[Dict[str, Any]] = None) -> Path:
+    """Atomically save `tree` under directory/step_{step:08d}.
+
+    ``aux`` is arbitrary JSON metadata (e.g. the ServicePlan) committed in
+    the same atomic rename as the tensor data."""
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}"
@@ -67,6 +76,10 @@ def save_checkpoint(directory, step: int, tree, keep_last: Optional[int] = None,
             "dtype": str(arr.dtype),
             "sha256": digest,
         }
+    if aux is not None:
+        (tmp / AUX).write_text(json.dumps(aux))
+        with open(tmp / AUX, "rb") as f:
+            os.fsync(f.fileno())
     (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
     # fsync the manifest then atomically publish
     with open(tmp / MANIFEST, "rb") as f:
@@ -133,6 +146,66 @@ def restore_checkpoint(directory, step: int, abstract_tree,
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(abstract_tree), out
     )
+
+
+def load_aux(directory, step: int) -> Optional[Dict[str, Any]]:
+    """Read the aux metadata committed with a step (None if absent)."""
+    path = Path(directory) / f"step_{step:08d}" / AUX
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def _abstract_from_manifest(manifest) -> Dict[str, Any]:
+    """Rebuild the (nested-dict) state structure from a manifest's leaf
+    keys, as ShapeDtypeStructs -- so PS states restore without the caller
+    reconstructing the exact counts/ef layout by hand."""
+    root: Dict[str, Any] = {}
+    for key, entry in manifest["leaves"].items():
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = jax.ShapeDtypeStruct(
+            tuple(entry["shape"]), np.dtype(entry["dtype"])
+        )
+    return root
+
+
+def save_ps_checkpoint(directory, step: int, plan, state,
+                       keep_last: Optional[int] = None,
+                       verify: bool = True) -> Path:
+    """Save a (ServicePlan, shared flat state) pair atomically."""
+    from repro.ps.plan import plan_to_json
+
+    return save_checkpoint(directory, step, state, keep_last, verify,
+                           aux={"plan": plan_to_json(plan)})
+
+
+def restore_ps_checkpoint(directory, step: int, plan=None, verify: bool = True):
+    """Restore a PS checkpoint; returns ``(plan, state)``.
+
+    With ``plan`` given (the restoring service's compiled plan), the state
+    is migrated from the saved layout onto it -- a checkpoint taken under
+    one packing restores under another.  Otherwise the saved plan is used
+    as-is."""
+    from repro.ps.elastic import migrate_flat_state
+    from repro.ps.plan import plan_from_json
+
+    aux = load_aux(directory, step)
+    if aux is None or "plan" not in aux:
+        raise IOError(f"step {step} in {directory} is not a PS checkpoint")
+    saved_plan = plan_from_json(aux["plan"])
+    manifest = json.loads(
+        (Path(directory) / f"step_{step:08d}" / MANIFEST).read_text()
+    )
+    abstract = _abstract_from_manifest(manifest)
+    state = restore_checkpoint(directory, step, abstract, verify=verify)
+    if isinstance(state, dict) and "count" not in state:
+        state.setdefault("counts", {})  # shared state with no steps taken yet
+    if plan is not None and plan != saved_plan:
+        return plan, migrate_flat_state(state, saved_plan, plan)
+    return saved_plan, state
 
 
 class CheckpointManager:

@@ -2,21 +2,29 @@
 
 Ties together pMaster + cluster controllers (cluster.py), the assignment
 scheme (assignment.py), scaling (scaling.py), and migration bookkeeping
-(migration.py). The data plane (repro.ps) asks this object where each
-tensor's aggregation lives; the simulator (repro.sim) drives it with job
-arrival/exit events.
+(migration.py).  It is also the *single source of truth* for the data
+plane: ``compile_plan()`` compiles the live tensor->Aggregator assignment
+into a multi-job ``FlatPlan`` (repro.ps.plan), and every placement-changing
+event (``register_job``, ``job_exit``, ``periodic_rebalance``) emits an
+``(old_plan, new_plan)`` pair to replan listeners so the data-plane runtime
+(repro.ps.service_runtime.ServiceRuntime) can migrate all co-resident jobs'
+flat Adam state without a restart.  The simulator (repro.sim) drives the
+same object with job arrival/exit events.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 from .assignment import AssignmentConfig
 from .cluster import PMaster
 from .migration import TensorMigration
 from .perf_model import predict_all_losses, predict_iteration
 from .types import Aggregator, JobProfile, cpu_reduction_ratio
+
+# (old_plan | None, new_plan | None) -> None; plans are repro.ps.plan.FlatPlan
+ReplanListener = Callable[[object, object], None]
 
 
 @dataclass
@@ -28,6 +36,7 @@ class ParameterService:
     loss_limit: float = 0.1
     strict_paper: bool = False
     preserve_spread: bool = False
+    plan_pad_to: int = 128  # shard padding granularity of compiled plans
 
     def __post_init__(self) -> None:
         self._config = AssignmentConfig(
@@ -41,19 +50,31 @@ class ParameterService:
         )
         self._jobs: Dict[str, JobProfile] = {}
         self._migrations: List[TensorMigration] = []
+        self._specs: Dict[str, Mapping[int, object]] = {}  # job -> {tid: TensorSpec}
+        self._plan = None  # last compiled FlatPlan handed to listeners
+        self._listeners: List[ReplanListener] = []
 
     # ------------------------------------------------------------------- API
-    def register_job(self, job: JobProfile) -> str:
-        """Admit a job (assign all its model aggregations); returns cluster id."""
+    def register_job(self, job: JobProfile, specs=None) -> str:
+        """Admit a job (assign all its model aggregations); returns cluster id.
+
+        ``specs`` optionally binds the job's data-plane tensor metadata
+        (``{tensor_id: repro.ps.plan.TensorSpec}``) so compiled plans carry
+        real shapes/dtypes instead of nbytes-derived 1-D placeholders."""
         if job.job_id in self._jobs:
             raise ValueError(f"job {job.job_id} already registered")
         cluster_id = self._pmaster.submit_job(job)
         self._jobs[job.job_id] = job
+        if specs is not None:
+            self._specs[job.job_id] = dict(specs)
+        self._replan()
         return cluster_id
 
     def job_exit(self, job_id: str) -> None:
         self._jobs.pop(job_id)
+        self._specs.pop(job_id, None)
         self._pmaster.job_exit(job_id)
+        self._replan()
 
     def placement(self, job_id: str) -> Dict[int, str]:
         """tensor_id -> aggregator_id for a job (the Agent mapping table)."""
@@ -63,6 +84,43 @@ class ParameterService:
                 if jid == job_id:
                     out[tid] = agg.agg_id
         return out
+
+    # ----------------------------------------------------------- ServicePlan
+    def compile_plan(self, pad_to: Optional[int] = None):
+        """Compile the live Aggregator.tasks assignment into a multi-job
+        FlatPlan: one shard per allocated Aggregator, segments keyed by
+        ``(job_id, tensor_key)``.  This is the plan the data plane executes;
+        ``build_flat_plan`` is only the standalone single-job path."""
+        from repro.ps.plan import compile_service_plan
+
+        return compile_service_plan(
+            self.aggregators, self._specs,
+            pad_to=self.plan_pad_to if pad_to is None else pad_to,
+        )
+
+    @property
+    def current_plan(self):
+        """Plan as of the last placement change (None before any job)."""
+        return self._plan
+
+    def on_replan(self, listener: ReplanListener) -> None:
+        """Subscribe to ``(old_plan, new_plan)`` placement changes.  If jobs
+        are already placed, the listener immediately sees (None, plan)."""
+        self._listeners.append(listener)
+        if self._jobs:
+            if self._plan is None:
+                self._plan = self.compile_plan()
+            listener(None, self._plan)
+
+    def _replan(self) -> None:
+        if not self._listeners:
+            return
+        new = self.compile_plan() if self._jobs else None
+        if new == self._plan:
+            return
+        old, self._plan = self._plan, new
+        for listener in self._listeners:
+            listener(old, new)
 
     # ------------------------------------------------------------ inspection
     @property
@@ -92,6 +150,7 @@ class ParameterService:
 
     def periodic_rebalance(self) -> None:
         self._pmaster.periodic_rebalance()
+        self._replan()
 
     def stats(self) -> Dict[str, float]:
         s = self._pmaster.stats()

@@ -5,24 +5,47 @@ touches jax device state. Single pod: 16 x 16 = 256 chips (data, model).
 Multi-pod: 2 x 16 x 16 = 512 chips (pod, data, model); the "pod" axis is an
 extra data-parallel dimension whose collectives cross the inter-pod (DCN)
 links -- the dry-run proves the HLO shards across it.
+
+`make_mesh` / `make_abstract_mesh` paper over the jax API drift around
+axis types (jax.sharding.AxisType only exists on newer jax; older
+AbstractMesh takes (name, size) pairs).
 """
 
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Version-compatible jax.make_mesh with Auto axis types when supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(axis_type.Auto,) * len(axes),
+        )
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Version-compatible AbstractMesh (rule logic only needs .shape)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.sharding.AbstractMesh(
+            tuple(shape), tuple(axes),
+            axis_types=(axis_type.Auto,) * len(axes),
+        )
+    return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for CPU smoke runs (same axis names)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((1, 1), ("data", "model"))

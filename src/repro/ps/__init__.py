@@ -1,11 +1,40 @@
 """Data-plane Parameter Service runtime (JAX/SPMD).
 
-sharding.py     per-tensor sharding rules: the control plane's assignment
-                plan realized as NamedShardings (TP + FSDP "aggregation"
-                placement per tensor).
-runtime.py      paper-faithful flat PS runtime: pull = all-gather,
-                push = reduce-scatter, update shard-local on the owner
-                segments chosen by the assignment plan.
-compression.py  int8 gradient compression with error feedback (push path).
-elastic.py      tensor migration / elastic re-mesh via resharding.
+plan.py          ServicePlan: compiles the control plane's live
+                 tensor->Aggregator assignment into a multi-job FlatPlan
+                 (segments keyed by (job_id, tensor_key)); pure numpy.
+runtime.py       paper-faithful flat PS runtime: pull = all-gather,
+                 push = reduce-scatter, update masked to the job's own
+                 segments of the shared flat space.
+service_runtime.py  ServiceRuntime: one shared flat state for all jobs of
+                 a ParameterService, migrated live on every replan.
+sharding.py      per-tensor sharding rules: the control plane's assignment
+                 plan realized as NamedShardings (TP + FSDP "aggregation"
+                 placement per tensor).
+compression.py   int8 gradient compression with error feedback (push path).
+elastic.py       tensor migration / elastic re-mesh via resharding.
 """
+
+from .plan import (
+    FlatPlan,
+    Segment,
+    TensorSpec,
+    compile_service_plan,
+    plan_from_json,
+    plan_migration_bytes,
+    plan_padding_waste,
+    plan_to_json,
+    segment_mask,
+)
+
+__all__ = [
+    "FlatPlan",
+    "Segment",
+    "TensorSpec",
+    "compile_service_plan",
+    "plan_from_json",
+    "plan_migration_bytes",
+    "plan_padding_waste",
+    "plan_to_json",
+    "segment_mask",
+]

@@ -2,8 +2,12 @@
 
 `migrate_flat_state` re-lays a PS flat state from one FlatPlan to another
 (the data-plane half of the paper's tensor migration: the owner segments
-move, everything else stays). `reshard_tree` moves any pytree onto new
-shardings (elastic scale up/down, spot-instance drain from §6).
+move, everything else stays). Plans may be multi-job (compiled by
+``ParameterService.compile_plan``): segments are matched by their
+job-qualified key ``(job_id, tensor_key)``; segments that only exist in the
+new plan (a job arrival) come out zero-initialized, segments that only
+exist in the old plan (a job exit) are dropped. `reshard_tree` moves any
+pytree onto new shardings (elastic scale up/down, spot drain from §6).
 
 Both are expressible as pure gathers + device_put, so the runtime can issue
 them while workers compute (the paper's hidden-copy window); the benchmark
@@ -13,47 +17,64 @@ checkpoint-restart strawman.
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .runtime import FlatPlan
+from .plan import FlatPlan, plan_migration_bytes
 
 
-def _perm_old_to_new(old: FlatPlan, new: FlatPlan) -> np.ndarray:
-    """index array `idx` with new_flat[i] = old_flat[idx[i]] (pad -> 0)."""
-    old_by_key = {s.key: s for s in old.segments}
+def _perm_old_to_new(old: FlatPlan, new: FlatPlan) -> Tuple[np.ndarray, np.ndarray]:
+    """(idx, keep) with new_flat[i] = old_flat[idx[i]] where keep[i], else 0.
+
+    Lanes not covered by a common segment (padding, or segments of a job
+    that was not in the old plan) get keep=False."""
+    old_by_key = old.by_skey
     idx = np.zeros(new.total_len, dtype=np.int64)
+    keep = np.zeros(new.total_len, dtype=bool)
     for seg in new.segments:
-        o = old_by_key[seg.key]
-        src = o.shard * old.shard_len + o.offset
-        dst = seg.shard * new.shard_len + seg.offset
+        o = old_by_key.get(seg.skey)
+        if o is None:
+            continue  # new job's segment: zero-initialized
+        if o.size != seg.size:
+            raise ValueError(
+                f"segment {seg.skey} changed size {o.size} -> {seg.size}"
+            )
+        src = old.start(o)
+        dst = new.start(seg)
         idx[dst : dst + seg.size] = np.arange(src, src + seg.size)
-    return idx
+        keep[dst : dst + seg.size] = True
+    return idx, keep
 
 
 def migrate_flat_state(state: Dict[str, Any], old: FlatPlan, new: FlatPlan):
-    """Move a PS state onto a new assignment plan (tensor migration)."""
-    idx = jnp.asarray(_perm_old_to_new(old, new))
+    """Move a PS state onto a new service plan (tensor migration).
+
+    Every 1-D leaf of length ``old.total_len`` (flat, mu, nu, ef) is
+    gathered onto the new layout; scalars (step counters, incl. the shared
+    state's per-job ``counts``) pass through untouched.  Common segments are
+    relocated bit-exactly."""
+    idx_np, keep_np = _perm_old_to_new(old, new)
+    idx = jnp.asarray(idx_np)
+    keep = jnp.asarray(keep_np)
+    all_kept = bool(keep_np.all())
 
     def move(x):
-        if x.ndim == 0:
+        if getattr(x, "ndim", 0) != 1 or x.shape[0] != old.total_len:
             return x
-        return jnp.take(x, idx, axis=0)
+        moved = jnp.take(x, idx, axis=0)
+        if all_kept:
+            return moved
+        return jnp.where(keep, moved, jnp.zeros((), x.dtype))
 
-    return {k: (move(v) if k != "count" else v) for k, v in state.items()}
+    return jax.tree_util.tree_map(move, state)
 
 
 def migration_bytes(old: FlatPlan, new: FlatPlan, bytes_per_element: int = 12) -> int:
     """Bytes that actually cross shards (master copy + both Adam moments)."""
-    old_by_key = {s.key: s for s in old.segments}
-    moved = 0
-    for seg in new.segments:
-        if old_by_key[seg.key].shard != seg.shard:
-            moved += seg.size * bytes_per_element
-    return moved
+    return plan_migration_bytes(old, new, bytes_per_element)
 
 
 def reshard_tree(tree, shardings):

@@ -1,0 +1,249 @@
+"""ServicePlan: the single source of truth between control and data plane.
+
+The control plane (repro.core.service.ParameterService) decides which
+Aggregator hosts each ``(job_id, tensor_id)`` aggregation task; the data
+plane executes pull/push/update against a *flat parameter space* laid out
+across aggregator shards.  This module is the bridge: it compiles the live
+``Aggregator.tasks`` mapping into a :class:`FlatPlan` whose segments are
+keyed by ``(job_id, tensor_key)``, so one flat aggregation space can host
+segments from *many* registered jobs at once and a replan is just a pair of
+plans handed to ``repro.ps.elastic.migrate_flat_state``.
+
+Kept deliberately JAX-free (numpy + core types only): the simulator and the
+control plane can compile and diff plans without touching a device.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    """Data-plane metadata for one aggregation task's tensor."""
+
+    key: str  # pytree path key within the job's parameter tree
+    shape: Tuple[int, ...]
+    dtype: Any  # numpy-compatible dtype (jnp dtypes accepted)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One tensor's slice of the flat aggregation space.
+
+    ``(job_id, key)`` is the identity used across replans; ``tensor_id``
+    ties the segment back to the control plane's AggTask.
+    """
+
+    key: str
+    shard: int
+    offset: int  # element offset within the shard
+    size: int
+    shape: Tuple[int, ...]
+    dtype: Any
+    job_id: str = "flat"
+    tensor_id: int = -1
+
+    @property
+    def skey(self) -> Tuple[str, str]:
+        """Job-qualified identity, stable across replans."""
+        return (self.job_id, self.key)
+
+
+@dataclass(frozen=True)
+class FlatPlan:
+    """Physical layout of one shared flat aggregation space.
+
+    ``shard_ids`` names the Aggregator backing each shard (empty for
+    synthetic single-job plans built by ``build_flat_plan``).
+    """
+
+    n_shards: int
+    shard_len: int  # padded elements per shard
+    segments: Tuple[Segment, ...]  # in (shard, offset) order
+    shard_ids: Tuple[str, ...] = ()
+
+    @property
+    def total_len(self) -> int:
+        return self.n_shards * self.shard_len
+
+    @property
+    def payload_elements(self) -> int:
+        return sum(s.size for s in self.segments)
+
+    @cached_property
+    def shard_segments(self) -> Tuple[Tuple[int, ...], ...]:
+        """Per-shard segment indices in offset order (precomputed once, so
+        flatten/unflatten are O(n_segments) instead of O(shards*segments))."""
+        buckets: List[List[int]] = [[] for _ in range(self.n_shards)]
+        for i, seg in enumerate(self.segments):
+            buckets[seg.shard].append(i)
+        for b in buckets:
+            b.sort(key=lambda i: self.segments[i].offset)
+        return tuple(tuple(b) for b in buckets)
+
+    @cached_property
+    def by_skey(self) -> Dict[Tuple[str, str], Segment]:
+        return {s.skey: s for s in self.segments}
+
+    @cached_property
+    def job_ids(self) -> Tuple[str, ...]:
+        seen: Dict[str, None] = {}
+        for s in self.segments:
+            seen.setdefault(s.job_id, None)
+        return tuple(seen)
+
+    def segments_of(self, job_id: str) -> Tuple[Segment, ...]:
+        return tuple(s for s in self.segments if s.job_id == job_id)
+
+    def start(self, seg: Segment) -> int:
+        """Absolute element offset of a segment in the flat vector."""
+        return seg.shard * self.shard_len + seg.offset
+
+
+def plan_padding_waste(plan: FlatPlan) -> float:
+    """Fraction of the flat space that is padding (imbalance cost)."""
+    if plan.total_len <= 0:
+        return 0.0
+    return 1.0 - plan.payload_elements / plan.total_len
+
+
+def segment_mask(plan: FlatPlan, job_id: Optional[str] = None) -> np.ndarray:
+    """Boolean mask over the flat vector: True on (the job's) payload lanes."""
+    mask = np.zeros(plan.total_len, dtype=bool)
+    for seg in plan.segments:
+        if job_id is None or seg.job_id == job_id:
+            start = plan.start(seg)
+            mask[start : start + seg.size] = True
+    return mask
+
+
+# ----------------------------------------------------------------- compile
+def compile_service_plan(
+    aggregators: Sequence[Any],
+    specs: Optional[Mapping[str, Mapping[int, TensorSpec]]] = None,
+    pad_to: int = 128,
+) -> FlatPlan:
+    """Compile the live control-plane assignment into a multi-job FlatPlan.
+
+    One shard per Aggregator, in the given (stable) order; within a shard,
+    segments are laid contiguously in ``(job_id, tensor_id)`` order so the
+    layout is a pure function of the assignment.  ``specs`` supplies real
+    shapes/dtypes per ``job_id -> tensor_id``; tasks without a bound spec
+    (control-plane-only jobs, e.g. in the simulator) fall back to a 1-D
+    float32 tensor sized from ``AggTask.nbytes``.
+    """
+    specs = specs or {}
+    segments: List[Segment] = []
+    shard_sizes: List[int] = []
+    shard_ids: List[str] = []
+    for shard, agg in enumerate(aggregators):
+        off = 0
+        for (job_id, tensor_id), task in sorted(agg.tasks.items()):
+            spec = specs.get(job_id, {}).get(tensor_id)
+            if spec is None:
+                n = max(1, task.nbytes // 4)
+                spec = TensorSpec(task.name, (n,), np.float32)
+            segments.append(
+                Segment(spec.key, shard, off, spec.size, tuple(spec.shape),
+                        spec.dtype, job_id=job_id, tensor_id=tensor_id)
+            )
+            off += spec.size
+        shard_sizes.append(off)
+        shard_ids.append(getattr(agg, "agg_id", f"shard{shard}"))
+    largest = max(shard_sizes, default=0)
+    shard_len = max(1, -(-max(1, largest) // pad_to) * pad_to)
+    return FlatPlan(
+        n_shards=len(shard_ids),
+        shard_len=shard_len,
+        segments=tuple(segments),
+        shard_ids=tuple(shard_ids),
+    )
+
+
+# --------------------------------------------------------------- migration
+def plan_migration_bytes(
+    old: FlatPlan, new: FlatPlan, bytes_per_element: int = 12
+) -> int:
+    """Bytes that cross Aggregators between two plans (master copy + both
+    Adam moments at 4 B each by default).
+
+    Ownership is compared by ``shard_ids`` (the backing Aggregator) when
+    both plans carry them: a shard *index* shift -- e.g. an emptied
+    Aggregator dropping out of the list -- does not move any bytes off the
+    segments' actual host.  Synthetic plans without shard_ids fall back to
+    index comparison.  Segments only present in one plan are job
+    arrivals/exits, not migrations, and are not counted."""
+    by_id = bool(old.shard_ids) and bool(new.shard_ids)
+
+    def owner(plan: FlatPlan, seg: Segment):
+        return plan.shard_ids[seg.shard] if by_id else seg.shard
+
+    moved = 0
+    old_by = old.by_skey
+    for seg in new.segments:
+        prev = old_by.get(seg.skey)
+        if prev is not None and owner(old, prev) != owner(new, seg):
+            moved += seg.size * bytes_per_element
+    return moved
+
+
+# ----------------------------------------------------------- serialization
+def plan_to_json(plan: FlatPlan) -> Dict[str, Any]:
+    return {
+        "n_shards": plan.n_shards,
+        "shard_len": plan.shard_len,
+        "shard_ids": list(plan.shard_ids),
+        "segments": [
+            {
+                "key": s.key,
+                "shard": s.shard,
+                "offset": s.offset,
+                "size": s.size,
+                "shape": list(s.shape),
+                "dtype": np.dtype(s.dtype).name,
+                "job_id": s.job_id,
+                "tensor_id": s.tensor_id,
+            }
+            for s in plan.segments
+        ],
+    }
+
+
+def plan_from_json(obj: Mapping[str, Any]) -> FlatPlan:
+    segments = tuple(
+        Segment(
+            key=s["key"],
+            shard=int(s["shard"]),
+            offset=int(s["offset"]),
+            size=int(s["size"]),
+            shape=tuple(s["shape"]),
+            dtype=np.dtype(s["dtype"]),
+            job_id=s.get("job_id", "flat"),
+            tensor_id=int(s.get("tensor_id", -1)),
+        )
+        for s in obj["segments"]
+    )
+    return FlatPlan(
+        n_shards=int(obj["n_shards"]),
+        shard_len=int(obj["shard_len"]),
+        segments=segments,
+        shard_ids=tuple(obj.get("shard_ids", ())),
+    )
+
+
+def plan_dumps(plan: FlatPlan) -> str:
+    return json.dumps(plan_to_json(plan))
+
+
+def plan_loads(text: str) -> FlatPlan:
+    return plan_from_json(json.loads(text))

@@ -1,23 +1,29 @@
-"""Paper-faithful PS data plane: flat parameter space + per-tensor owners.
+"""Paper-faithful PS data plane: one flat parameter space, many jobs.
 
-The control plane's tensor->Aggregator assignment (repro.core.assignment)
-becomes the *layout of a flat parameter vector* across aggregator shards:
+The control plane's tensor->Aggregator assignment (repro.core.service)
+compiles -- via ``ParameterService.compile_plan()`` / repro.ps.plan -- into
+the *layout of a flat parameter vector* across aggregator shards, shared by
+every registered job:
 
-  pull    unflatten(flat)   -> all-gather of each shard's segments
+  pull    unflatten(flat)   -> all-gather of the job's segments
   push    flatten(grads)    -> reduce-scatter onto the owner layout
-  update  elementwise Adam on the local shard only (the aggregation op;
-          fused Pallas kernel on TPU, repro.kernels.agg_adam)
+  update  elementwise Adam on the job's own segments only (masked when the
+          flat space is shared; fused Pallas kernel on TPU,
+          repro.kernels.agg_adam)
 
-ps-lite round-robin vs AutoPS balanced placement differ in per-shard byte
-balance: every shard is padded to the largest shard, so imbalance shows up
+Segments are keyed by ``(job_id, tensor_key)``, so two jobs with identically
+named tensors coexist in one space, and a control-plane replan is executed
+by ``repro.ps.elastic.migrate_flat_state`` over a ``(old_plan, new_plan)``
+pair without restarting either job.
+
+``build_flat_plan`` remains as the standalone single-job path (ps-lite
+round-robin vs AutoPS balanced placement): per-shard byte imbalance shows up
 directly as extra all-gather bytes + wasted optimizer lanes -- the data-
 plane realization of Fig. 7.
 """
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -29,51 +35,84 @@ from repro.core.assignment import (
     round_robin_shard_assignment,
 )
 from repro.core.types import AggTask, JobProfile
+from repro.ps.plan import (  # re-exported: canonical home is repro.ps.plan
+    FlatPlan,
+    Segment,
+    TensorSpec,
+    plan_padding_waste,
+    segment_mask,
+)
 
-
-@dataclass(frozen=True)
-class Segment:
-    key: str  # pytree path key
-    shard: int
-    offset: int  # element offset within the shard
-    size: int
-    shape: Tuple[int, ...]
-    dtype: Any
-
-
-@dataclass(frozen=True)
-class FlatPlan:
-    n_shards: int
-    shard_len: int  # padded elements per shard
-    segments: Tuple[Segment, ...]  # in (shard, offset) order
-
-    @property
-    def total_len(self) -> int:
-        return self.n_shards * self.shard_len
-
-    @property
-    def payload_elements(self) -> int:
-        return sum(s.size for s in self.segments)
+__all__ = [
+    "FlatPlan",
+    "Segment",
+    "TensorSpec",
+    "build_flat_plan",
+    "flatten_tree",
+    "unflatten_tree",
+    "init_ps_state",
+    "init_shared_state",
+    "seed_job_params",
+    "job_profile_from_tree",
+    "make_ps_train_step",
+    "plan_padding_waste",
+]
 
 
 def _leaf_key(path) -> str:
     return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
 
 
+def tree_specs(tree) -> List[TensorSpec]:
+    """Per-leaf TensorSpecs in pytree-flatten order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [
+        TensorSpec(_leaf_key(path), tuple(leaf.shape), leaf.dtype)
+        for path, leaf in leaves
+    ]
+
+
+def job_profile_from_tree(
+    job_id: str,
+    tree,
+    iteration_duration: float = 1.0,
+    n_workers: int = 2,
+    required_servers: int = 1,
+    agg_throughput: float = 7e9,
+    model: str = "custom",
+) -> Tuple[JobProfile, Dict[int, TensorSpec]]:
+    """Build the control-plane JobProfile + data-plane specs for a pytree.
+
+    One AggTask per leaf, ``tensor_id`` = leaf index; ``exec_time`` is the
+    profiled aggregation cost nbytes / agg_throughput (lower the throughput
+    to model heavier aggregation work per byte).
+    """
+    specs = dict(enumerate(tree_specs(tree)))
+    tasks = [
+        AggTask(job_id, i, spec.key, nbytes=spec.size * 4,
+                exec_time=spec.size * 4 / agg_throughput)
+        for i, spec in specs.items()
+    ]
+    profile = JobProfile(job_id, model, iteration_duration, tasks,
+                         n_workers=n_workers,
+                         required_servers=required_servers)
+    return profile, specs
+
+
 def build_flat_plan(abstract_params, n_shards: int, mode: str = "balanced",
-                    pad_to: int = 128) -> FlatPlan:
-    """Assign each tensor to an aggregator shard using the control plane's
-    placement schemes, then lay segments contiguously per shard."""
+                    pad_to: int = 128, job_id: str = "flat") -> FlatPlan:
+    """Standalone single-job plan: assign each tensor to a shard using the
+    control plane's placement schemes, then lay segments contiguously."""
     leaves = jax.tree_util.tree_flatten_with_path(abstract_params)[0]
     tasks = []
     meta: Dict[int, Tuple[str, Tuple[int, ...], Any, int]] = {}
     for i, (path, leaf) in enumerate(leaves):
         size = int(np.prod(leaf.shape)) if leaf.shape else 1
-        tasks.append(AggTask("flat", i, _leaf_key(path), nbytes=size * 4,
+        tasks.append(AggTask(job_id, i, _leaf_key(path), nbytes=size * 4,
                              exec_time=float(size)))
         meta[i] = (_leaf_key(path), tuple(leaf.shape), leaf.dtype, size)
 
-    job = JobProfile("flat", "flat", 1.0, tasks, required_servers=n_shards)
+    job = JobProfile(job_id, job_id, 1.0, tasks, required_servers=n_shards)
     if mode == "balanced":
         shards = balanced_shard_assignment(job, n_shards)
     elif mode == "round_robin":
@@ -87,7 +126,8 @@ def build_flat_plan(abstract_params, n_shards: int, mode: str = "balanced",
         off = 0
         for task in shards[s]:
             key, shape, dtype, size = meta[task.tensor_id]
-            segments.append(Segment(key, s, off, size, shape, dtype))
+            segments.append(Segment(key, s, off, size, shape, dtype,
+                                    job_id=job_id, tensor_id=task.tensor_id))
             off += size
         shard_sizes.append(off)
     shard_len = max(1, -(-max(shard_sizes) // pad_to) * pad_to)
@@ -95,41 +135,49 @@ def build_flat_plan(abstract_params, n_shards: int, mode: str = "balanced",
                     segments=tuple(segments))
 
 
-def plan_padding_waste(plan: FlatPlan) -> float:
-    """Fraction of the flat space that is padding (imbalance cost)."""
-    payload = sum(s.size for s in plan.segments)
-    return 1.0 - payload / plan.total_len
+def flatten_tree(plan: FlatPlan, tree, dtype=jnp.float32,
+                 job_id: Optional[str] = None) -> jnp.ndarray:
+    """Pack a pytree into the plan's flat layout (push direction).
 
-
-def flatten_tree(plan: FlatPlan, tree, dtype=jnp.float32) -> jnp.ndarray:
-    """Pack a pytree into the plan's flat layout (push direction)."""
+    With ``job_id`` given, only that job's segments are filled -- other
+    jobs' lanes come out zero, so a per-job gradient vector never perturbs
+    co-resident jobs.  Linear in the number of segments (per-shard segment
+    indices are precomputed on the plan).
+    """
     by_key = {
         _leaf_key(path): leaf
         for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
     }
     parts: List[jnp.ndarray] = []
-    for s in range(plan.n_shards):
+    for shard_idx in plan.shard_segments:
         used = 0
-        for seg in plan.segments:
-            if seg.shard != s:
-                continue
-            parts.append(by_key[seg.key].reshape(-1).astype(dtype))
+        for i in shard_idx:
+            seg = plan.segments[i]
+            if job_id is not None and seg.job_id != job_id:
+                parts.append(jnp.zeros((seg.size,), dtype))
+            else:
+                parts.append(by_key[seg.key].reshape(-1).astype(dtype))
             used += seg.size
         if used < plan.shard_len:
             parts.append(jnp.zeros((plan.shard_len - used,), dtype))
+    if not parts:
+        return jnp.zeros((plan.total_len,), dtype)
     return jnp.concatenate(parts)
 
 
-def unflatten_tree(plan: FlatPlan, flat: jnp.ndarray, abstract_params):
-    """Unpack the flat vector into the original pytree (pull direction)."""
+def unflatten_tree(plan: FlatPlan, flat: jnp.ndarray, abstract_params,
+                   job_id: Optional[str] = None):
+    """Unpack (a job's segments of) the flat vector into a pytree (pull)."""
     out_by_key = {}
     for seg in plan.segments:
-        start = seg.shard * plan.shard_len + seg.offset
+        if job_id is not None and seg.job_id != job_id:
+            continue
+        start = plan.start(seg)
         out_by_key[seg.key] = jax.lax.slice(
             flat, (start,), (start + seg.size,)
         ).reshape(seg.shape).astype(seg.dtype)
 
-    leaves, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    leaves, _ = jax.tree_util.tree_flatten_with_path(abstract_params)
     ordered = [out_by_key[_leaf_key(path)] for path, _ in leaves]
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(abstract_params), ordered
@@ -147,10 +195,19 @@ def make_ps_train_step(
     eps: float = 1e-8,
     push_compression: Optional[str] = None,  # None | 'bf16' | 'int8'
     fused_kernel: bool = False,
+    job_id: Optional[str] = None,
 ):
     """Build the PS-mode train step.
 
-    state = {flat (N,), mu (N,), nu (N,), count, [ef (N,) error feedback]}
+    Single-job mode (``job_id=None``, legacy):
+      state = {flat (N,), mu (N,), nu (N,), count, [ef (N,)]}
+
+    Shared-service mode (``job_id`` given): the same flat/mu/nu buffers are
+    shared by every job in the plan; this job's step touches ONLY its own
+    segments (masked Adam) and keeps its own step counter in
+    state["counts"][job_id], so co-resident jobs' moments and bias
+    correction are untouched.
+
     All flat buffers are sharded P(aggregation axes) by the caller; the
     unflatten/flatten pair makes GSPMD emit the pull all-gather and push
     reduce-scatter onto the owner layout.
@@ -158,19 +215,30 @@ def make_ps_train_step(
     from repro.ps import act_sharding as act
     from repro.ps.compression import compress_decompress
 
+    mask = None
+    if job_id is not None:
+        mask = jnp.asarray(segment_mask(plan, job_id))
+
+    def _count(state):
+        if job_id is None:
+            return state["count"] + 1
+        return state["counts"][job_id] + 1
+
     def step(state, batch):
         flat = state["flat"]
-        params = unflatten_tree(plan, flat, abstract_params)  # PULL
+        params = unflatten_tree(plan, flat, abstract_params, job_id)  # PULL
         loss, grads = jax.value_and_grad(model_loss)(params, batch)
-        gflat = flatten_tree(plan, grads, jnp.float32)  # PUSH
+        gflat = flatten_tree(plan, grads, jnp.float32, job_id)  # PUSH
         if push_compression:
-            gflat = gflat + state["ef"]
+            ef = state["ef"]
+            gflat = gflat + (ef if mask is None else jnp.where(mask, ef, 0.0))
             q = compress_decompress(gflat, push_compression)
-            new_ef = gflat - q
-            gflat = q
+            resid = gflat - q
+            new_ef = resid if mask is None else jnp.where(mask, resid, ef)
+            gflat = q if mask is None else jnp.where(mask, q, 0.0)
         gflat = act.constrain(gflat, "all")  # reduce-scatter point
 
-        count = state["count"] + 1
+        count = _count(state)
         if fused_kernel:
             from repro.kernels.agg_adam import ops as agg_ops
 
@@ -184,9 +252,19 @@ def make_ps_train_step(
             mu_hat = mu / (1 - b1 ** t)
             nu_hat = nu / (1 - b2 ** t)
             new_flat = flat - lr * mu_hat / (jnp.sqrt(nu_hat) + eps)
+        if mask is not None:
+            # Update only this job's lanes of the shared space.
+            new_flat = jnp.where(mask, new_flat, flat)
+            mu = jnp.where(mask, mu, state["mu"])
+            nu = jnp.where(mask, nu, state["nu"])
         new_flat = act.constrain(new_flat, "all")
 
-        new_state = {"flat": new_flat, "mu": mu, "nu": nu, "count": count}
+        new_state = dict(state)
+        new_state.update(flat=new_flat, mu=mu, nu=nu)
+        if job_id is None:
+            new_state["count"] = count
+        else:
+            new_state["counts"] = dict(state["counts"], **{job_id: count})
         if push_compression:
             new_state["ef"] = new_ef
         return new_state, {"loss": loss}
@@ -195,6 +273,7 @@ def make_ps_train_step(
 
 
 def init_ps_state(plan: FlatPlan, params, push_compression=None):
+    """Single-job state: flat buffers hold exactly this job's tensors."""
     flat = flatten_tree(plan, params, jnp.float32)
     state = {
         "flat": flat,
@@ -205,3 +284,34 @@ def init_ps_state(plan: FlatPlan, params, push_compression=None):
     if push_compression:
         state["ef"] = jnp.zeros_like(flat)
     return state
+
+
+def init_shared_state(plan: FlatPlan, push_compression=None):
+    """Empty shared-service state for a compiled multi-job plan; jobs are
+    seeded into their own segments with :func:`seed_job_params`."""
+    flat = jnp.zeros((plan.total_len,), jnp.float32)
+    state = {
+        "flat": flat,
+        "mu": jnp.zeros_like(flat),
+        "nu": jnp.zeros_like(flat),
+        "counts": {},
+    }
+    if push_compression:
+        state["ef"] = jnp.zeros_like(flat)
+    return state
+
+
+def seed_job_params(plan: FlatPlan, state, job_id: str, params):
+    """Write a job's initial parameters into its segments of the shared flat
+    space (fresh Adam moments + step counter for that job only)."""
+    mask = jnp.asarray(segment_mask(plan, job_id))
+    vec = flatten_tree(plan, params, jnp.float32, job_id)
+    new_state = dict(state)
+    new_state["flat"] = jnp.where(mask, vec, state["flat"])
+    new_state["mu"] = jnp.where(mask, 0.0, state["mu"])
+    new_state["nu"] = jnp.where(mask, 0.0, state["nu"])
+    if "ef" in state:
+        new_state["ef"] = jnp.where(mask, 0.0, state["ef"])
+    new_state["counts"] = dict(state["counts"],
+                               **{job_id: jnp.zeros((), jnp.int32)})
+    return new_state

@@ -1,0 +1,160 @@
+"""ServiceRuntime: the data-plane executor of a shared ParameterService.
+
+Owns ONE flat aggregation space (flat/mu/nu [+ per-job step counters]) laid
+out by the service's compiled plan, with every registered job training
+through its own masked segments of that space.  Subscribes to the control
+plane's replan events: whenever ``register_job`` / ``job_exit`` /
+``periodic_rebalance`` changes the tensor->Aggregator assignment, the
+shared state is migrated onto the new layout (``migrate_flat_state``) and
+every job's train step is rebuilt against the new plan -- no job restarts,
+which is the paper's elastic-aggregation claim end to end:
+
+    control plane packing  ->  ServicePlan  ->  shared flat state
+         (Pseudocode 1)        (ps.plan)      (this module + runtime)
+
+Usage::
+
+    svc = ParameterService(total_budget=8)
+    rt = ServiceRuntime(svc)
+    rt.add_job("mlp", params_a, loss_a, required_servers=2)
+    rt.add_job("lm", params_b, loss_b, required_servers=2)
+    for batch in data:
+        metrics = rt.step("mlp", batch)      # only mlp's segments change
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ps.elastic import migrate_flat_state, migration_bytes
+from repro.ps.plan import FlatPlan
+from repro.ps.runtime import (
+    init_shared_state,
+    job_profile_from_tree,
+    make_ps_train_step,
+    seed_job_params,
+    unflatten_tree,
+)
+
+
+class ServiceRuntime:
+    """Shared flat-state executor bound to one ParameterService."""
+
+    def __init__(self, service, jit: bool = True):
+        self.service = service
+        self.plan: Optional[FlatPlan] = None
+        self.state: Optional[Dict[str, Any]] = None
+        self.last_migration_bytes = 0
+        self.total_migration_bytes = 0
+        self.n_replans = 0
+        self._jit = jit
+        self._jobs: Dict[str, Dict[str, Any]] = {}
+        self._steps: Dict[str, Callable] = {}
+        service.on_replan(self._on_replan)
+
+    # ----------------------------------------------------------------- jobs
+    def add_job(
+        self,
+        job_id: str,
+        params,
+        loss_fn: Callable[[Any, Any], Any],
+        *,
+        iteration_duration: float = 1.0,
+        n_workers: int = 2,
+        required_servers: int = 1,
+        agg_throughput: float = 7e9,
+        lr: float = 3e-4,
+        **step_opts,
+    ) -> None:
+        """Register a training job with the service and seed its parameters
+        into the shared flat space.  Triggers a replan (and a migration of
+        all co-resident jobs' state) if placement changes."""
+        if job_id in self._jobs:
+            raise ValueError(f"job {job_id} already in the runtime")
+        abstract = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+        )
+        profile, specs = job_profile_from_tree(
+            job_id, params,
+            iteration_duration=iteration_duration,
+            n_workers=n_workers,
+            required_servers=required_servers,
+            agg_throughput=agg_throughput,
+        )
+        self._jobs[job_id] = dict(
+            loss_fn=loss_fn, abstract=abstract, lr=lr, step_opts=step_opts
+        )
+        try:
+            self.service.register_job(profile, specs=specs)
+        except Exception:
+            self._jobs.pop(job_id, None)
+            raise
+        # The replan listener has already moved the shared state onto the
+        # new plan; the new job's lanes are zero until seeded here.
+        self.state = seed_job_params(self.plan, self.state, job_id, params)
+
+    def remove_job(self, job_id: str) -> None:
+        """Job exit: its segments are dropped from the plan; everyone else's
+        state survives (possibly consolidated by Aggregator recycling)."""
+        self._jobs.pop(job_id)
+        self._steps.pop(job_id, None)
+        self.service.job_exit(job_id)
+        if self.state is not None and job_id in self.state.get("counts", {}):
+            counts = dict(self.state["counts"])
+            counts.pop(job_id)
+            self.state = dict(self.state, counts=counts)
+
+    @property
+    def job_ids(self):
+        return tuple(self._jobs)
+
+    # ------------------------------------------------------------- training
+    def step(self, job_id: str, batch):
+        """One pull->compute->push->update iteration for one job, against
+        the shared state."""
+        self.state, metrics = self._steps[job_id](self.state, batch)
+        return metrics
+
+    def params_of(self, job_id: str):
+        """Current parameters of one job, pulled from the shared space."""
+        return unflatten_tree(
+            self.plan, self.state["flat"], self._jobs[job_id]["abstract"],
+            job_id=job_id,
+        )
+
+    # --------------------------------------------------------------- replan
+    def _needs_ef(self) -> bool:
+        return any(info["step_opts"].get("push_compression")
+                   for info in self._jobs.values())
+
+    def _on_replan(self, old: Optional[FlatPlan], new: Optional[FlatPlan]):
+        if new is None:  # last job exited
+            self.plan, self.state, self._steps = None, None, {}
+            return
+        if self.state is not None and old is not None:
+            moved = migration_bytes(old, new)
+            self.state = migrate_flat_state(self.state, old, new)
+            self.last_migration_bytes = moved
+            self.total_migration_bytes += moved
+            self.n_replans += 1
+        else:
+            self.state = init_shared_state(new, self._needs_ef() or None)
+        if self._needs_ef() and "ef" not in self.state:
+            # A compressed job joined a runtime whose state predates it.
+            self.state = dict(self.state,
+                              ef=jnp.zeros_like(self.state["flat"]))
+        self.plan = new
+        self._steps = {}
+        for job_id, info in self._jobs.items():
+            step = make_ps_train_step(
+                info["loss_fn"], new, info["abstract"],
+                lr=info["lr"], job_id=job_id, **info["step_opts"],
+            )
+            # Donate the shared state so flat/mu/nu update in place instead
+            # of doubling peak memory on every step.
+            self._steps[job_id] = (
+                jax.jit(step, donate_argnums=(0,)) if self._jit else step
+            )

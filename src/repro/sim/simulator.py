@@ -27,6 +27,9 @@ class SimConfig:
     loss_limit: float = 0.1
     scaling_period: float = 600.0  # idle Aggregators released on this tick
     sample_interval: float = 60.0  # Fig. 11 measures at 1-min intervals
+    # Compile the ServicePlan after every placement change and account the
+    # data-plane consequences (bytes migrated across shards, padding waste).
+    track_plans: bool = False
 
 
 @dataclass
@@ -38,6 +41,10 @@ class SimResult:
     required_cpu_seconds: float = 0.0
     max_loss_seen: float = 0.0
     n_jobs_done: int = 0
+    # Data-plane accounting from *compiled* ServicePlans (track_plans=True).
+    migration_bytes_total: int = 0
+    n_replans: int = 0
+    padding_waste: List[float] = field(default_factory=list)
 
     @property
     def cpu_time_saving(self) -> float:
@@ -45,23 +52,34 @@ class SimResult:
             return 0.0
         return 1.0 - self.allocated_cpu_seconds / self.required_cpu_seconds
 
+    @property
+    def mean_padding_waste(self) -> float:
+        if not self.padding_waste:
+            return 0.0
+        return sum(self.padding_waste) / len(self.padding_waste)
+
     def ratio_series(self) -> List[float]:
         return [a / r for a, r in zip(self.allocated, self.required) if r > 0]
 
 
 class ClusterSimulator:
-    def __init__(self, cfg: SimConfig = SimConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: Optional[SimConfig] = None):
+        # `cfg` must not default to SimConfig(): a dataclass default would be
+        # shared by every simulator instance.
+        self.cfg = SimConfig() if cfg is None else cfg
+        cfg = self.cfg
         self.service = ParameterService(
             total_budget=cfg.total_budget,
             n_clusters=cfg.n_clusters,
             loss_limit=cfg.loss_limit,
         )
         self.idle_pool = 0  # released Aggregators awaiting the periodic tick
+        self._last_plan = None
 
     def run(self, trace: List[TraceJob]) -> SimResult:
         cfg = self.cfg
         res = SimResult()
+        self._last_plan = None  # plan accounting must not leak across runs
         events: List[Tuple[float, int, str, Optional[TraceJob]]] = []
         for tj in trace:
             heapq.heappush(events, (tj.arrival, 0, tj.job_id, tj))
@@ -86,6 +104,23 @@ class ClusterSimulator:
                 res.required_cpu_seconds += req * dt
             last_t = now
 
+        def track_plan() -> None:
+            """Account the data-plane cost of the placement change that a
+            job arrival/exit/tick just made, from the *compiled* plan."""
+            if not cfg.track_plans:
+                return
+            from repro.ps.plan import plan_migration_bytes, plan_padding_waste
+
+            plan = self.service.compile_plan()
+            if self._last_plan is not None:
+                moved = plan_migration_bytes(self._last_plan, plan)
+                if moved or plan != self._last_plan:
+                    res.n_replans += 1
+                res.migration_bytes_total += moved
+            if plan.n_shards:
+                res.padding_waste.append(plan_padding_waste(plan))
+            self._last_plan = plan
+
         while events:
             t, kind, jid, payload = heapq.heappop(events)
             record_interval(t)
@@ -104,6 +139,7 @@ class ClusterSimulator:
                 res.max_loss_seen = max(res.max_loss_seen, loss)
                 finish = t + tj.duration / max(1e-9, (1.0 - loss))
                 heapq.heappush(events, (finish, 1, jid, None))
+                track_plan()
             elif kind == 1:  # exit
                 pending_work -= 1
                 if jid in running:
@@ -113,9 +149,11 @@ class ClusterSimulator:
                     self.idle_pool += max(0, freed)
                     running.pop(jid)
                     res.n_jobs_done += 1
+                    track_plan()
             elif kind == 2:  # periodic scaling tick: release idle servers
                 self.idle_pool = 0
                 self.service.periodic_rebalance()
+                track_plan()
                 if pending_work > 0:
                     heapq.heappush(events, (t + cfg.scaling_period, 2, jid, None))
             elif kind == 3:  # sampling

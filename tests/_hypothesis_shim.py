@@ -1,0 +1,80 @@
+"""Tiny fallback for `hypothesis` so tier-1 tests collect without it.
+
+Implements just the surface these tests use -- @given/@settings and the
+floats/integers/lists/sampled_from strategies -- drawing a fixed number of
+examples from a seeded RNG (deterministic across runs).  Install the real
+thing (`pip install -r requirements-dev.txt`) for shrinking, edge-case
+generation, and the full API.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, List
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[random.Random], Any]):
+        self._sample = sample
+
+
+class strategies:  # mirrors `hypothesis.strategies` as used in this repo
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def sample(rng: random.Random) -> List[Any]:
+            n = rng.randint(min_size, max_size)
+            return [elements._sample(rng) for _ in range(n)]
+
+        return _Strategy(sample)
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        options = list(seq)
+        return _Strategy(lambda rng: rng.choice(options))
+
+
+def settings(deadline=None, max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0)
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            for i in range(n):
+                drawn = {k: s._sample(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:  # noqa: BLE001 - annotate the example
+                    raise AssertionError(
+                        f"falsifying example (shim, draw {i}): {drawn!r}"
+                    ) from e
+
+        # Hide the drawn parameters from pytest's fixture resolution (any
+        # remaining parameters still resolve as fixtures, like hypothesis).
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for p in sig.parameters.values() if p.name not in strats
+        ])
+        return wrapper
+
+    return deco

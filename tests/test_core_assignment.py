@@ -4,7 +4,10 @@ scaling, migration protocol, IP model."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # fallback shim; see requirements-dev.txt
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import (
     AggTask,

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # fallback shim; see requirements-dev.txt
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels.agg_adam import ops as agg_ops, ref as agg_ref
 from repro.kernels.embed_bag import ops as eb_ops, ref as eb_ref
@@ -162,6 +165,8 @@ def test_embed_bag_matches_system_embedding_bag():
     key = jax.random.PRNGKey(0)
     table = jax.random.normal(key, (256, 16))
     idx = jax.random.randint(jax.random.PRNGKey(1), (8, 4), 0, 256)
+    # rtol covers f32 accumulation-order differences (take+segment_sum vs
+    # the kernel's in-bag loop), which exceed 1e-6 on some backends.
     np.testing.assert_allclose(
         np.asarray(eb_ops.embedding_bag(table, idx)),
-        np.asarray(sys_bag(table, idx)), rtol=1e-6)
+        np.asarray(sys_bag(table, idx)), rtol=1e-4, atol=1e-6)

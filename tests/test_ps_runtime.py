@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # fallback shim; see requirements-dev.txt
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.ps.compression import ErrorFeedback, compress_decompress, quantize_int8, dequantize_int8
 from repro.ps.elastic import migrate_flat_state, migration_bytes

@@ -1,0 +1,326 @@
+"""ServicePlan tests: compiled plans match the live assignment, multi-job
+migration round-trips, shared-runtime training is replan-proof, checkpoints
+restore across packings."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_ps_checkpoint, save_ps_checkpoint
+from repro.core import ParameterService
+from repro.ps.elastic import migrate_flat_state, migration_bytes
+from repro.ps.plan import (
+    plan_from_json,
+    plan_migration_bytes,
+    plan_padding_waste,
+    plan_to_json,
+    segment_mask,
+)
+from repro.ps.runtime import (
+    flatten_tree,
+    init_shared_state,
+    job_profile_from_tree,
+    seed_job_params,
+    unflatten_tree,
+)
+from repro.ps.service_runtime import ServiceRuntime
+
+
+def _tree(key, sizes):
+    ks = jax.random.split(key, len(sizes))
+    return {f"t{i}": jax.random.normal(k, (n,))
+            for i, (k, n) in enumerate(zip(ks, sizes))}
+
+
+def _service_with_jobs(order=("a", "b"), required=2, busy=0.45):
+    """A real service with two jobs registered in the given order (order
+    changes packing, so different orders give relocated layouts)."""
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=8)
+    trees = {
+        "a": _tree(jax.random.PRNGKey(0), (300, 120, 77, 30)),
+        "b": _tree(jax.random.PRNGKey(1), (250, 90, 60)),
+    }
+    for jid in order:
+        nbytes = sum(4 * v.size for v in trees[jid].values())
+        profile, specs = job_profile_from_tree(
+            jid, trees[jid], required_servers=required,
+            agg_throughput=nbytes / busy)
+        svc.register_job(profile, specs=specs)
+    return svc, trees
+
+
+# ------------------------------------------------------------- compilation
+def test_compile_plan_matches_live_assignment():
+    """Acceptance: segment->shard mapping exactly equals Aggregator.tasks."""
+    svc, _ = _service_with_jobs()
+    plan = svc.compile_plan()
+
+    from_plan = {
+        (s.job_id, s.tensor_id): plan.shard_ids[s.shard] for s in plan.segments
+    }
+    from_service = {
+        key: agg.agg_id for agg in svc.aggregators for key in agg.tasks
+    }
+    assert from_plan == from_service
+    assert len(plan.segments) == len(from_service)
+    # placement() (the Agent mapping table) agrees too.
+    for jid in ("a", "b"):
+        expect = {s.tensor_id: plan.shard_ids[s.shard]
+                  for s in plan.segments_of(jid)}
+        assert svc.placement(jid) == expect
+
+
+def test_compiled_plan_layout_is_dense_and_disjoint():
+    svc, _ = _service_with_jobs()
+    plan = svc.compile_plan()
+    for shard_idx in plan.shard_segments:
+        off = 0
+        for i in shard_idx:
+            seg = plan.segments[i]
+            assert seg.offset == off  # contiguous, no overlap, no gaps
+            off += seg.size
+        assert off <= plan.shard_len
+    assert 0.0 <= plan_padding_waste(plan) < 1.0
+
+
+def test_multijob_flatten_unflatten_roundtrip():
+    svc, trees = _service_with_jobs()
+    plan = svc.compile_plan()
+    flat = jnp.zeros((plan.total_len,))
+    for jid, tree in trees.items():
+        vec = flatten_tree(plan, tree, job_id=jid)
+        flat = jnp.where(jnp.asarray(segment_mask(plan, jid)), vec, flat)
+    for jid, tree in trees.items():
+        back = unflatten_tree(plan, flat, tree, job_id=jid)
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(back[k]),
+                                          np.asarray(tree[k]))
+
+
+def test_plan_json_roundtrip():
+    svc, _ = _service_with_jobs()
+    plan = svc.compile_plan()
+    assert plan_from_json(plan_to_json(plan)) == plan
+
+
+# -------------------------------------------------------------- migration
+def test_migrate_roundtrip_is_identity():
+    """Acceptance: migrate A->B->A is the identity on every segment, and
+    bytes-moved counts exactly the segments whose shard changed."""
+    svc_ab, trees = _service_with_jobs(order=("a", "b"))
+    svc_ba, _ = _service_with_jobs(order=("b", "a"))
+    plan_a, plan_b = svc_ab.compile_plan(), svc_ba.compile_plan()
+
+    state = init_shared_state(plan_a)
+    for jid, tree in trees.items():
+        state = seed_job_params(plan_a, state, jid, tree)
+    state["mu"] = jax.random.normal(jax.random.PRNGKey(3),
+                                    state["mu"].shape)
+    # Zero non-payload lanes so the round trip is exactly the identity.
+    mask = jnp.asarray(segment_mask(plan_a))
+    state["mu"] = jnp.where(mask, state["mu"], 0.0)
+
+    there = migrate_flat_state(state, plan_a, plan_b)
+    back = migrate_flat_state(there, plan_b, plan_a)
+    for k in ("flat", "mu", "nu"):
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(state[k]))
+
+    expected = sum(
+        s.size * 12
+        for s in plan_b.segments
+        if plan_a.shard_ids[plan_a.by_skey[s.skey].shard]
+        != plan_b.shard_ids[s.shard]
+    )
+    assert migration_bytes(plan_a, plan_b) == expected
+    assert migration_bytes(plan_a, plan_a) == 0
+    # Symmetric cross-Aggregator traffic for a pure relayout of the same jobs.
+    assert plan_migration_bytes(plan_b, plan_a) == expected
+
+
+def test_migration_bytes_ignores_pure_index_shift():
+    """A shard-index shift (an emptied Aggregator dropping out of the list)
+    moves no bytes off the surviving segments' actual host."""
+    from repro.ps.plan import FlatPlan, Segment
+
+    seg = dict(key="t0", offset=0, size=10, shape=(10,), dtype=np.float32,
+               job_id="b", tensor_id=0)
+    old = FlatPlan(2, 16, (Segment(shard=1, **seg),),
+                   shard_ids=("agg0", "agg1"))
+    same_host = FlatPlan(1, 16, (Segment(shard=0, **seg),),
+                         shard_ids=("agg1",))
+    other_host = FlatPlan(1, 16, (Segment(shard=0, **seg),),
+                          shard_ids=("agg2",))
+    assert plan_migration_bytes(old, same_host) == 0
+    assert plan_migration_bytes(old, other_host) == 10 * 12
+
+
+def test_migration_zero_fills_new_jobs_segments():
+    svc, trees = _service_with_jobs(order=("a",))
+    plan_a = svc.compile_plan()
+    state = init_shared_state(plan_a)
+    state = seed_job_params(plan_a, state, "a", trees["a"])
+
+    nbytes = sum(4 * v.size for v in trees["b"].values())
+    profile, specs = job_profile_from_tree(
+        "b", trees["b"], required_servers=2, agg_throughput=nbytes / 0.45)
+    svc.register_job(profile, specs=specs)
+    plan_ab = svc.compile_plan()
+
+    migrated = migrate_flat_state(state, plan_a, plan_ab)
+    back = unflatten_tree(plan_ab, migrated["flat"], trees["a"], job_id="a")
+    for k in trees["a"]:  # job a's tensors survive the arrival bit-exactly
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(trees["a"][k]))
+    b_mask = jnp.asarray(segment_mask(plan_ab, "b"))
+    assert not np.any(np.asarray(migrated["flat"])[np.asarray(b_mask)])
+
+
+# --------------------------------------------------- shared-service runtime
+def _quad_loss(params, batch):
+    return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+               for k in params)
+
+
+def _add_quad_job(rt, jid, tree, required=2, busy=0.45):
+    nbytes = sum(4 * v.size for v in tree.values())
+    rt.add_job(jid, tree, _quad_loss, lr=0.05, required_servers=required,
+               agg_throughput=nbytes / busy)
+
+
+def test_shared_runtime_two_jobs_replan_bit_exact():
+    """Acceptance: two jobs train through ONE shared flat space; a third
+    job's arrival + exit forces live replans; unmoved AND moved segments of
+    the survivors match a no-replan reference run bit-exactly."""
+    trees = {
+        "a": _tree(jax.random.PRNGKey(0), (40, 17, 8)),
+        "b": _tree(jax.random.PRNGKey(1), (33, 21)),
+    }
+    targets = {jid: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+               for jid, t in trees.items()}
+
+    def run(with_third_job):
+        svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=8)
+        rt = ServiceRuntime(svc)
+        for jid, tree in trees.items():
+            _add_quad_job(rt, jid, tree)
+        losses = {jid: [] for jid in trees}
+        for i in range(24):
+            if with_third_job and i == 8:
+                _add_quad_job(rt, "probe", _tree(jax.random.PRNGKey(7), (29,)),
+                              required=1, busy=0.6)
+            if with_third_job and i == 16:
+                rt.remove_job("probe")
+            for jid in trees:
+                m = rt.step(jid, {"target": targets[jid]})
+                losses[jid].append(float(m["loss"]))
+            if with_third_job and 8 <= i < 16:
+                rt.step("probe", {"target": jax.tree_util.tree_map(
+                    lambda p: p * 0 + 1.0, _tree(jax.random.PRNGKey(7), (29,)))})
+        return rt, losses
+
+    rt_replan, losses_replan = run(with_third_job=True)
+    rt_ref, losses_ref = run(with_third_job=False)
+
+    # Both runs replan when job b joins job a; only one rides through the
+    # probe's arrival + exit migrations as well.
+    assert rt_replan.n_replans >= rt_ref.n_replans + 2
+
+    for jid in trees:
+        # Losses identical step by step (migration is semantically free)...
+        np.testing.assert_array_equal(losses_replan[jid], losses_ref[jid])
+        assert losses_replan[jid][-1] < 0.35 * losses_replan[jid][0]
+        # ...and the full optimizer state matches bit-exactly per tensor.
+        for name in ("flat", "mu", "nu"):
+            moved = unflatten_tree(rt_replan.plan, rt_replan.state[name],
+                                   trees[jid], job_id=jid)
+            ref = unflatten_tree(rt_ref.plan, rt_ref.state[name],
+                                 trees[jid], job_id=jid)
+            for k in trees[jid]:
+                np.testing.assert_array_equal(np.asarray(moved[k]),
+                                              np.asarray(ref[k]))
+
+
+def test_shared_runtime_isolates_jobs():
+    """One job stepping must not perturb a co-resident job's segments."""
+    trees = {
+        "a": _tree(jax.random.PRNGKey(0), (40, 17)),
+        "b": _tree(jax.random.PRNGKey(1), (33,)),
+    }
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=8)
+    rt = ServiceRuntime(svc)
+    for jid, tree in trees.items():
+        _add_quad_job(rt, jid, tree)
+    target = jax.tree_util.tree_map(lambda p: p * 0 + 1.0, trees["a"])
+    before = jax.tree_util.tree_map(np.asarray, rt.params_of("b"))
+    for _ in range(3):
+        rt.step("a", {"target": target})
+    after = rt.params_of("b")
+    for k in trees["b"]:
+        np.testing.assert_array_equal(np.asarray(after[k]), before[k])
+    assert int(rt.state["counts"]["a"]) == 3
+    assert int(rt.state["counts"]["b"]) == 0
+
+
+def test_shared_runtime_push_compression():
+    """Compressed jobs get a shared error-feedback buffer, including when a
+    compressed job joins a runtime whose state predates compression."""
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=8)
+    rt = ServiceRuntime(svc)
+    tree_a = _tree(jax.random.PRNGKey(0), (40, 17))
+    rt.add_job("a", tree_a, _quad_loss, lr=0.05, required_servers=1)
+    assert "ef" not in rt.state
+    target_a = jax.tree_util.tree_map(lambda p: p * 0 + 1.0, tree_a)
+    first = float(rt.step("a", {"target": target_a})["loss"])
+
+    tree_c = _tree(jax.random.PRNGKey(2), (25,))
+    rt.add_job("c", tree_c, _quad_loss, lr=0.05, required_servers=1,
+               push_compression="int8")
+    assert "ef" in rt.state  # added on the replan a's state rode through
+    target_c = jax.tree_util.tree_map(lambda p: p * 0 + 1.0, tree_c)
+    losses = [float(rt.step("c", {"target": target_c})["loss"])
+              for _ in range(20)]
+    assert losses[-1] < 0.5 * losses[0]
+    # The uncompressed job keeps training against the widened state.
+    assert float(rt.step("a", {"target": target_a})["loss"]) < first
+
+
+def test_runtime_last_job_exit_clears_state():
+    svc = ParameterService(total_budget=8, n_clusters=1)
+    rt = ServiceRuntime(svc)
+    _add_quad_job(rt, "a", _tree(jax.random.PRNGKey(0), (16,)), required=1)
+    assert rt.plan is not None
+    rt.remove_job("a")
+    assert rt.plan is None and rt.state is None
+
+
+# -------------------------------------------------------------- checkpoint
+def test_ps_checkpoint_restores_across_packings(tmp_path):
+    """Acceptance: a checkpoint taken under one packing restores under
+    another -- every tensor (and moment) reads back identically."""
+    svc_ab, trees = _service_with_jobs(order=("a", "b"))
+    svc_ba, _ = _service_with_jobs(order=("b", "a"))
+    plan_a, plan_b = svc_ab.compile_plan(), svc_ba.compile_plan()
+    assert plan_a != plan_b
+
+    state = init_shared_state(plan_a)
+    for jid, tree in trees.items():
+        state = seed_job_params(plan_a, state, jid, tree)
+    state["mu"] = jnp.where(jnp.asarray(segment_mask(plan_a)),
+                            jax.random.normal(jax.random.PRNGKey(5),
+                                              state["mu"].shape), 0.0)
+
+    save_ps_checkpoint(tmp_path, 3, plan_a, state)
+    saved_plan, same = restore_ps_checkpoint(tmp_path, 3)
+    assert saved_plan == plan_a
+
+    got_plan, restored = restore_ps_checkpoint(tmp_path, 3, plan=plan_b)
+    assert got_plan == plan_b
+    for jid, tree in trees.items():
+        for name in ("flat", "mu"):
+            a = unflatten_tree(plan_a, state[name], tree, job_id=jid)
+            b = unflatten_tree(plan_b, restored[name], tree, job_id=jid)
+            for k in tree:
+                np.testing.assert_array_equal(np.asarray(a[k]),
+                                              np.asarray(b[k]))

@@ -12,8 +12,9 @@ from repro.ps import act_sharding, sharding as shd
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+
+    return make_host_mesh()
 
 
 def test_lm_rules_cover_all_params(mesh):
@@ -31,9 +32,9 @@ def test_lm_rules_cover_all_params(mesh):
 def _abstract_mesh(shape=(1, 4)):
     # Rule logic only consults mesh.shape; AbstractMesh avoids needing
     # real devices (this host has one CPU).
-    return jax.sharding.AbstractMesh(
-        shape, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_abstract_mesh
+
+    return make_abstract_mesh(shape, ("data", "model"))
 
 
 def test_divisibility_guard_degrades_to_replicated():

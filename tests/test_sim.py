@@ -51,3 +51,22 @@ def test_allocated_never_negative_and_bounded():
     res = _run()
     assert all(a >= 0 for a in res.allocated)
     assert all(a <= SimConfig().total_budget for a in res.allocated)
+
+
+def test_simulator_config_not_shared():
+    """Regression: `cfg` must not default to a single shared SimConfig."""
+    a, b = ClusterSimulator(), ClusterSimulator()
+    assert a.cfg is not b.cfg
+    a.cfg.total_budget = 1
+    assert b.cfg.total_budget != 1
+
+
+def test_simulator_tracks_compiled_plans():
+    """track_plans=True accounts migration bytes + padding waste from the
+    plans the service actually compiled."""
+    trace = philly_like_trace(n_jobs=40, seed=3)
+    res = ClusterSimulator(
+        SimConfig(n_clusters=2, track_plans=True)).run(trace)
+    assert res.n_replans > 0
+    assert res.migration_bytes_total >= 0
+    assert res.padding_waste and all(0.0 <= w < 1.0 for w in res.padding_waste)
