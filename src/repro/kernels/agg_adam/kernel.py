@@ -7,6 +7,14 @@ gradients on the VPU, applies the Adam update, and writes p/mu/nu tiles
 back -- arithmetic intensity goes from ~1/7 to ~1 fused op per byte, which
 is what makes aggregation burst-friendly on a shared Aggregator core.
 
+``aggregate_adam`` is the dense form (every block of the space belongs to
+the caller).  ``aggregate_adam_blocks`` is the SHARED-space form: the flat
+space hosts many jobs, and the grid iterates only the calling job's owned
+blocks -- a scalar-prefetched block-index operand drives the BlockSpec
+index maps, so the DMA engine gathers exactly the job's tiles of p/mu/nu
+out of the full buffers and the update costs O(job bytes) regardless of
+how much co-resident state shares the space.
+
 VMEM budget at BLOCK=16384 fp32: (W + 5) x 64 KiB tiles -- e.g. W=8 -> 832
 KiB, comfortably inside the ~16 MiB v5e VMEM with double buffering.
 """
@@ -18,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 16384  # elements per tile; 128-aligned for VPU lanes
 
@@ -32,10 +41,13 @@ def _kernel(p_ref, g_ref, mu_ref, nu_ref, bc_ref, out_p, out_mu, out_nu,
     mu_hat = mu * bc_ref[0]  # 1/(1-b1^t)
     nu_hat = nu * bc_ref[1]  # 1/(1-b2^t)
     p32 = p_ref[...].astype(jnp.float32)
-    upd = mu_hat / (jnp.sqrt(nu_hat) + eps)
+    # (lr*mu_hat)/denom keeps the final subtract free of a direct multiply
+    # operand, so XLA cannot FMA-contract it differently from the unfused
+    # paths (repro.ps.runtime._adam_math uses the same grouping).
+    upd = (lr * mu_hat) / (jnp.sqrt(nu_hat) + eps)
     if wd:
-        upd = upd + wd * p32
-    out_p[...] = (p32 - lr * upd).astype(out_p.dtype)
+        upd = upd + (lr * wd) * p32
+    out_p[...] = (p32 - upd).astype(out_p.dtype)
     out_mu[...] = mu
     out_nu[...] = nu
 
@@ -79,3 +91,72 @@ def aggregate_adam(p, grads, mu, nu, count, *, lr, b1=0.9, b2=0.999,
         ],
         interpret=interpret,
     )(p, grads, mu, nu, bc)
+
+
+def _block_kernel(bidx_ref, *refs, **kw):
+    # The scalar-prefetched block indices are consumed by the BlockSpec
+    # index maps only; the tile math is identical to the dense kernel.
+    del bidx_ref
+    _kernel(*refs, **kw)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lr", "b1", "b2", "eps", "wd", "block", "interpret"),
+)
+def aggregate_adam_blocks(p, grads, mu, nu, count, block_idx, *, lr, b1=0.9,
+                          b2=0.999, eps=1e-8, wd=0.0, block=BLOCK,
+                          interpret=False):
+    """Block-owned shared-space update: touch only the caller's blocks.
+
+    mu, nu: (N,) FULL shared buffers (N a multiple of `block`);
+    p: (N,) full, or already PACKED (M,) -- the caller usually has the
+    packed parameters in hand from the pull, so re-gathering them here
+    would cost an extra O(job bytes) pass; grads: (M,) or (W, M) PACKED
+    job-domain gradient with M = len(block_idx) * block; block_idx:
+    (n_own,) int32 owned block ids; count: int32 scalar (1-based, this
+    job's step counter).
+
+    Grid step i DMAs tile ``block_idx[i]`` of mu/nu (and of p when full --
+    scalar prefetch makes the indices available to the index maps before
+    the body runs) and tile ``i`` of the packed operands, then writes tile
+    ``i`` of the PACKED outputs -- the caller scatters them back onto its
+    owned lanes.  Returns (new_p, new_mu, new_nu), each (M,).
+    """
+    n = mu.shape[-1]
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    n_own = block_idx.shape[0]
+    m = grads.shape[-1]
+    assert m == n_own * block, (
+        f"packed gradient length {m} != n_own*block = {n_own}*{block}")
+    assert p.shape[-1] in (n, m), (
+        f"p length {p.shape[-1]} is neither full ({n}) nor packed ({m})")
+    t = count.astype(jnp.float32)
+    bc = jnp.stack([1.0 / (1.0 - b1 ** t), 1.0 / (1.0 - b2 ** t)])
+
+    owned = pl.BlockSpec((block,), lambda i, bidx: (bidx[i],))
+    packed = pl.BlockSpec((block,), lambda i, bidx: (i,))
+    if grads.ndim == 2:
+        g_spec = pl.BlockSpec((grads.shape[0], block), lambda i, bidx: (0, i))
+    else:
+        g_spec = packed
+    p_spec = packed if p.shape[-1] == m else owned
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_own,),
+        in_specs=[p_spec, g_spec, owned, owned,
+                  pl.BlockSpec((2,), lambda i, bidx: (0,))],
+        out_specs=[packed, packed, packed],
+    )
+    kernel = functools.partial(_block_kernel, lr=lr, b1=b1, b2=b2, eps=eps,
+                               wd=wd)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), p.dtype),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_idx.astype(jnp.int32), p, grads, mu, nu, bc)

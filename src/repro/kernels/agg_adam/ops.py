@@ -57,3 +57,21 @@ def adam_update(p, g, mu, nu, count, *, lr, b1=0.9, b2=0.999, eps=1e-8,
     """Drop-in for the optim.adam per-tensor update (single gradient)."""
     return aggregate_adam(p, g, mu, nu, count, lr=lr, b1=b1, b2=b2,
                           eps=eps, wd=wd)
+
+
+def block_adam_update(p, g_packed, mu, nu, count, *, block_idx, block,
+                      lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0,
+                      interpret=None):
+    """Shared-space block-owned update (see kernel.aggregate_adam_blocks).
+
+    mu/nu are the FULL shared (N,) buffers; p may be full or already
+    packed (the pull usually has it in hand).  Only the blocks named by
+    ``block_idx`` (a host-side int array, e.g. FlatPlan.job_layout().blocks)
+    are read, and the returned new_p/new_mu/new_nu are PACKED
+    (len(block_idx)*block,) vectors for the caller to scatter back.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    block_idx = jnp.asarray(block_idx, jnp.int32)
+    return K.aggregate_adam_blocks(
+        p, g_packed, mu, nu, count, block_idx, lr=lr, b1=b1, b2=b2,
+        eps=eps, wd=wd, block=int(block), interpret=interpret)

@@ -28,3 +28,19 @@ def aggregate_adam_ref(p, grads, mu, nu, count, *, lr, b1=0.9, b2=0.999,
         upd = upd + wd * p.astype(jnp.float32)
     new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
     return new_p, mu, nu
+
+
+def aggregate_adam_blocks_ref(p, grads, mu, nu, count, block_idx, *, block,
+                              lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    """Oracle for the block-owned kernel: gather the owned blocks of the
+    full p/mu/nu buffers, run the dense reference on the packed domain.
+
+    grads is already packed ((M,) or (W, M) with M = len(block_idx)*block);
+    returns packed (new_p, new_mu, new_nu)."""
+    import numpy as np
+
+    own = (np.asarray(block_idx, np.int64)[:, None] * block
+           + np.arange(block)).reshape(-1)
+    return aggregate_adam_ref(
+        jnp.take(p, own), grads, jnp.take(mu, own), jnp.take(nu, own),
+        count, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd)

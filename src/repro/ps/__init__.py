@@ -2,10 +2,12 @@
 
 plan.py          ServicePlan: compiles the control plane's live
                  tensor->Aggregator assignment into a multi-job FlatPlan
-                 (segments keyed by (job_id, tensor_key)); pure numpy.
-runtime.py       paper-faithful flat PS runtime: pull = all-gather,
-                 push = reduce-scatter, update masked to the job's own
-                 segments of the shared flat space.
+                 (segments keyed by (job_id, tensor_key), job runs padded
+                 to block_align) plus cached per-job access structures
+                 (payload_index, job_layout); pure numpy.
+runtime.py       paper-faithful flat PS runtime: pull = one row gather of
+                 the job's owned blocks, push = pack + row scatter,
+                 update = block-owned Adam (O(job bytes) per step).
 service_runtime.py  ServiceRuntime: one shared flat state for all jobs of
                  a ParameterService, migrated live on every replan.
 sharding.py      per-tensor sharding rules: the control plane's assignment
@@ -17,6 +19,7 @@ elastic.py       tensor migration / elastic re-mesh via resharding.
 
 from .plan import (
     FlatPlan,
+    JobLayout,
     Segment,
     TensorSpec,
     compile_service_plan,
@@ -29,6 +32,7 @@ from .plan import (
 
 __all__ = [
     "FlatPlan",
+    "JobLayout",
     "Segment",
     "TensorSpec",
     "compile_service_plan",

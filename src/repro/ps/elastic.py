@@ -17,7 +17,8 @@ checkpoint-restart strawman.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,11 +27,25 @@ import numpy as np
 from .plan import FlatPlan, plan_migration_bytes
 
 
-def _perm_old_to_new(old: FlatPlan, new: FlatPlan) -> Tuple[np.ndarray, np.ndarray]:
+class PlanPerm(NamedTuple):
+    """Precompiled (old -> new) lane permutation for one plan pair."""
+
+    idx: np.ndarray  # (new.total_len,) int64 source lanes
+    keep: np.ndarray  # (new.total_len,) bool: covered by a common segment
+    all_kept: bool
+    identity: bool  # the move is a no-op (every lane stays put)
+
+
+@functools.lru_cache(maxsize=8)
+def _plan_perm(old: FlatPlan, new: FlatPlan) -> PlanPerm:
     """(idx, keep) with new_flat[i] = old_flat[idx[i]] where keep[i], else 0.
 
     Lanes not covered by a common segment (padding, or segments of a job
-    that was not in the old plan) get keep=False."""
+    that was not in the old plan) get keep=False.  Cached per
+    ``(old, new)`` plan pair (plans are frozen/hashable), so periodic
+    rebalances that bounce between the same layouts -- or that move
+    nothing at all -- never recompute or re-trace the permutation.
+    """
     old_by_key = old.by_skey
     idx = np.zeros(new.total_len, dtype=np.int64)
     keep = np.zeros(new.total_len, dtype=bool)
@@ -46,7 +61,21 @@ def _perm_old_to_new(old: FlatPlan, new: FlatPlan) -> Tuple[np.ndarray, np.ndarr
         dst = new.start(seg)
         idx[dst : dst + seg.size] = np.arange(src, src + seg.size)
         keep[dst : dst + seg.size] = True
-    return idx, keep
+    all_kept = bool(keep.all())
+    identity = (
+        all_kept
+        and old.total_len == new.total_len
+        and bool((idx == np.arange(new.total_len)).all())
+    )
+    idx.setflags(write=False)
+    keep.setflags(write=False)
+    return PlanPerm(idx, keep, all_kept, identity)
+
+
+def _perm_old_to_new(old: FlatPlan, new: FlatPlan) -> Tuple[np.ndarray, np.ndarray]:
+    """Back-compat view of :func:`_plan_perm` (idx, keep)."""
+    perm = _plan_perm(old, new)
+    return perm.idx, perm.keep
 
 
 def migrate_flat_state(state: Dict[str, Any], old: FlatPlan, new: FlatPlan):
@@ -54,18 +83,24 @@ def migrate_flat_state(state: Dict[str, Any], old: FlatPlan, new: FlatPlan):
 
     Every 1-D leaf of length ``old.total_len`` (flat, mu, nu, ef) is
     gathered onto the new layout; scalars (step counters, incl. the shared
-    state's per-job ``counts``) pass through untouched.  Common segments are
-    relocated bit-exactly."""
-    idx_np, keep_np = _perm_old_to_new(old, new)
-    idx = jnp.asarray(idx_np)
-    keep = jnp.asarray(keep_np)
-    all_kept = bool(keep_np.all())
+    state's per-job ``counts``) pass through untouched.  Common segments
+    are relocated bit-exactly.  Equal plans -- and permutations that turn
+    out to be the identity (a rebalance that moved nothing) -- return the
+    state untouched without dispatching a single device op.
+    """
+    if old == new:
+        return state
+    perm = _plan_perm(old, new)
+    if perm.identity:
+        return state
+    idx = jnp.asarray(perm.idx)
+    keep = jnp.asarray(perm.keep)
 
     def move(x):
         if getattr(x, "ndim", 0) != 1 or x.shape[0] != old.total_len:
             return x
         moved = jnp.take(x, idx, axis=0)
-        if all_kept:
+        if perm.all_kept:
             return moved
         return jnp.where(keep, moved, jnp.zeros((), x.dtype))
 

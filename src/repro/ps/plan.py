@@ -60,17 +60,61 @@ class Segment:
 
 
 @dataclass(frozen=True)
+class JobLayout:
+    """Precompiled O(job)-cost access structure for one job of a plan.
+
+    Everything here is plain numpy, computed once at plan time, so the hot
+    path never rescans segments: ``own_idx`` drives the pull gather and the
+    update scatter, ``blocks`` drives the block-owned Pallas kernel's
+    scalar-prefetch grid, and ``slots`` place each tensor inside the packed
+    (job-local) vector.
+    """
+
+    job_id: str
+    block: int  # element granularity of block ownership
+    n_total_blocks: int  # blocks in the whole flat space
+    blocks: np.ndarray  # (n_blocks,) int32 owned block ids, ascending
+    own_idx: np.ndarray  # (n_blocks*block,) int32 flat indices of owned lanes
+    slots: Tuple[Tuple[str, int, int, Tuple[int, ...], Any], ...]
+    # per segment, in packed order: (key, packed_start, size, shape, dtype)
+
+    @property
+    def packed_len(self) -> int:
+        """Length of the packed (block-padded) job-local vector."""
+        return int(self.own_idx.size)
+
+    @property
+    def payload_elements(self) -> int:
+        return sum(size for _, _, size, _, _ in self.slots)
+
+    @property
+    def covers_all(self) -> bool:
+        """True when the job owns every block of the flat space (single-job
+        plans): gather/scatter degenerate to the identity."""
+        return self.blocks.size == self.n_total_blocks
+
+
+@dataclass(frozen=True)
 class FlatPlan:
     """Physical layout of one shared flat aggregation space.
 
     ``shard_ids`` names the Aggregator backing each shard (empty for
     synthetic single-job plans built by ``build_flat_plan``).
+    ``block_align`` is the element granularity at which each job's run of
+    segments within a shard is padded (and the shard length rounded), so
+    every ``block_align``-sized block of the flat space holds at most ONE
+    job's payload -- the invariant the block-owned update path relies on.
+
+    Per-job access structures (:meth:`payload_index`, :meth:`job_layout`)
+    are compiled lazily and cached on the plan, so the data plane's hot
+    path costs O(job bytes) instead of O(total space) per step.
     """
 
     n_shards: int
     shard_len: int  # padded elements per shard
     segments: Tuple[Segment, ...]  # in (shard, offset) order
     shard_ids: Tuple[str, ...] = ()
+    block_align: int = 1  # job-run padding granularity (1 = legacy layout)
 
     @property
     def total_len(self) -> int:
@@ -109,6 +153,89 @@ class FlatPlan:
         """Absolute element offset of a segment in the flat vector."""
         return seg.shard * self.shard_len + seg.offset
 
+    # --------------------------------------- precompiled access structures
+    @cached_property
+    def _lane_owner(self) -> np.ndarray:
+        """Per-lane owner: index into ``job_ids``, -1 on padding lanes."""
+        owner = np.full(self.total_len, -1, np.int32)
+        jix = {j: i for i, j in enumerate(self.job_ids)}
+        for seg in self.segments:
+            s = self.start(seg)
+            owner[s : s + seg.size] = jix[seg.job_id]
+        return owner
+
+    @cached_property
+    def _access_cache(self) -> Dict[Any, Any]:
+        return {}
+
+    def payload_index(self, job_id: Optional[str] = None) -> np.ndarray:
+        """Flat positions of (the job's) payload lanes, in segment order.
+
+        Exact per-lane gather/scatter map -- the fallback access structure
+        when a plan is not block-exclusive (hand-built / legacy layouts);
+        the hot path uses the coarser, memcpy-friendly :meth:`job_layout`
+        blocks instead.  Cached per job; read-only.
+        """
+        key = ("payload", job_id)
+        idx = self._access_cache.get(key)
+        if idx is None:
+            parts = [
+                np.arange(self.start(s), self.start(s) + s.size, dtype=np.int32)
+                for s in self.segments
+                if job_id is None or s.job_id == job_id
+            ]
+            idx = (np.concatenate(parts) if parts
+                   else np.zeros((0,), np.int32))
+            idx.setflags(write=False)
+            self._access_cache[key] = idx
+        return idx
+
+    def job_layout(self, job_id: str, block: Optional[int] = None) -> JobLayout:
+        """Compile (and cache) the job's block-owned access structure.
+
+        ``block`` defaults to the plan's ``block_align``.  Raises
+        ``ValueError`` if the plan's layout is not block-exclusive at that
+        granularity (some block mixes two jobs' payload), in which case the
+        masked O(total-space) path is the only correct one.
+        """
+        block = self.block_align if block is None else block
+        key = ("layout", job_id, block)
+        cached = self._access_cache.get(key)
+        if cached is not None:
+            return cached
+        if job_id not in self.job_ids:
+            raise ValueError(f"job {job_id!r} has no segments in this plan")
+        if block < 1 or self.shard_len % block:
+            raise ValueError(
+                f"block={block} does not divide shard_len={self.shard_len}")
+        jix = list(self.job_ids).index(job_id)
+        per_block = self._lane_owner.reshape(-1, block)
+        mine = (per_block == jix).any(axis=1)
+        foreign = ((per_block >= 0) & (per_block != jix)).any(axis=1)
+        if bool((mine & foreign).any()):
+            raise ValueError(
+                f"plan is not block-exclusive at block={block}: job "
+                f"{job_id!r} shares a block with another job (legacy "
+                f"unaligned layout? recompile with block_align >= block)")
+        blocks = np.nonzero(mine)[0].astype(np.int32)
+        own_idx = (blocks[:, None].astype(np.int64) * block
+                   + np.arange(block)).reshape(-1).astype(np.int32)
+        slots = []
+        for seg in self.segments:
+            if seg.job_id != job_id:
+                continue
+            pstart = int(np.searchsorted(own_idx, self.start(seg)))
+            slots.append((seg.key, pstart, seg.size, seg.shape, seg.dtype))
+        slots.sort(key=lambda s: s[1])
+        blocks.setflags(write=False)
+        own_idx.setflags(write=False)
+        layout = JobLayout(job_id=job_id, block=block,
+                           n_total_blocks=self.total_len // block,
+                           blocks=blocks, own_idx=own_idx,
+                           slots=tuple(slots))
+        self._access_cache[key] = layout
+        return layout
+
 
 def plan_padding_waste(plan: FlatPlan) -> float:
     """Fraction of the flat space that is padding (imbalance cost)."""
@@ -137,10 +264,14 @@ def compile_service_plan(
 
     One shard per Aggregator, in the given (stable) order; within a shard,
     segments are laid contiguously in ``(job_id, tensor_id)`` order so the
-    layout is a pure function of the assignment.  ``specs`` supplies real
-    shapes/dtypes per ``job_id -> tensor_id``; tasks without a bound spec
-    (control-plane-only jobs, e.g. in the simulator) fall back to a 1-D
-    float32 tensor sized from ``AggTask.nbytes``.
+    layout is a pure function of the assignment.  Each job's run of
+    segments is padded up to a ``pad_to`` boundary, so every ``pad_to``
+    block of the flat space belongs to at most one job -- the invariant
+    behind the block-owned O(job-bytes) update path (``job_layout``).
+    ``specs`` supplies real shapes/dtypes per ``job_id -> tensor_id``;
+    tasks without a bound spec (control-plane-only jobs, e.g. in the
+    simulator) fall back to a 1-D float32 tensor sized from
+    ``AggTask.nbytes``.
     """
     specs = specs or {}
     segments: List[Segment] = []
@@ -148,7 +279,11 @@ def compile_service_plan(
     shard_ids: List[str] = []
     for shard, agg in enumerate(aggregators):
         off = 0
+        prev_job: Optional[str] = None
         for (job_id, tensor_id), task in sorted(agg.tasks.items()):
+            if prev_job is not None and job_id != prev_job:
+                off = -(-off // pad_to) * pad_to  # align the job-run start
+            prev_job = job_id
             spec = specs.get(job_id, {}).get(tensor_id)
             if spec is None:
                 n = max(1, task.nbytes // 4)
@@ -167,6 +302,7 @@ def compile_service_plan(
         shard_len=shard_len,
         segments=tuple(segments),
         shard_ids=tuple(shard_ids),
+        block_align=pad_to,
     )
 
 
@@ -203,6 +339,7 @@ def plan_to_json(plan: FlatPlan) -> Dict[str, Any]:
         "n_shards": plan.n_shards,
         "shard_len": plan.shard_len,
         "shard_ids": list(plan.shard_ids),
+        "block_align": plan.block_align,
         "segments": [
             {
                 "key": s.key,
@@ -238,6 +375,7 @@ def plan_from_json(obj: Mapping[str, Any]) -> FlatPlan:
         shard_len=int(obj["shard_len"]),
         segments=segments,
         shard_ids=tuple(obj.get("shard_ids", ())),
+        block_align=int(obj.get("block_align", 1)),
     )
 
 

@@ -5,11 +5,19 @@ compiles -- via ``ParameterService.compile_plan()`` / repro.ps.plan -- into
 the *layout of a flat parameter vector* across aggregator shards, shared by
 every registered job:
 
-  pull    unflatten(flat)   -> all-gather of the job's segments
-  push    flatten(grads)    -> reduce-scatter onto the owner layout
-  update  elementwise Adam on the job's own segments only (masked when the
-          flat space is shared; fused Pallas kernel on TPU,
-          repro.kernels.agg_adam)
+  pull    one gather of the job's lanes (plan-precompiled index map)
+  push    one packed concatenate + one scatter onto the owner layout
+  update  elementwise Adam on the job's OWNED lanes only -- O(job bytes),
+          not O(total space); fused Pallas kernel iterates the job's owned
+          blocks via a scalar-prefetched block-index operand on TPU
+          (repro.kernels.agg_adam)
+
+Every per-job access structure (gather/scatter index maps, owned-block
+lists) is compiled once at plan time (repro.ps.plan.FlatPlan.payload_index
+/ .job_layout), so the step's HLO op count is O(1) in the number of
+co-resident segments and its FLOPs/bytes are proportional to the job's own
+lanes.  ``update_mode="masked"`` keeps the legacy full-space masked path
+for parity tests and benchmarks.
 
 Segments are keyed by ``(job_id, tensor_key)``, so two jobs with identically
 named tensors coexist in one space, and a control-plane replan is executed
@@ -132,7 +140,7 @@ def build_flat_plan(abstract_params, n_shards: int, mode: str = "balanced",
         shard_sizes.append(off)
     shard_len = max(1, -(-max(shard_sizes) // pad_to) * pad_to)
     return FlatPlan(n_shards=n_shards, shard_len=shard_len,
-                    segments=tuple(segments))
+                    segments=tuple(segments), block_align=pad_to)
 
 
 def flatten_tree(plan: FlatPlan, tree, dtype=jnp.float32,
@@ -141,33 +149,39 @@ def flatten_tree(plan: FlatPlan, tree, dtype=jnp.float32,
 
     With ``job_id`` given, only that job's segments are filled -- other
     jobs' lanes come out zero, so a per-job gradient vector never perturbs
-    co-resident jobs.  Linear in the number of segments (per-shard segment
-    indices are precomputed on the plan).
+    co-resident jobs.  Consecutive foreign/padding lanes merge into ONE
+    zero chunk each, so the concatenate has O(job segments + shards)
+    operands -- independent of how many co-resident segments share the
+    space (the old path emitted one chunk per co-resident segment).
     """
     by_key = {
         _leaf_key(path): leaf
         for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
     }
+    own = [seg for seg in plan.segments
+           if job_id is None or seg.job_id == job_id]
+    own.sort(key=plan.start)
     parts: List[jnp.ndarray] = []
-    for shard_idx in plan.shard_segments:
-        used = 0
-        for i in shard_idx:
-            seg = plan.segments[i]
-            if job_id is not None and seg.job_id != job_id:
-                parts.append(jnp.zeros((seg.size,), dtype))
-            else:
-                parts.append(by_key[seg.key].reshape(-1).astype(dtype))
-            used += seg.size
-        if used < plan.shard_len:
-            parts.append(jnp.zeros((plan.shard_len - used,), dtype))
+    pos = 0
+    for seg in own:
+        start = plan.start(seg)
+        if start > pos:  # merged gap: padding + other jobs' lanes
+            parts.append(jnp.zeros((start - pos,), dtype))
+        parts.append(by_key[seg.key].reshape(-1).astype(dtype))
+        pos = start + seg.size
+    if pos < plan.total_len:
+        parts.append(jnp.zeros((plan.total_len - pos,), dtype))
     if not parts:
         return jnp.zeros((plan.total_len,), dtype)
-    return jnp.concatenate(parts)
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
 
 
 def unflatten_tree(plan: FlatPlan, flat: jnp.ndarray, abstract_params,
                    job_id: Optional[str] = None):
-    """Unpack (a job's segments of) the flat vector into a pytree (pull)."""
+    """Unpack (a job's segments of) the flat vector into a pytree (pull).
+
+    One contiguous slice per OWN segment -- O(job leaves), never O(total
+    segments)."""
     out_by_key = {}
     for seg in plan.segments:
         if job_id is not None and seg.job_id != job_id:
@@ -184,7 +198,84 @@ def unflatten_tree(plan: FlatPlan, flat: jnp.ndarray, abstract_params,
     )
 
 
+def _gather_owned(layout, vec: jnp.ndarray) -> jnp.ndarray:
+    """Pull a job's owned lanes out of a full flat buffer -- ONE
+    block-structured row gather (a memcpy per owned block, not a scalar
+    loop per element); the identity when the job owns the whole space."""
+    if layout.covers_all:
+        return vec
+    rows = vec.reshape(-1, layout.block)[jnp.asarray(layout.blocks)]
+    return rows.reshape(-1)
+
+
+def _scatter_owned(layout, vec: jnp.ndarray, packed) -> jnp.ndarray:
+    """Write a packed job-local vector back onto the owned lanes of a full
+    flat buffer -- ONE block-structured row scatter (in place under
+    donation)."""
+    if layout.covers_all:
+        return jnp.asarray(packed, vec.dtype).reshape(vec.shape)
+    rows = jnp.asarray(packed, vec.dtype).reshape(-1, layout.block)
+    return vec.reshape(-1, layout.block).at[jnp.asarray(layout.blocks)].set(
+        rows, unique_indices=True, indices_are_sorted=True
+    ).reshape(vec.shape)
+
+
 # ------------------------------------------------------------------ PS step
+def _adam_math(p32, g, mu0, nu0, count, *, lr, b1, b2, eps):
+    """One fp32 Adam update in EXACTLY the fused kernel's arithmetic form
+    (reciprocal-multiply bias correction, same operation grouping), so the
+    unfused paths and the Pallas kernel agree bit-for-bit."""
+    mu = b1 * mu0 + (1.0 - b1) * g
+    nu = b2 * nu0 + (1.0 - b2) * g * g
+    t = count.astype(jnp.float32)
+    # The barriers materialize the bias-correction scalars: fused into the
+    # elementwise loop, XLA recomputes ``b1 ** t`` per lane with the
+    # vectorized pow approximation, whose last ulp differs from the scalar
+    # lowering -- and differs BETWEEN program shapes, breaking masked /
+    # block / Pallas bit-parity.  A standalone scalar pow is deterministic
+    # (and free).
+    bc1 = jax.lax.optimization_barrier(1.0 / (1.0 - b1 ** t))
+    bc2 = jax.lax.optimization_barrier(1.0 / (1.0 - b2 ** t))
+    mu_hat = mu * bc1
+    nu_hat = nu * bc2
+    # (lr*mu_hat)/denom - the sub sees a division, not a multiply, so XLA
+    # cannot FMA-contract the update differently across program shapes.
+    new_p = p32 - (lr * mu_hat) / (jnp.sqrt(nu_hat) + eps)
+    return new_p, mu, nu
+
+
+def _unpack_slots(layout, packed, abstract_params):
+    """Packed job-local vector -> pytree (static, plan-independent slices)."""
+    out_by_key = {
+        key: jax.lax.slice(packed, (start,), (start + size,))
+        .reshape(shape).astype(dtype)
+        for key, start, size, shape, dtype in layout.slots
+    }
+    leaves, _ = jax.tree_util.tree_flatten_with_path(abstract_params)
+    ordered = [out_by_key[_leaf_key(path)] for path, _ in leaves]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(abstract_params), ordered)
+
+
+def _pack_slots(layout, tree, dtype=jnp.float32):
+    """Pytree -> packed job-local vector (zeros on intra-block padding)."""
+    by_key = {
+        _leaf_key(path): leaf
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
+    }
+    parts, pos = [], 0
+    for key, start, size, _, _ in layout.slots:
+        if start > pos:
+            parts.append(jnp.zeros((start - pos,), dtype))
+        parts.append(by_key[key].reshape(-1).astype(dtype))
+        pos = start + size
+    if pos < layout.packed_len:
+        parts.append(jnp.zeros((layout.packed_len - pos,), dtype))
+    if not parts:
+        return jnp.zeros((0,), dtype)
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
 def make_ps_train_step(
     model_loss: Callable[[Any, Any], jnp.ndarray],
     plan: FlatPlan,
@@ -196,6 +287,7 @@ def make_ps_train_step(
     push_compression: Optional[str] = None,  # None | 'bf16' | 'int8'
     fused_kernel: bool = False,
     job_id: Optional[str] = None,
+    update_mode: str = "block",  # 'block' (O(job)) | 'masked' (legacy)
 ):
     """Build the PS-mode train step.
 
@@ -204,16 +296,31 @@ def make_ps_train_step(
 
     Shared-service mode (``job_id`` given): the same flat/mu/nu buffers are
     shared by every job in the plan; this job's step touches ONLY its own
-    segments (masked Adam) and keeps its own step counter in
-    state["counts"][job_id], so co-resident jobs' moments and bias
-    correction are untouched.
+    lanes and keeps its own step counter in state["counts"][job_id], so
+    co-resident jobs' moments and bias correction are untouched.  With the
+    default ``update_mode="block"`` the whole step runs in the job's packed
+    domain -- pull is one gather through the plan's precompiled index map,
+    push is one concatenate, the Adam update costs O(job bytes), and the
+    results scatter back onto the job's owned lanes; ``fused_kernel=True``
+    replaces the update with the block-owned Pallas kernel whose grid
+    iterates only the job's owned blocks (scalar-prefetched block indices).
+    ``update_mode="masked"`` keeps the legacy full-space ``jnp.where`` path
+    (O(total space) per step) for parity tests and benchmarks.
 
     All flat buffers are sharded P(aggregation axes) by the caller; the
-    unflatten/flatten pair makes GSPMD emit the pull all-gather and push
+    gather/scatter pair makes GSPMD emit the pull all-gather and push
     reduce-scatter onto the owner layout.
     """
     from repro.ps import act_sharding as act
     from repro.ps.compression import compress_decompress
+
+    if update_mode not in ("block", "masked"):
+        raise ValueError(f"unknown update_mode {update_mode!r}")
+    if job_id is not None and update_mode == "block":
+        return _make_block_step(
+            model_loss, plan, abstract_params, lr=lr, b1=b1, b2=b2, eps=eps,
+            push_compression=push_compression, fused_kernel=fused_kernel,
+            job_id=job_id)
 
     mask = None
     if job_id is not None:
@@ -246,12 +353,9 @@ def make_ps_train_step(
                 flat, gflat, state["mu"], state["nu"], count,
                 lr=lr, b1=b1, b2=b2, eps=eps, wd=0.0)
         else:
-            mu = b1 * state["mu"] + (1 - b1) * gflat
-            nu = b2 * state["nu"] + (1 - b2) * jnp.square(gflat)
-            t = count.astype(jnp.float32)
-            mu_hat = mu / (1 - b1 ** t)
-            nu_hat = nu / (1 - b2 ** t)
-            new_flat = flat - lr * mu_hat / (jnp.sqrt(nu_hat) + eps)
+            new_flat, mu, nu = _adam_math(
+                flat, gflat, state["mu"], state["nu"], count,
+                lr=lr, b1=b1, b2=b2, eps=eps)
         if mask is not None:
             # Update only this job's lanes of the shared space.
             new_flat = jnp.where(mask, new_flat, flat)
@@ -272,6 +376,66 @@ def make_ps_train_step(
     return step
 
 
+def _make_block_step(model_loss, plan, abstract_params, *, lr, b1, b2, eps,
+                     push_compression, fused_kernel, job_id):
+    """O(job-bytes) shared-service step over the job's packed domain.
+
+    The flat space never gets a full-length pass: pull gathers the job's
+    owned lanes (one HLO gather), the update runs on the packed vector (or
+    in the block-owned Pallas kernel), and three scatters write the owned
+    lanes back.  Co-resident jobs' lanes are never read or written, so the
+    HLO op count and the update FLOPs/bytes are independent of how many
+    jobs share the space.
+    """
+    from repro.ps import act_sharding as act
+    from repro.ps.compression import compress_decompress
+
+    layout = plan.job_layout(job_id)
+
+    def step(state, batch):
+        flat = state["flat"]
+        packed_p = _gather_owned(layout, flat)  # PULL: one row gather
+        params = _unpack_slots(layout, packed_p, abstract_params)
+        loss, grads = jax.value_and_grad(model_loss)(params, batch)
+        g = _pack_slots(layout, grads)  # PUSH: one concatenate
+        if push_compression:
+            g = g + _gather_owned(layout, state["ef"])
+            q = compress_decompress(g, push_compression)
+            resid = g - q
+            g = q
+        g = act.constrain(g, "all")  # reduce-scatter point
+
+        count = state["counts"][job_id] + 1
+        if fused_kernel:
+            from repro.kernels.agg_adam import ops as agg_ops
+
+            # The kernel DMAs the owned blocks of the FULL mu/nu buffers
+            # itself (scalar-prefetched block indices); p goes in already
+            # packed -- the pull materialized it, so re-gathering would
+            # cost an extra O(job bytes) pass.
+            new_p, mu, nu = agg_ops.block_adam_update(
+                packed_p, g, state["mu"], state["nu"], count,
+                block_idx=layout.blocks, block=layout.block,
+                lr=lr, b1=b1, b2=b2, eps=eps, wd=0.0)
+        else:
+            new_p, mu, nu = _adam_math(
+                packed_p, g, _gather_owned(layout, state["mu"]),
+                _gather_owned(layout, state["nu"]), count,
+                lr=lr, b1=b1, b2=b2, eps=eps)
+
+        new_state = dict(state)
+        new_state["flat"] = act.constrain(
+            _scatter_owned(layout, flat, new_p), "all")
+        new_state["mu"] = _scatter_owned(layout, state["mu"], mu)
+        new_state["nu"] = _scatter_owned(layout, state["nu"], nu)
+        if push_compression:
+            new_state["ef"] = _scatter_owned(layout, state["ef"], resid)
+        new_state["counts"] = dict(state["counts"], **{job_id: count})
+        return new_state, {"loss": loss}
+
+    return step
+
+
 def init_ps_state(plan: FlatPlan, params, push_compression=None):
     """Single-job state: flat buffers hold exactly this job's tensors."""
     flat = flatten_tree(plan, params, jnp.float32)
@@ -286,9 +450,13 @@ def init_ps_state(plan: FlatPlan, params, push_compression=None):
     return state
 
 
-def init_shared_state(plan: FlatPlan, push_compression=None):
+def init_shared_state(plan: FlatPlan, needs_ef: bool = False):
     """Empty shared-service state for a compiled multi-job plan; jobs are
-    seeded into their own segments with :func:`seed_job_params`."""
+    seeded into their own segments with :func:`seed_job_params`.
+
+    ``needs_ef`` allocates the shared error-feedback buffer used by jobs
+    that push compressed gradients.
+    """
     flat = jnp.zeros((plan.total_len,), jnp.float32)
     state = {
         "flat": flat,
@@ -296,22 +464,55 @@ def init_shared_state(plan: FlatPlan, push_compression=None):
         "nu": jnp.zeros_like(flat),
         "counts": {},
     }
-    if push_compression:
+    if needs_ef:
         state["ef"] = jnp.zeros_like(flat)
     return state
 
 
 def seed_job_params(plan: FlatPlan, state, job_id: str, params):
     """Write a job's initial parameters into its segments of the shared flat
-    space (fresh Adam moments + step counter for that job only)."""
-    mask = jnp.asarray(segment_mask(plan, job_id))
-    vec = flatten_tree(plan, params, jnp.float32, job_id)
+    space (fresh Adam moments + step counter for that job only).  One
+    block-structured row scatter per buffer through the plan's compiled
+    layout; other jobs' lanes are untouched.  (Plans that are not
+    block-exclusive -- hand-built or legacy-deserialized -- fall back to a
+    per-lane scatter through ``payload_index``.)"""
     new_state = dict(state)
-    new_state["flat"] = jnp.where(mask, vec, state["flat"])
-    new_state["mu"] = jnp.where(mask, 0.0, state["mu"])
-    new_state["nu"] = jnp.where(mask, 0.0, state["nu"])
-    if "ef" in state:
-        new_state["ef"] = jnp.where(mask, 0.0, state["ef"])
+    try:
+        layout = plan.job_layout(job_id)
+    except ValueError:
+        idx_np = plan.payload_index(job_id)
+        idx = jnp.asarray(idx_np)
+        put = dict(unique_indices=True,
+                   indices_are_sorted=bool(np.all(np.diff(idx_np) > 0)))
+        by_key = {
+            _leaf_key(path): leaf
+            for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]
+        }
+        parts = [by_key[s.key].reshape(-1).astype(jnp.float32)
+                 for s in plan.segments if s.job_id == job_id]
+        packed = (jnp.concatenate(parts) if len(parts) > 1 else
+                  parts[0] if parts else jnp.zeros((0,), jnp.float32))
+        new_state["flat"] = state["flat"].at[idx].set(packed, **put)
+        new_state["mu"] = state["mu"].at[idx].set(0.0, **put)
+        new_state["nu"] = state["nu"].at[idx].set(0.0, **put)
+        if "ef" in state:
+            new_state["ef"] = state["ef"].at[idx].set(0.0, **put)
+    else:
+        packed = _pack_slots(layout, params)
+
+        def zeroed(buf):
+            # A fresh zeros vector per buffer: with covers_all layouts
+            # _scatter_owned returns its packed argument as-is, and a
+            # shared zeros array would alias mu/nu -- the donated step
+            # then trips "donate the same buffer twice".
+            return _scatter_owned(
+                layout, buf, jnp.zeros((layout.packed_len,), jnp.float32))
+
+        new_state["flat"] = _scatter_owned(layout, state["flat"], packed)
+        new_state["mu"] = zeroed(state["mu"])
+        new_state["nu"] = zeroed(state["nu"])
+        if "ef" in state:
+            new_state["ef"] = zeroed(state["ef"])
     new_state["counts"] = dict(state["counts"],
                                **{job_id: jnp.zeros((), jnp.int32)})
     return new_state

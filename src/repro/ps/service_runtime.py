@@ -2,7 +2,9 @@
 
 Owns ONE flat aggregation space (flat/mu/nu [+ per-job step counters]) laid
 out by the service's compiled plan, with every registered job training
-through its own masked segments of that space.  Subscribes to the control
+through its own owned blocks of that space (O(job-bytes) per step via the
+plan's precompiled index maps; pass ``update_mode="masked"`` per job for
+the legacy full-space path).  Subscribes to the control
 plane's replan events: whenever ``register_job`` / ``job_exit`` /
 ``periodic_rebalance`` changes the tensor->Aggregator assignment, the
 shared state is migrated onto the new layout (``migrate_flat_state``) and
@@ -98,7 +100,14 @@ class ServiceRuntime:
 
     def remove_job(self, job_id: str) -> None:
         """Job exit: its segments are dropped from the plan; everyone else's
-        state survives (possibly consolidated by Aggregator recycling)."""
+        state survives (possibly consolidated by Aggregator recycling).
+
+        Raises ``ValueError`` for a job this runtime does not know,
+        leaving runtime and service state untouched."""
+        if job_id not in self._jobs:
+            raise ValueError(
+                f"unknown job {job_id!r}: not registered with this runtime "
+                f"(have {sorted(self._jobs)})")
         self._jobs.pop(job_id)
         self._steps.pop(job_id, None)
         self.service.job_exit(job_id)
@@ -141,7 +150,7 @@ class ServiceRuntime:
             self.total_migration_bytes += moved
             self.n_replans += 1
         else:
-            self.state = init_shared_state(new, self._needs_ef() or None)
+            self.state = init_shared_state(new, needs_ef=self._needs_ef())
         if self._needs_ef() and "ef" not in self.state:
             # A compressed job joined a runtime whose state predates it.
             self.state = dict(self.state,

@@ -71,15 +71,26 @@ def test_compile_plan_matches_live_assignment():
         assert svc.placement(jid) == expect
 
 
-def test_compiled_plan_layout_is_dense_and_disjoint():
+def test_compiled_plan_layout_is_block_aligned_and_disjoint():
+    """Within a shard, each job's run of segments is contiguous and starts
+    on a block_align boundary (gaps appear ONLY between different jobs'
+    runs, and only to round up to the boundary) -- the invariant that makes
+    every block_align-sized block single-job (block-owned updates)."""
     svc, _ = _service_with_jobs()
     plan = svc.compile_plan()
+    assert plan.block_align == 8  # plan_pad_to flows through
     for shard_idx in plan.shard_segments:
         off = 0
+        prev_job = None
         for i in shard_idx:
             seg = plan.segments[i]
-            assert seg.offset == off  # contiguous, no overlap, no gaps
-            off += seg.size
+            if prev_job is None or seg.job_id == prev_job:
+                assert seg.offset == off  # contiguous within a job's run
+            else:
+                aligned = -(-off // plan.block_align) * plan.block_align
+                assert seg.offset == aligned  # next run: aligned, no waste
+            prev_job = seg.job_id
+            off = seg.offset + seg.size
         assert off <= plan.shard_len
     assert 0.0 <= plan_padding_waste(plan) < 1.0
 
