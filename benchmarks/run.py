@@ -25,6 +25,7 @@ MODULES = [
     ("table3", "table3_migration"),
     ("plan", "plan_scaling"),
     ("hotpath", "hotpath_step"),
+    ("service_tick", "service_tick"),
     ("appd", "appd_interference"),
     ("roofline", "roofline"),
 ]

@@ -1,0 +1,61 @@
+"""Docs link checker: fail on dead RELATIVE links in README.md and docs/.
+
+Checks every markdown link/image target that is not an absolute URL or a
+pure in-page anchor: the referenced file must exist relative to the file
+containing the link (anchors on existing files are accepted; validating
+heading anchors is out of scope).
+
+Usage: python scripts/check_links.py [repo_root]
+Exit status 1 if any dead link is found (CI gate); also importable --
+``dead_links(root)`` returns the offending (file, target) pairs, which is
+how tests/test_docs_links.py runs it under pytest.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def _md_files(root: Path):
+    yield root / "README.md"
+    docs = root / "docs"
+    if docs.is_dir():
+        yield from sorted(docs.glob("**/*.md"))
+
+
+def dead_links(root: Path):
+    """(markdown file, link target) pairs whose target does not exist."""
+    dead = []
+    for md in _md_files(root):
+        if not md.is_file():
+            continue
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:  # pure anchor
+                continue
+            if not (md.parent / path).exists():
+                dead.append((str(md.relative_to(root)), target))
+    return dead
+
+
+def main(argv=None) -> int:
+    root = Path(argv[0]) if argv else Path(__file__).resolve().parents[1]
+    dead = dead_links(root)
+    for md, target in dead:
+        print(f"DEAD LINK: {md}: ({target})")
+    if dead:
+        return 1
+    n = sum(1 for _ in _md_files(root))
+    print(f"docs links OK across {n} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -15,6 +15,17 @@ index maps, so the DMA engine gathers exactly the job's tiles of p/mu/nu
 out of the full buffers and the update costs O(job bytes) regardless of
 how much co-resident state shares the space.
 
+``aggregate_adam_multijob`` is the SERVICE-TICK form: K co-resident jobs'
+pending updates run as ONE launch.  Two scalar-prefetched operands drive
+the grid -- a concatenated owned-block index table (all participating
+jobs' blocks back to back) and a per-block job-slot map -- so grid step i
+DMAs block ``block_idx[i]`` of the shared buffers and row ``job_slot[i]``
+of a (K, HP_COLS) per-job hyperparameter table (lr, betas and their
+pre-folded complements, eps, bias-correction reciprocals, weight decay).
+Block exclusivity (every block belongs to at
+most one job) is what makes the batched pass semantically identical to K
+sequential per-job updates.
+
 VMEM budget at BLOCK=16384 fp32: (W + 5) x 64 KiB tiles -- e.g. W=8 -> 832
 KiB, comfortably inside the ~16 MiB v5e VMEM with double buffering.
 """
@@ -160,3 +171,97 @@ def aggregate_adam_blocks(p, grads, mu, nu, count, block_idx, *, lr, b1=0.9,
         ],
         interpret=interpret,
     )(block_idx.astype(jnp.int32), p, grads, mu, nu, bc)
+
+
+HP_COLS = 16  # (lr, b1, 1-b1, b2, 1-b2, eps, bc1, bc2, wd, pad...) per job
+
+
+def _multijob_kernel(bidx_ref, jslot_ref, p_ref, g_ref, mu_ref, nu_ref,
+                     hp_ref, out_p, out_mu, out_nu):
+    # bidx/jslot are consumed by the BlockSpec index maps; the hyperparams
+    # arrive as this block's owner-job row of the (K, HP_COLS) table.
+    # Same arithmetic form as _kernel, with the compile-time constants
+    # replaced by the prefetched per-job scalars; 1-b1 / 1-b2 come
+    # PRE-FOLDED from the table because the dense kernels fold them from
+    # python doubles at trace time -- recomputing them here in f32
+    # (1.0 - 0.9f != f32(1.0 - 0.9)) would break bit-parity.
+    del bidx_ref, jslot_ref
+    lr, b1, omb1 = hp_ref[0, 0], hp_ref[0, 1], hp_ref[0, 2]
+    b2, omb2, eps = hp_ref[0, 3], hp_ref[0, 4], hp_ref[0, 5]
+    bc1, bc2, wd = hp_ref[0, 6], hp_ref[0, 7], hp_ref[0, 8]
+    g = g_ref[...].astype(jnp.float32)
+    if g.ndim == 2:  # (W, BLOCK) worker pushes -> sum-aggregate
+        g = g.sum(axis=0)
+    mu = b1 * mu_ref[...] + omb1 * g
+    nu = b2 * nu_ref[...] + omb2 * g * g
+    mu_hat = mu * bc1
+    nu_hat = nu * bc2
+    p32 = p_ref[...].astype(jnp.float32)
+    upd = (lr * mu_hat) / (jnp.sqrt(nu_hat) + eps)
+    upd = upd + (lr * wd) * p32
+    out_p[...] = (p32 - upd).astype(out_p.dtype)
+    out_mu[...] = mu
+    out_nu[...] = nu
+
+
+@functools.partial(jax.jit, static_argnames=("block", "p_packed",
+                                              "interpret"))
+def aggregate_adam_multijob(p, grads, mu, nu, hp, block_idx, job_slot, *,
+                            block=BLOCK, p_packed=False, interpret=False):
+    """K co-resident jobs' Adam updates in one launch (one service tick).
+
+    mu, nu: (N,) FULL shared buffers; p: (N,) full, or -- with
+    ``p_packed=True`` -- (M,) already packed in block-table order (the
+    flag is EXPLICIT because when the jobs jointly own every block M == N
+    and the two layouts are indistinguishable by shape yet differently
+    ordered); grads: (M,) or (W, M) concatenation of the participating
+    jobs' packed gradients, in ``block_idx`` order with
+    M = len(block_idx) * block; hp: (K, HP_COLS) float32 per-job
+    hyperparameter table ``[lr, b1, 1-b1, b2, 1-b2, eps, bc1, bc2, wd,
+    0...]`` (bc* are the bias-correction *reciprocals* for that job's
+    1-based step count); block_idx: (n_own,) int32 concatenated
+    owned-block table; job_slot: (n_own,) int32 row of ``hp`` owning each
+    block.
+
+    Grid step i DMAs tile ``block_idx[i]`` of the shared buffers, tile i of
+    the packed operands, and row ``job_slot[i]`` of hp, then writes tile i
+    of the PACKED outputs.  Returns (new_p, new_mu, new_nu), each (M,).
+    """
+    n = mu.shape[-1]
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    n_own = block_idx.shape[0]
+    assert job_slot.shape == (n_own,), (job_slot.shape, n_own)
+    m = grads.shape[-1]
+    assert m == n_own * block, (
+        f"packed gradient length {m} != n_own*block = {n_own}*{block}")
+    assert p.shape[-1] == (m if p_packed else n), (
+        f"p length {p.shape[-1]} != {'packed' if p_packed else 'full'} "
+        f"length {(m if p_packed else n)}")
+    assert hp.ndim == 2 and hp.shape[1] == HP_COLS, hp.shape
+
+    owned = pl.BlockSpec((block,), lambda i, bidx, jslot: (bidx[i],))
+    packed = pl.BlockSpec((block,), lambda i, bidx, jslot: (i,))
+    if grads.ndim == 2:
+        g_spec = pl.BlockSpec((grads.shape[0], block),
+                              lambda i, bidx, jslot: (0, i))
+    else:
+        g_spec = packed
+    p_spec = packed if p_packed else owned
+    hp_spec = pl.BlockSpec((1, HP_COLS), lambda i, bidx, jslot: (jslot[i], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_own,),
+        in_specs=[p_spec, g_spec, owned, owned, hp_spec],
+        out_specs=[packed, packed, packed],
+    )
+    return pl.pallas_call(
+        _multijob_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), p.dtype),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_idx.astype(jnp.int32), job_slot.astype(jnp.int32),
+      p, grads, mu, nu, hp.astype(jnp.float32))

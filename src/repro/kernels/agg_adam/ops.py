@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import kernel as K
 
@@ -57,6 +58,160 @@ def adam_update(p, g, mu, nu, count, *, lr, b1=0.9, b2=0.999, eps=1e-8,
     """Drop-in for the optim.adam per-tensor update (single gradient)."""
     return aggregate_adam(p, g, mu, nu, count, lr=lr, b1=b1, b2=b2,
                           eps=eps, wd=wd)
+
+
+def _per_job(val, n_jobs):
+    """Broadcast a scalar hyperparameter to a length-K tuple of floats."""
+    if isinstance(val, (int, float)):
+        return (float(val),) * n_jobs
+    vals = tuple(float(v) for v in val)
+    assert len(vals) == n_jobs, (len(vals), n_jobs)
+    return vals
+
+
+def _bias_corr(count, b1, b2):
+    """Barrier-materialized bias-correction reciprocals for ONE job.
+
+    Scalar (not vectorized-over-jobs) ``b1 ** t`` on purpose: XLA's
+    vectorized pow approximation differs from the scalar lowering in the
+    last ulp, and the per-job sequential step (repro.ps.runtime._adam_math)
+    uses the scalar form -- the service tick must match it bit-for-bit.
+    """
+    t = count.astype(jnp.float32)
+    bc1 = jax.lax.optimization_barrier(1.0 / (1.0 - b1 ** t))
+    bc2 = jax.lax.optimization_barrier(1.0 / (1.0 - b2 ** t))
+    return bc1, bc2
+
+
+def multi_job_hp(counts, *, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    """Build the (K, HP_COLS) per-job hyperparameter table the multi-job
+    kernel prefetches: ``[lr, b1, 1-b1, b2, 1-b2, eps, bc1, bc2, wd, ...]``
+    per job (``1-b*`` pre-folded in python doubles for bit-parity with the
+    constant-hyperparameter kernels).
+
+    ``counts`` is a sequence of K 1-based int32 step counts (traced ok);
+    the scalar hyperparameters accept a float (shared) or a length-K
+    sequence (per-job, e.g. each job's own learning rate).
+    """
+    k = len(counts)
+    lrs, b1s = _per_job(lr, k), _per_job(b1, k)
+    b2s, epss, wds = _per_job(b2, k), _per_job(eps, k), _per_job(wd, k)
+    rows = []
+    for j in range(k):
+        bc1, bc2 = _bias_corr(jnp.asarray(counts[j]), b1s[j], b2s[j])
+        cols = [jnp.float32(lrs[j]), jnp.float32(b1s[j]),
+                jnp.float32(1.0 - b1s[j]), jnp.float32(b2s[j]),
+                jnp.float32(1.0 - b2s[j]), jnp.float32(epss[j]),
+                bc1.astype(jnp.float32), bc2.astype(jnp.float32),
+                jnp.float32(wds[j])]
+        cols += [jnp.float32(0.0)] * (K.HP_COLS - len(cols))
+        rows.append(jnp.stack(cols))
+    return jnp.stack(rows)
+
+
+def _rows(vec, block_idx, block):
+    """One block-structured row gather out of a full flat buffer."""
+    return vec.reshape(-1, block)[block_idx].reshape(-1)
+
+
+def _multi_job_jnp(p, g_cat, mu, nu, counts, *, block_idx, job_sizes, block,
+                   p_packed, lr, b1, b2, eps, wd):
+    """Fused-scatter jnp fallback for the multi-job tick (interpret mode /
+    CPU): ONE row gather per shared buffer, per-job Adam arithmetic on
+    static slices of the packed concatenation (identical scalar constants
+    and op grouping as repro.ps.runtime._adam_math, so the batched pass is
+    bit-exact with K sequential block steps), then the caller's single row
+    scatter writes everything back.
+    """
+    k = len(counts)
+    lrs, b1s = _per_job(lr, k), _per_job(b1, k)
+    b2s, epss, wds = _per_job(b2, k), _per_job(eps, k), _per_job(wd, k)
+    m = int(block_idx.shape[0]) * block
+    rows = jnp.asarray(block_idx, jnp.int32)
+    # p_packed is EXPLICIT: when the jobs jointly own every block, packed
+    # and full have the same length but different lane order.
+    assert p.shape[-1] == (m if p_packed else int(mu.shape[-1])), (
+        p.shape, m, mu.shape, p_packed)
+    # Identity block table (jobs jointly own the whole space IN ORDER):
+    # packed == full, so skip the no-op p gather -- block_idx is a host
+    # array, decided at trace time.
+    identity = (int(mu.shape[-1]) == m and
+                np.array_equal(np.asarray(block_idx),
+                               np.arange(m // block)))
+    p_p = p if (p_packed or identity) else _rows(p, rows, block)
+    mu_p = _rows(mu, rows, block)
+    nu_p = _rows(nu, rows, block)
+    g = g_cat.astype(jnp.float32)
+    if g.ndim == 2:
+        g = g.sum(axis=0)
+    outs_p, outs_mu, outs_nu = [], [], []
+    off = 0
+    for j, nb in enumerate(job_sizes):
+        lo, hi = off * block, (off + nb) * block
+        off += nb
+        p32 = p_p[lo:hi].astype(jnp.float32)
+        gj, mu0, nu0 = g[lo:hi], mu_p[lo:hi], nu_p[lo:hi]
+        mu_j = b1s[j] * mu0 + (1.0 - b1s[j]) * gj
+        nu_j = b2s[j] * nu0 + (1.0 - b2s[j]) * gj * gj
+        bc1, bc2 = _bias_corr(jnp.asarray(counts[j]), b1s[j], b2s[j])
+        mu_hat = mu_j * bc1
+        nu_hat = nu_j * bc2
+        upd = (lrs[j] * mu_hat) / (jnp.sqrt(nu_hat) + epss[j])
+        if wds[j]:
+            upd = upd + (lrs[j] * wds[j]) * p32
+        outs_p.append((p32 - upd).astype(p.dtype))
+        outs_mu.append(mu_j)
+        outs_nu.append(nu_j)
+
+    def cat(parts):
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    return cat(outs_p), cat(outs_mu), cat(outs_nu)
+
+
+def multi_job_adam_update(p, gs, mu, nu, counts, *, block_idx, job_sizes,
+                          block, p_packed=False, lr, b1=0.9, b2=0.999,
+                          eps=1e-8, wd=0.0, interpret=None):
+    """One service tick: K co-resident jobs' Adam updates in one pass.
+
+    mu/nu are the FULL shared (N,) buffers; p is full unless
+    ``p_packed=True`` says it is already packed in block-table order (the
+    flag is explicit -- when the jobs jointly own the whole space the two
+    layouts have equal length but different order, so shape inference
+    would silently misread one as the other).  ``block_idx`` concatenates
+    the participating
+    jobs' owned-block lists back to back (``job_sizes[j]`` blocks for job
+    j, in the same order as ``counts`` and any per-job hyperparameter
+    sequences); ``gs`` is either the matching per-job sequence of packed
+    gradients or one pre-concatenated (M,) vector.  Returns PACKED
+    (new_p, new_mu, new_nu) of length ``len(block_idx) * block`` for the
+    caller to scatter back in one go.
+
+    On TPU this is a single launch of ``kernel.aggregate_adam_multijob``;
+    elsewhere (interpret mode) it falls back to the fused-scatter jnp path,
+    which is bit-exact with K sequential block steps.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    assert sum(job_sizes) == int(block_idx.shape[0]), (job_sizes, block_idx.shape)
+    assert len(job_sizes) == len(counts), (job_sizes, len(counts))
+    job_sizes = tuple(int(s) for s in job_sizes)
+    if isinstance(gs, (list, tuple)):
+        g_cat = (jnp.concatenate(gs, axis=-1) if len(gs) > 1
+                 else gs[0])
+    else:  # pre-concatenated
+        g_cat = gs
+    if interpret:
+        return _multi_job_jnp(
+            p, g_cat, mu, nu, counts, block_idx=block_idx,
+            job_sizes=job_sizes, block=int(block), p_packed=bool(p_packed),
+            lr=lr, b1=b1, b2=b2, eps=eps, wd=wd)
+    hp = multi_job_hp(counts, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd)
+    job_slot = jnp.asarray(
+        np.repeat(np.arange(len(job_sizes), dtype=np.int32),
+                  np.asarray(job_sizes, np.int64)))
+    return K.aggregate_adam_multijob(
+        p, g_cat, mu, nu, hp, jnp.asarray(block_idx, jnp.int32), job_slot,
+        block=int(block), p_packed=bool(p_packed), interpret=False)
 
 
 def block_adam_update(p, g_packed, mu, nu, count, *, block_idx, block,

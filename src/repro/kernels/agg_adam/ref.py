@@ -44,3 +44,42 @@ def aggregate_adam_blocks_ref(p, grads, mu, nu, count, block_idx, *, block,
     return aggregate_adam_ref(
         jnp.take(p, own), grads, jnp.take(mu, own), jnp.take(nu, own),
         count, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd)
+
+
+def aggregate_adam_multijob_ref(p, grads, mu, nu, counts, block_idx,
+                                job_sizes, *, block, lr, b1=0.9, b2=0.999,
+                                eps=1e-8, wd=0.0):
+    """Per-job SEQUENTIAL oracle for the multi-job (service-tick) kernel:
+    apply each participating job's block-owned update one after another,
+    then concatenate the packed results in block-table order.
+
+    ``block_idx`` concatenates the jobs' owned-block lists (``job_sizes[j]``
+    blocks each); ``counts`` is one 1-based step count per job; the scalar
+    hyperparameters accept a float or a per-job sequence.  Because blocks
+    are exclusive, sequential-vs-batched is a pure execution-order change;
+    the outputs must match.
+    """
+    import numpy as np
+
+    def per_job(val):
+        if isinstance(val, (int, float)):
+            return [float(val)] * len(job_sizes)
+        return [float(v) for v in val]
+
+    lrs, b1s, b2s = per_job(lr), per_job(b1), per_job(b2)
+    epss, wds = per_job(eps), per_job(wd)
+    outs_p, outs_mu, outs_nu = [], [], []
+    off = 0
+    for j, nb in enumerate(job_sizes):
+        idx = np.asarray(block_idx)[off:off + nb]
+        lo, hi = off * block, (off + nb) * block
+        off += nb
+        gj = grads[..., lo:hi]
+        new_p, new_mu, new_nu = aggregate_adam_blocks_ref(
+            p, gj, mu, nu, counts[j], idx, block=block, lr=lrs[j],
+            b1=b1s[j], b2=b2s[j], eps=epss[j], wd=wds[j])
+        outs_p.append(new_p)
+        outs_mu.append(new_mu)
+        outs_nu.append(new_nu)
+    return (jnp.concatenate(outs_p), jnp.concatenate(outs_mu),
+            jnp.concatenate(outs_nu))

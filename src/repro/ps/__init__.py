@@ -10,6 +10,10 @@ runtime.py       paper-faithful flat PS runtime: pull = one row gather of
                  update = block-owned Adam (O(job bytes) per step).
 service_runtime.py  ServiceRuntime: one shared flat state for all jobs of
                  a ParameterService, migrated live on every replan.
+engine.py        ServiceTickEngine: per-job bounded push queues + futures;
+                 each tick drains all pending jobs and applies them in ONE
+                 batched pass (single Pallas launch on TPU) under a
+                 bounded-staleness (max_staleness) contract.
 sharding.py      per-tensor sharding rules: the control plane's assignment
                  plan realized as NamedShardings (TP + FSDP "aggregation"
                  placement per tensor).

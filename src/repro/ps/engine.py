@@ -1,0 +1,401 @@
+"""Service-tick execution engine: batched multi-job aggregation with
+bounded staleness.
+
+The paper's aggregation is a *shared service*: many jobs' bursty pushes
+land on the same Aggregator CPUs and should be executed together, not as
+one step-function per job.  PR 1 compiled the packing into one shared
+FlatPlan and PR 2 made each job's step O(job bytes); this module adds the
+service-side loop that actually batches them:
+
+  submit_push  a job pushes its packed gradient into its bounded per-job
+               queue and gets a :class:`PushFuture`; nothing is applied yet
+  tick         the engine drains the HEAD push of every pending job and
+               applies all of them in ONE batched pass over the shared
+               flat space -- a single Pallas launch on TPU
+               (``kernels.agg_adam.aggregate_adam_multijob``: concatenated
+               owned-block index table + per-block job-slot map), a
+               fused-scatter jnp pass in interpret mode
+  pull         a job reads its own lanes; with ``max_staleness = s`` a job
+               may run ``s`` steps ahead of the service before its pull
+               blocks on (forces) the tick -- Dynamic-SSP-style bounded
+               staleness; ``s = 0`` is BSP
+
+Block exclusivity (every ``block_align`` block of the flat space belongs
+to at most one job, the PR-2 invariant) is what makes the batched pass a
+pure execution-order change: its result is bit-exact with applying the
+same pushes as K sequential per-job block steps.
+
+Replans quiesce the engine: :meth:`ServiceRuntime.add_job` / ``remove_job``
+drain every queued push against the OLD plan before the shared state
+migrates, so a migration never reorders an update across layouts and the
+engine'd runtime stays bit-exact with the unbatched one -- eager
+execution matches it bit-for-bit at any sizes, and the jitted batched
+apply matches jitted sequential block updates bit-for-bit at SIMD-even
+block sizes (fully-jitted END-TO-END runs additionally see XLA:CPU's
+~1-ulp cross-program fusion rounding, the same caveat PR 2 documents for
+jitted block-vs-masked; see tests/test_engine.py).
+
+Usage::
+
+    rt = ServiceRuntime(svc)
+    eng = rt.attach_engine(max_staleness=1)
+    rt.add_job("a", params_a, loss_a); rt.add_job("b", params_b, loss_b)
+    for batch_a, batch_b in data:
+        eng.step("a", batch_a)   # pull -> grad -> submit_push
+        eng.step("b", batch_b)
+        # pushes apply together at the next tick (forced by staleness,
+        # queue pressure, an explicit eng.tick(), or fut.result())
+    eng.drain()
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ps.plan import FlatPlan
+from repro.ps.runtime import _pack_slots, _unpack_slots
+
+__all__ = ["PushFuture", "ServiceTickEngine", "TickStats"]
+
+
+class PushFuture:
+    """Handle for one submitted push; resolves when a tick applies it."""
+
+    __slots__ = ("job_id", "_engine", "_done", "_step")
+
+    def __init__(self, job_id: str, engine: "ServiceTickEngine"):
+        self.job_id = job_id
+        self._engine = engine
+        self._done = False
+        self._step = None
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> int:
+        """Block (force service ticks) until applied; returns the job's
+        1-based step count as of this push."""
+        while not self._done:
+            self._engine.tick()
+        return self._step
+
+    def _resolve(self, step: int) -> None:
+        self._done = True
+        self._step = int(step)
+
+
+@dataclass
+class TickStats:
+    """Engine counters: how batched the service actually ran."""
+
+    n_ticks: int = 0  # batched passes executed
+    n_applied: int = 0  # pushes applied across all ticks
+    n_forced_staleness: int = 0  # ticks forced by a pull at the bound
+    n_forced_capacity: int = 0  # ticks forced by a full push queue
+
+    @property
+    def mean_batch(self) -> float:
+        """Mean jobs applied per tick (running counters, O(1) memory --
+        the engine may tick for the service's whole lifetime)."""
+        if not self.n_ticks:
+            return 0.0
+        return self.n_applied / self.n_ticks
+
+
+class ServiceTickEngine:
+    """Batched executor for one :class:`ServiceRuntime`'s shared state.
+
+    Created via :meth:`ServiceRuntime.attach_engine`.  The engine owns the
+    per-job push queues and the compiled batched appliers; the runtime
+    keeps owning plan + state (and migrates them on replans, draining this
+    engine first).
+    """
+
+    MAX_APPLIERS = 32  # compiled programs per plan (one per job subset)
+
+    def __init__(self, runtime, *, max_staleness: int = 1,
+                 queue_capacity: Optional[int] = None, jit: bool = True,
+                 interpret: Optional[bool] = None):
+        if max_staleness < 0:
+            raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
+        self.runtime = runtime
+        self.max_staleness = int(max_staleness)
+        self.queue_capacity = (self.max_staleness + 1 if queue_capacity is None
+                               else int(queue_capacity))
+        if self.queue_capacity < 1:
+            raise ValueError("queue_capacity must be >= 1")
+        self.stats = TickStats()
+        self._poisoned = False
+        self._jit = jit
+        self._interpret = interpret  # None = auto (jnp path off-TPU)
+        self._queues: Dict[str, deque] = {}
+        # Python-side mirror of state["counts"]: futures resolve from it
+        # without a device round-trip per tick.
+        self._counts: Dict[str, int] = {}
+        # Compiled caches, invalidated on every replan.
+        self._appliers: Dict[Tuple[str, ...], Callable] = {}
+        self._pull_fns: Dict[str, Callable] = {}
+        self._grad_fns: Dict[str, Callable] = {}
+        self._pack_fns: Dict[str, Callable] = {}
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def plan(self) -> Optional[FlatPlan]:
+        return self.runtime.plan
+
+    def _queue(self, job_id: str) -> deque:
+        info = self.runtime._jobs.get(job_id)
+        if info is None:
+            raise ValueError(f"unknown job {job_id!r}: not registered with "
+                             f"the runtime (have {sorted(self.runtime._jobs)})")
+        if info["step_opts"].get("push_compression"):
+            raise NotImplementedError(
+                "the tick engine's batched apply has no error-feedback "
+                "buffer; step compressed-push jobs through runtime.step()")
+        if job_id not in self._counts:
+            # One sync at first contact; ticks keep the mirror in step.
+            self._counts[job_id] = int(jax.device_get(
+                self.runtime.state["counts"][job_id]))
+        return self._queues.setdefault(job_id, deque())
+
+    def outstanding(self, job_id: str) -> int:
+        """Pushes submitted by the job but not yet applied by a tick."""
+        q = self._queues.get(job_id)
+        return len(q) if q else 0
+
+    def _on_plan_change(self) -> None:
+        """Replan: every compiled structure is plan-specific; drop it.
+        Queues must already be empty (the runtime drains before migrating)."""
+        assert not any(self._queues.values()), (
+            "replan with queued pushes: runtime must drain the engine first")
+        self._appliers.clear()
+        self._pull_fns.clear()
+        self._grad_fns.clear()
+        self._pack_fns.clear()
+
+    def _forget_job(self, job_id: str) -> None:
+        self._queues.pop(job_id, None)
+        self._counts.pop(job_id, None)
+        self._pull_fns.pop(job_id, None)
+        self._grad_fns.pop(job_id, None)
+        self._pack_fns.pop(job_id, None)
+        # Appliers embedding the job die with the next plan change, which
+        # the runtime triggers right after; drop them eagerly anyway.
+        self._appliers = {k: v for k, v in self._appliers.items()
+                         if job_id not in k}
+
+    # ------------------------------------------------------------ data path
+    def pull(self, job_id: str):
+        """The job's current parameters from the shared space.
+
+        Bounded staleness: a job ``max_staleness`` steps ahead of the
+        service blocks here -- the pull forces ticks until the job is back
+        within the bound (one tick applies one queued push, so one
+        suffices unless other jobs' queues run deeper)."""
+        self._queue(job_id)  # validates the job id
+        while self.outstanding(job_id) > self.max_staleness:
+            self.stats.n_forced_staleness += 1
+            self.tick()
+        fn = self._pull_fns.get(job_id)
+        if fn is None:
+            plan = self.plan
+            layout = plan.job_layout(job_id)
+            abstract = self.runtime._jobs[job_id]["abstract"]
+            rows = jnp.asarray(layout.blocks)
+
+            def fn(flat, _layout=layout, _rows=rows, _abstract=abstract):
+                packed = (flat if _layout.covers_all else
+                          flat.reshape(-1, _layout.block)[_rows].reshape(-1))
+                return _unpack_slots(_layout, packed, _abstract)
+
+            if self._jit:
+                fn = jax.jit(fn)
+            self._pull_fns[job_id] = fn
+        return fn(self.runtime.state["flat"])
+
+    def submit_push(self, job_id: str, grads) -> PushFuture:
+        """Queue a job's gradient pytree for the next tick; returns a
+        future.  A full queue exerts backpressure: the submit first forces
+        ticks until a slot frees up."""
+        q = self._queue(job_id)
+        while len(q) >= self.queue_capacity:
+            self.stats.n_forced_capacity += 1
+            self.tick()
+        fn = self._pack_fns.get(job_id)
+        if fn is None:
+            layout = self.plan.job_layout(job_id)
+            fn = (lambda grads, _layout=layout:
+                  _pack_slots(_layout, grads))
+            if self._jit:
+                fn = jax.jit(fn)
+            self._pack_fns[job_id] = fn
+        return self.submit_packed(job_id, fn(grads))
+
+    def submit_packed(self, job_id: str, packed) -> PushFuture:
+        """Queue an ALREADY-PACKED job-local gradient vector (the layout's
+        packed domain, e.g. from a custom jitted grad program) for the
+        next tick; same bounded queue and backpressure as
+        :meth:`submit_push`."""
+        q = self._queue(job_id)
+        while len(q) >= self.queue_capacity:
+            self.stats.n_forced_capacity += 1
+            self.tick()
+        fut = PushFuture(job_id, self)
+        q.append((packed, fut))
+        return fut
+
+    def step(self, job_id: str, batch) -> Dict[str, Any]:
+        """One engine-mode iteration: pull (staleness-bounded), compute
+        loss/grads, submit the push.  The update lands at a later tick;
+        ``metrics["future"]`` tracks it."""
+        q = self._queue(job_id)
+        while self.outstanding(job_id) > self.max_staleness:
+            self.stats.n_forced_staleness += 1
+            self.tick()
+        while len(q) >= self.queue_capacity:
+            self.stats.n_forced_capacity += 1
+            self.tick()
+        fn = self._grad_fns.get(job_id)
+        if fn is None:
+            plan = self.plan
+            layout = plan.job_layout(job_id)
+            info = self.runtime._jobs[job_id]
+            abstract, loss_fn = info["abstract"], info["loss_fn"]
+            rows = jnp.asarray(layout.blocks)
+
+            def fn(flat, batch, _layout=layout, _rows=rows,
+                   _abstract=abstract, _loss=loss_fn):
+                packed = (flat if _layout.covers_all else
+                          flat.reshape(-1, _layout.block)[_rows].reshape(-1))
+                params = _unpack_slots(_layout, packed, _abstract)
+                loss, grads = jax.value_and_grad(_loss)(params, batch)
+                return loss, _pack_slots(_layout, grads)
+
+            if self._jit:
+                fn = jax.jit(fn)
+            self._grad_fns[job_id] = fn
+        loss, packed = fn(self.runtime.state["flat"], batch)
+        fut = PushFuture(job_id, self)
+        q.append((packed, fut))
+        return {"loss": loss, "future": fut}
+
+    # ----------------------------------------------------------------- tick
+    def tick(self) -> int:
+        """One service tick: pop the head push of EVERY pending job and
+        apply them in one batched pass over the shared flat space.
+        Returns the number of jobs applied (0 = nothing pending)."""
+        if self._poisoned:
+            raise RuntimeError(
+                "engine poisoned by a failed batched apply: the jitted "
+                "applier donates the shared state buffers, so they may "
+                "have been deleted mid-tick; restore/re-seed the "
+                "runtime's state and attach a fresh engine before "
+                "continuing")
+        pending = [j for j in self.runtime._jobs if self._queues.get(j)]
+        if not pending:
+            return 0
+        heads = [self._queues[j].popleft() for j in pending]
+        try:
+            key = tuple(pending)
+            applier = self._appliers.get(key)
+            if applier is None:
+                applier = self._build_applier(key)
+                if len(self._appliers) >= self.MAX_APPLIERS:
+                    # One program per pending-job SUBSET: bound the cache
+                    # (FIFO eviction) so heterogeneous tick patterns can't
+                    # accumulate 2^K compiled appliers.
+                    self._appliers.pop(next(iter(self._appliers)))
+                self._appliers[key] = applier
+            gs = tuple(packed for packed, _ in heads)
+        except BaseException:
+            # Build-time failure (e.g. a non-block-exclusive layout): no
+            # device op ran, so re-queue the popped heads -- nothing is
+            # lost and a later tick can retry.
+            for j, head in zip(pending, heads):
+                self._queues[j].appendleft(head)
+            raise
+        try:
+            self.runtime.state = applier(self.runtime.state, gs)
+        except BaseException:
+            # Execution failure: the jitted applier DONATES the state
+            # buffers, so they may already be deleted -- no retry against
+            # this state can succeed.  Re-queue the heads so the pushes
+            # remain inspectable, and poison the engine so later ticks
+            # (including PushFuture.result() loops) fail fast with a
+            # clear message instead of spinning on dead buffers.
+            for j, head in zip(pending, heads):
+                self._queues[j].appendleft(head)
+            if self._jit:
+                self._poisoned = True
+            raise
+        for j, (_, fut) in zip(pending, heads):
+            self._counts[j] += 1
+            fut._resolve(self._counts[j])
+        self.stats.n_ticks += 1
+        self.stats.n_applied += len(pending)
+        return len(pending)
+
+    def drain(self) -> int:
+        """Quiesce: tick until every queue is empty (replans call this
+        before migrating the shared state).  Returns pushes applied."""
+        applied = 0
+        while True:
+            n = self.tick()
+            if n == 0:
+                return applied
+            applied += n
+
+    def _build_applier(self, job_ids: Tuple[str, ...]) -> Callable:
+        """Compile the batched apply for one combination of pending jobs.
+
+        All plan-derived structures (concatenated owned-block table,
+        per-job packed sizes, hyperparameters) are baked in at build time;
+        the returned function is (state, packed_grads) -> state with ONE
+        multi-job update pass and one row scatter per shared buffer.
+        """
+        from repro.kernels.agg_adam import ops as agg_ops
+
+        plan = self.plan
+        block = plan.block_align
+        layouts = [plan.job_layout(j) for j in job_ids]
+        block_idx = np.concatenate([l.blocks for l in layouts])
+        job_sizes = tuple(int(l.blocks.size) for l in layouts)
+        rows = jnp.asarray(block_idx)
+        infos = [self.runtime._jobs[j] for j in job_ids]
+        lr = tuple(float(i["lr"]) for i in infos)
+        b1 = tuple(float(i["step_opts"].get("b1", 0.9)) for i in infos)
+        b2 = tuple(float(i["step_opts"].get("b2", 0.999)) for i in infos)
+        eps = tuple(float(i["step_opts"].get("eps", 1e-8)) for i in infos)
+
+        def scatter(buf, packed):
+            return buf.reshape(-1, block).at[rows].set(
+                packed.reshape(-1, block), unique_indices=True
+            ).reshape(buf.shape)
+
+        def apply(state, gs):
+            # One packed-domain concatenation: this exact program shape is
+            # what the bit-exactness tests pin down -- slicing per-job g
+            # views out of separate inputs rerounds a lane under XLA:CPU.
+            g_cat = jnp.concatenate(gs) if len(gs) > 1 else gs[0]
+            counts = [state["counts"][j] + 1 for j in job_ids]
+            new_p, new_mu, new_nu = agg_ops.multi_job_adam_update(
+                state["flat"], g_cat, state["mu"], state["nu"], counts,
+                block_idx=block_idx, job_sizes=job_sizes, block=block,
+                lr=lr, b1=b1, b2=b2, eps=eps, wd=0.0,
+                interpret=self._interpret)
+            new_state = dict(state)
+            new_state["flat"] = scatter(state["flat"], new_p)
+            new_state["mu"] = scatter(state["mu"], new_mu)
+            new_state["nu"] = scatter(state["nu"], new_nu)
+            new_state["counts"] = dict(
+                state["counts"], **{j: c for j, c in zip(job_ids, counts)})
+            return new_state
+
+        # Donate the shared state: flat/mu/nu update in place per tick.
+        return jax.jit(apply, donate_argnums=(0,)) if self._jit else apply

@@ -22,7 +22,9 @@ for parity tests and benchmarks.
 Segments are keyed by ``(job_id, tensor_key)``, so two jobs with identically
 named tensors coexist in one space, and a control-plane replan is executed
 by ``repro.ps.elastic.migrate_flat_state`` over a ``(old_plan, new_plan)``
-pair without restarting either job.
+pair without restarting either job.  ``repro.ps.engine`` builds on the
+same access structures to batch MANY jobs' pending pushes into one
+service-tick pass (``repro.kernels.agg_adam.aggregate_adam_multijob``).
 
 ``build_flat_plan`` remains as the standalone single-job path (ps-lite
 round-robin vs AutoPS balanced placement): per-shard byte imbalance shows up

@@ -22,6 +22,13 @@ Usage::
     rt.add_job("lm", params_b, loss_b, required_servers=2)
     for batch in data:
         metrics = rt.step("mlp", batch)      # only mlp's segments change
+
+With an attached :class:`repro.ps.engine.ServiceTickEngine`
+(``rt.attach_engine()``), jobs instead submit pushes into per-job bounded
+queues and the engine applies all pending jobs per tick in ONE batched
+pass; replans quiesce the engine (drain every queued push against the old
+plan) before migrating, so engine'd training stays bit-exact with the
+per-job step path across migrations.
 """
 
 from __future__ import annotations
@@ -55,7 +62,25 @@ class ServiceRuntime:
         self._jit = jit
         self._jobs: Dict[str, Dict[str, Any]] = {}
         self._steps: Dict[str, Callable] = {}
+        self._engine = None
         service.on_replan(self._on_replan)
+
+    def attach_engine(self, **engine_opts):
+        """Create (once) and return the service-tick engine for this
+        runtime (see :class:`repro.ps.engine.ServiceTickEngine`): batched
+        multi-job ticks with bounded staleness instead of per-job
+        immediate steps."""
+        from repro.ps.engine import ServiceTickEngine
+
+        if self._engine is None:
+            self._engine = ServiceTickEngine(self, **engine_opts)
+        elif engine_opts:
+            raise ValueError("engine already attached; cannot re-configure")
+        return self._engine
+
+    @property
+    def engine(self):
+        return self._engine
 
     # ----------------------------------------------------------------- jobs
     def add_job(
@@ -108,6 +133,11 @@ class ServiceRuntime:
             raise ValueError(
                 f"unknown job {job_id!r}: not registered with this runtime "
                 f"(have {sorted(self._jobs)})")
+        if self._engine is not None:
+            # Quiesce BEFORE the job's segments leave the plan: its queued
+            # pushes (and everyone else's) apply against the old layout.
+            self._engine.drain()
+            self._engine._forget_job(job_id)
         self._jobs.pop(job_id)
         self._steps.pop(job_id, None)
         self.service.job_exit(job_id)
@@ -140,8 +170,15 @@ class ServiceRuntime:
                    for info in self._jobs.values())
 
     def _on_replan(self, old: Optional[FlatPlan], new: Optional[FlatPlan]):
+        if self._engine is not None and self.state is not None:
+            # Quiesce: every queued push applies against the OLD plan, so
+            # the migration below moves a fully-settled state and batched
+            # execution stays bit-exact with the per-job step path.
+            self._engine.drain()
         if new is None:  # last job exited
             self.plan, self.state, self._steps = None, None, {}
+            if self._engine is not None:
+                self._engine._on_plan_change()
             return
         if self.state is not None and old is not None:
             moved = migration_bytes(old, new)
@@ -156,6 +193,8 @@ class ServiceRuntime:
             self.state = dict(self.state,
                               ef=jnp.zeros_like(self.state["flat"]))
         self.plan = new
+        if self._engine is not None:
+            self._engine._on_plan_change()
         self._steps = {}
         for job_id, info in self._jobs.items():
             step = make_ps_train_step(

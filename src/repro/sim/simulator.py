@@ -8,6 +8,22 @@ allocated/required ratio occasionally exceeds 1), while allocation is
 on-demand. Job durations stretch by the predicted performance loss (a job
 packed at 5% loss finishes 5% later), closing the loop between packing
 decisions and trace timing.
+
+With ``track_plans=True`` every placement change additionally compiles the
+ServicePlan and accounts its data-plane consequences (bytes migrated
+across shards, padding waste) in the result.
+
+With ``tick_interval > 0`` the simulator also accounts service-tick
+batching (repro.ps.engine driven by a periodic tick): while J jobs run,
+each pushes one update per effective iteration, but the engine applies
+one pending push per job per batched pass -- so the service executes
+``max_j(rate_j)`` passes per second instead of ``sum_j(rate_j)``.  A
+tick-limited job's sustained push rate is one per tick (each tick frees
+exactly one queue slot; the engine's ``max_staleness`` only sizes the
+transient burst a job may run ahead, not its steady-state rate), so
+rates are capped at ``1 / tick_interval``.  ``SimResult`` reports sequential vs batched
+update-pass totals and the resulting batching factor for the Fig. 11
+runs.
 """
 
 from __future__ import annotations
@@ -30,6 +46,13 @@ class SimConfig:
     # Compile the ServicePlan after every placement change and account the
     # data-plane consequences (bytes migrated across shards, padding waste).
     track_plans: bool = False
+    # Service-tick engine accounting: 0 = per-job immediate updates
+    # (legacy); > 0 = the engine drains all pending jobs every
+    # tick_interval seconds in one batched pass.  (The engine's
+    # max_staleness knob sizes only the transient burst a job may run
+    # ahead -- the sustained push rate of a tick-limited job is one per
+    # tick regardless -- so it does not appear in this accounting.)
+    tick_interval: float = 0.0
 
 
 @dataclass
@@ -45,6 +68,11 @@ class SimResult:
     migration_bytes_total: int = 0
     n_replans: int = 0
     padding_waste: List[float] = field(default_factory=list)
+    # Service-tick engine accounting (tick_interval > 0).
+    n_service_ticks: float = 0.0  # ticks elapsed while >= 1 job ran
+    update_passes_sequential: float = 0.0  # one pass per push (per-job steps)
+    update_passes_batched: float = 0.0  # one pass per tick round (engine)
+    tick_limited_job_seconds: float = 0.0  # job-time spent at the staleness cap
 
     @property
     def cpu_time_saving(self) -> float:
@@ -57,6 +85,14 @@ class SimResult:
         if not self.padding_waste:
             return 0.0
         return sum(self.padding_waste) / len(self.padding_waste)
+
+    @property
+    def tick_batching_factor(self) -> float:
+        """Sequential update passes per batched pass (>= 1): how many
+        per-job step-functions one service tick replaces on average."""
+        if self.update_passes_batched <= 0:
+            return 1.0
+        return self.update_passes_sequential / self.update_passes_batched
 
     def ratio_series(self) -> List[float]:
         return [a / r for a, r in zip(self.allocated, self.required) if r > 0]
@@ -90,6 +126,7 @@ class ClusterSimulator:
         heapq.heappush(events, (t0, 3, "__sample__", None))
 
         running: Dict[str, TraceJob] = {}
+        d_effs: Dict[str, float] = {}  # effective iteration durations
         last_t = t0
         horizon = max(tj.arrival for tj in trace) + 1.0
         pending_work = len(trace)  # arrivals + exits not yet processed
@@ -102,6 +139,26 @@ class ClusterSimulator:
                 req = sum(j.profile.required_servers for j in running.values())
                 res.allocated_cpu_seconds += alloc * dt
                 res.required_cpu_seconds += req * dt
+                if cfg.tick_interval > 0 and running:
+                    # Service-tick batching: each job pushes 1/d_eff
+                    # updates per second; per-job steps would execute one
+                    # pass per push, the engine executes one pass per tick
+                    # round -- set by the FASTEST job, since a tick drains
+                    # one queued push per job.  A tick-limited job
+                    # sustains ONE push per tick (each tick frees exactly
+                    # one queue slot; max_staleness only allows a
+                    # transient burst), so rates cap at 1/tick_interval.
+                    cap = 1.0 / cfg.tick_interval
+                    rates = []
+                    for jid in running:
+                        r = 1.0 / max(1e-9, d_effs[jid])
+                        if r > cap:
+                            res.tick_limited_job_seconds += dt
+                            r = cap
+                        rates.append(r)
+                    res.update_passes_sequential += dt * sum(rates)
+                    res.update_passes_batched += dt * max(rates)
+                    res.n_service_ticks += dt / cfg.tick_interval
             last_t = now
 
         def track_plan() -> None:
@@ -135,6 +192,7 @@ class ClusterSimulator:
                 self.idle_pool -= reuse
                 running[jid] = tj
                 d_eff = self.service.predicted_iteration(jid)
+                d_effs[jid] = d_eff
                 loss = max(0.0, 1.0 - tj.profile.iteration_duration / d_eff)
                 res.max_loss_seen = max(res.max_loss_seen, loss)
                 finish = t + tj.duration / max(1e-9, (1.0 - loss))
@@ -148,6 +206,7 @@ class ClusterSimulator:
                     freed = before - self.service.n_aggregators
                     self.idle_pool += max(0, freed)
                     running.pop(jid)
+                    d_effs.pop(jid, None)
                     res.n_jobs_done += 1
                     track_plan()
             elif kind == 2:  # periodic scaling tick: release idle servers

@@ -1,0 +1,22 @@
+"""Docs stay wired: no dead relative links, and the docs/ tree the README
+points at actually exists (satellite of the service-tick PR)."""
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "scripts"))
+
+from check_links import dead_links  # noqa: E402
+
+
+def test_no_dead_relative_links_in_readme_and_docs():
+    assert dead_links(ROOT) == []
+
+
+def test_docs_tree_exists_and_readme_links_it():
+    readme = (ROOT / "README.md").read_text()
+    for doc in ("docs/architecture.md", "docs/paper_map.md",
+                "docs/benchmarks.md"):
+        assert (ROOT / doc).is_file(), doc
+        assert doc in readme, f"README does not link {doc}"

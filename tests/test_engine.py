@@ -1,0 +1,323 @@
+"""Service-tick engine tests: batched multi-job ticks vs sequential PR-2
+block steps, bounded-staleness enforcement, drain-on-replan quiescing, and
+the multi-job kernel vs a per-job sequential oracle.
+
+Parity notes.  Block exclusivity makes the batched pass a pure
+execution-order change, so the engine is bit-exact with K sequential
+block steps BY CONSTRUCTION: eager engine == eager sequential
+bit-for-bit at any tensor sizes, through replans (the acceptance test),
+and the jitted batched APPLY program matches jitted sequential
+``_adam_math`` block updates bit-for-bit at the shipped SIMD-even block
+sizes.  Comparing two fully-jitted END-TO-END runtimes adds XLA:CPU's
+cross-program fusion rounding on top (the fused grads+update loop may
+reround ~1 ulp between program shapes -- the same caveat PR 2 documents
+for jitted block-vs-masked), so that comparison gets a 1-ulp tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParameterService
+from repro.kernels.agg_adam import kernel as agg_kernel
+from repro.kernels.agg_adam import ops as agg_ops, ref as agg_ref
+from repro.ps.service_runtime import ServiceRuntime
+
+
+def _tree(key, sizes):
+    ks = jax.random.split(key, len(sizes))
+    return {f"t{i}": jax.random.normal(k, (n,))
+            for i, (k, n) in enumerate(zip(ks, sizes))}
+
+
+def _quad_loss(params, batch):
+    return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+               for k in params)
+
+
+# SIMD-even sizes (multiples of 16): jitted cross-program bit-exactness.
+TREES_EVEN = {
+    "a": _tree(jax.random.PRNGKey(0), (48, 16, 32)),
+    "b": _tree(jax.random.PRNGKey(1), (32, 16)),
+}
+PROBE_EVEN = _tree(jax.random.PRNGKey(7), (32,))
+# Ragged sizes: eager stays bit-exact, jitted gets the 1-ulp tolerance.
+TREES_RAGGED = {
+    "a": _tree(jax.random.PRNGKey(2), (40, 17, 8)),
+    "b": _tree(jax.random.PRNGKey(3), (33, 21)),
+}
+PROBE_RAGGED = _tree(jax.random.PRNGKey(8), (29,))
+
+
+def _targets(trees):
+    return {jid: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+            for jid, t in trees.items()}
+
+
+def _runtime(trees, jit=True, engine=None):
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+    rt = ServiceRuntime(svc, jit=jit)
+    eng = rt.attach_engine(**engine) if engine is not None else None
+    for jid, tree in trees.items():
+        nbytes = sum(4 * v.size for v in tree.values())
+        rt.add_job(jid, tree, _quad_loss, lr=0.05, required_servers=2,
+                   agg_throughput=nbytes / 0.45)
+    return rt, eng
+
+
+def _drive(rt, trees, probe, eng=None, n_steps=14):
+    """Step all jobs n times; a probe job arrives at 5 and exits at 10,
+    forcing two replan migrations (with queued pushes pending when the
+    engine drives, so the quiesce/drain path is exercised)."""
+    targets = _targets(trees)
+    probe_target = jax.tree_util.tree_map(lambda p: p * 0 + 1.0, probe)
+    step = eng.step if eng is not None else rt.step
+    for i in range(n_steps):
+        if i == 5:
+            nb = sum(4 * v.size for v in probe.values())
+            rt.add_job("probe", probe, _quad_loss, lr=0.05,
+                       required_servers=1, agg_throughput=nb / 0.6)
+        if i == 10:
+            rt.remove_job("probe")
+        for jid in trees:
+            step(jid, {"target": targets[jid]})
+        if 5 <= i < 10:
+            step("probe", {"target": probe_target})
+    if eng is not None:
+        eng.drain()
+    return rt
+
+
+# ----------------------------------------------------------- acceptance
+def test_batched_tick_bit_exact_vs_sequential_through_replans():
+    """Tentpole acceptance: K co-resident jobs' updates applied by ONE
+    batched tick are bit-exact with K sequential PR-2 block steps --
+    including through a probe job's arrival/exit replans, whose
+    migrations quiesce (drain) the engine first.  Driven eagerly on both
+    sides so every arithmetic op is the pure per-op IEEE result -- the
+    comparison pins the engine's SEMANTICS, free of XLA's per-program
+    fusion rounding (covered with a 1-ulp tolerance below)."""
+    rt_seq = _drive(_runtime(TREES_EVEN, jit=False)[0], TREES_EVEN,
+                    PROBE_EVEN)
+    rt_eng, eng = _runtime(TREES_EVEN, jit=False,
+                           engine=dict(max_staleness=0, jit=False))
+    _drive(rt_eng, TREES_EVEN, PROBE_EVEN, eng=eng)
+    assert rt_seq.n_replans == rt_eng.n_replans >= 2
+    # The ticks really batched: strictly fewer passes than pushes.
+    assert eng.stats.n_ticks < eng.stats.n_applied
+    assert eng.stats.mean_batch > 1.0
+    for name in ("flat", "mu", "nu"):
+        np.testing.assert_array_equal(np.asarray(rt_seq.state[name]),
+                                      np.asarray(rt_eng.state[name]))
+
+
+def test_batched_tick_eager_bit_exact_any_sizes():
+    """Eager engine == eager sequential at RAGGED sizes too: the batched
+    pass is semantically a pure execution-order change."""
+    rt_seq = _drive(_runtime(TREES_RAGGED, jit=False)[0], TREES_RAGGED,
+                    PROBE_RAGGED)
+    rt_eng, eng = _runtime(TREES_RAGGED, jit=False,
+                           engine=dict(max_staleness=0, jit=False))
+    _drive(rt_eng, TREES_RAGGED, PROBE_RAGGED, eng=eng)
+    for name in ("flat", "mu", "nu"):
+        np.testing.assert_array_equal(np.asarray(rt_seq.state[name]),
+                                      np.asarray(rt_eng.state[name]))
+
+
+@pytest.mark.parametrize("trees,probe", [
+    (TREES_EVEN, PROBE_EVEN), (TREES_RAGGED, PROBE_RAGGED)])
+def test_batched_tick_jitted_within_ulp(trees, probe):
+    """Fully-jitted engine vs fully-jitted sequential runtime: XLA:CPU's
+    fusion emitter may reround one update expression ~1 ulp between the
+    two program shapes (same caveat as the PR-2 jitted block-vs-masked
+    comparison); never more."""
+    rt_seq = _drive(_runtime(trees)[0], trees, probe)
+    rt_eng, eng = _runtime(trees, engine=dict(max_staleness=0))
+    _drive(rt_eng, trees, probe, eng=eng)
+    assert rt_seq.n_replans == rt_eng.n_replans >= 2
+    for name in ("flat", "mu", "nu"):
+        np.testing.assert_allclose(np.asarray(rt_seq.state[name]),
+                                   np.asarray(rt_eng.state[name]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------ bounded staleness
+def test_staleness_bound_blocks_pull():
+    """A job may run max_staleness steps ahead; the pull that would put it
+    s+1 ahead blocks on (forces) a tick."""
+    rt, eng = _runtime(TREES_EVEN,
+                       engine=dict(max_staleness=1, queue_capacity=10))
+    targets = _targets(TREES_EVEN)
+    batch = {"target": targets["a"]}
+    eng.step("a", batch)  # outstanding 1
+    assert eng.stats.n_ticks == 0 and eng.outstanding("a") == 1
+    eng.step("a", batch)  # pull at 1 <= s: allowed; outstanding 2 = s+1
+    assert eng.stats.n_ticks == 0 and eng.outstanding("a") == 2
+    m = eng.step("a", batch)  # pull at 2 > s: forced tick
+    assert eng.stats.n_forced_staleness == 1
+    assert eng.stats.n_ticks == 1
+    assert eng.outstanding("a") == 2  # 3 submitted, 1 applied
+    assert not m["future"].done()
+    # result() forces the remaining ticks and reports the step count.
+    assert m["future"].result() == 3
+    assert eng.outstanding("a") == 0
+
+
+def test_zero_staleness_is_bsp():
+    """max_staleness=0: every pull beyond the first outstanding push
+    forces the tick -- bulk-synchronous semantics."""
+    rt, eng = _runtime(TREES_EVEN,
+                       engine=dict(max_staleness=0, queue_capacity=10))
+    batch = {"target": _targets(TREES_EVEN)["a"]}
+    eng.step("a", batch)
+    eng.step("a", batch)
+    assert eng.stats.n_forced_staleness == 1
+    assert eng.stats.n_ticks == 1
+
+
+def test_queue_capacity_backpressure():
+    """A full per-job queue exerts backpressure on submit_push."""
+    rt, eng = _runtime(TREES_EVEN,
+                       engine=dict(max_staleness=10, queue_capacity=2))
+    grads = jax.tree_util.tree_map(jnp.ones_like, TREES_EVEN["a"])
+    futs = [eng.submit_push("a", grads) for _ in range(3)]
+    assert eng.stats.n_forced_capacity == 1
+    assert eng.outstanding("a") == 2
+    assert futs[0].done() and not futs[2].done()
+    assert eng.drain() == 2
+    assert all(f.done() for f in futs)
+
+
+def test_future_resolves_with_job_step_count():
+    rt, eng = _runtime(TREES_EVEN, engine=dict(max_staleness=0))
+    batch = {"target": _targets(TREES_EVEN)["b"]}
+    steps = [eng.step("b", batch)["future"].result() for _ in range(3)]
+    assert steps == [1, 2, 3]
+
+
+# ------------------------------------------------------ replan quiescing
+def test_replan_drains_queued_pushes():
+    """add_job/remove_job quiesce the engine: every queued push applies
+    against the OLD plan before the state migrates."""
+    rt, eng = _runtime(TREES_EVEN,
+                       engine=dict(max_staleness=2, queue_capacity=4))
+    targets = _targets(TREES_EVEN)
+    for jid in TREES_EVEN:
+        eng.step(jid, {"target": targets[jid]})
+        eng.step(jid, {"target": targets[jid]})
+    assert eng.outstanding("a") == 2 and eng.outstanding("b") == 2
+    nb = sum(4 * v.size for v in PROBE_EVEN.values())
+    rt.add_job("probe", PROBE_EVEN, _quad_loss, lr=0.05,
+               required_servers=1, agg_throughput=nb / 0.6)
+    assert eng.outstanding("a") == 0 and eng.outstanding("b") == 0
+    assert rt.n_replans >= 1
+    rt.remove_job("probe")
+    # Counts survived the round trip: both jobs applied their 2 pushes.
+    assert int(jax.device_get(rt.state["counts"]["a"])) == 2
+    assert "probe" not in rt.state["counts"]
+
+
+def test_engine_rejects_unknown_and_compressed_jobs():
+    rt, eng = _runtime(TREES_EVEN, engine=dict(max_staleness=0))
+    with pytest.raises(ValueError, match="unknown job"):
+        eng.submit_push("nope", {})
+    with pytest.raises(ValueError, match="unknown job"):
+        eng.pull("nope")
+    rt._jobs["a"]["step_opts"]["push_compression"] = "int8"
+    with pytest.raises(NotImplementedError, match="error-feedback"):
+        eng.step("a", {"target": _targets(TREES_EVEN)["a"]})
+
+
+# --------------------------------------------------- multi-job kernel
+@pytest.mark.parametrize("workers", [0, 4])
+def test_multijob_kernel_matches_sequential_oracle(workers):
+    """aggregate_adam_multijob (interpret mode) == applying each job's
+    block-owned update sequentially (per-job oracle), with per-job
+    hyperparameters and step counts."""
+    block, n_blocks = 8, 16
+    n = block * n_blocks
+    bi = [np.array([1, 2, 5], np.int32), np.array([0, 3, 9, 10], np.int32)]
+    block_idx = np.concatenate(bi)
+    sizes = tuple(b.size for b in bi)
+    m = block_idx.size * block
+    p = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    mu = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,))) * 0.1
+    nu = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (n,))) * 0.01
+    gshape = (workers, m) if workers else (m,)
+    g = jax.random.normal(jax.random.PRNGKey(3), gshape)
+    counts = [jnp.array(5, jnp.int32), jnp.array(2, jnp.int32)]
+    kw = dict(lr=(1e-2, 3e-3), b1=0.9, b2=0.999, eps=1e-8, wd=(0.01, 0.0))
+    hp = agg_ops.multi_job_hp(counts, **kw)
+    job_slot = jnp.asarray(np.repeat(np.arange(2, dtype=np.int32), sizes))
+    out_k = agg_kernel.aggregate_adam_multijob(
+        p, g, mu, nu, hp, jnp.asarray(block_idx), job_slot, block=block,
+        interpret=True)
+    out_r = agg_ref.aggregate_adam_multijob_ref(
+        p, g, mu, nu, counts, block_idx, sizes, block=block, **kw)
+    for a, b in zip(out_k, out_r):
+        assert a.shape == (m,)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_multijob_jnp_fallback_bit_exact_vs_sequential_blocks():
+    """The fused-scatter jnp fallback is bit-exact with sequential
+    per-job _adam_math block updates at SIMD-even block sizes, jitted."""
+    from repro.ps.runtime import _adam_math
+
+    block = 16
+    bi = [np.array([1, 2, 5], np.int32), np.array([0, 3, 9, 10], np.int32)]
+    block_idx = np.concatenate(bi)
+    sizes = tuple(b.size for b in bi)
+    n = block * 16
+    p = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    mu = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,))) * 0.1
+    nu = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (n,))) * 0.01
+    g = jax.random.normal(jax.random.PRNGKey(3), (block_idx.size * block,))
+    counts = [jnp.array(5, jnp.int32), jnp.array(2, jnp.int32)]
+    lrs = (1e-2, 3e-3)
+
+    def rows(v, b):
+        return v.reshape(-1, block)[jnp.asarray(b)].reshape(-1)
+
+    batched = jax.jit(lambda p, g, mu, nu, c0, c1: agg_ops.multi_job_adam_update(
+        p, (g[:sizes[0] * block], g[sizes[0] * block:]), mu, nu, [c0, c1],
+        block_idx=block_idx, job_sizes=sizes, block=block, lr=lrs))
+    out_b = batched(p, g, mu, nu, *counts)
+    outs = []
+    for j, (b, cnt, lr) in enumerate(zip(bi, counts, lrs)):
+        lo = sum(sizes[:j]) * block
+        hi = lo + sizes[j] * block
+        fn = jax.jit(lambda p, g, mu, nu, c, _b=b, _lr=lr: _adam_math(
+            rows(p, _b), g, rows(mu, _b), rows(nu, _b), c, lr=_lr,
+            b1=0.9, b2=0.999, eps=1e-8))
+        outs.append(fn(p, g[lo:hi], mu, nu, cnt))
+    for i in range(3):
+        cat = np.concatenate([np.asarray(o[i]) for o in outs])
+        np.testing.assert_array_equal(np.asarray(out_b[i]), cat)
+
+
+def test_multijob_p_packed_disambiguation():
+    """Regression: when the jobs jointly own EVERY block, packed and full
+    p have the same length but different lane order -- the explicit
+    p_packed flag must keep them apart (shape inference once misread the
+    full buffer as packed and corrupted every parameter)."""
+    block = 16
+    bi = [np.array([2, 3], np.int32), np.array([0, 1], np.int32)]
+    block_idx = np.concatenate(bi)  # NOT the identity order
+    sizes = (2, 2)
+    n = block * 4  # jobs cover the whole space: m == n
+    p = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    mu = jnp.zeros((n,))
+    nu = jnp.zeros((n,))
+    g = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    counts = [jnp.array(1, jnp.int32)] * 2
+    out = agg_ops.multi_job_adam_update(
+        p, (g[:sizes[0] * block], g[sizes[0] * block:]), mu, nu, counts,
+        block_idx=block_idx, job_sizes=sizes, block=block, lr=0.1)
+    ref = agg_ref.aggregate_adam_multijob_ref(
+        p, g, mu, nu, counts, block_idx, sizes, block=block, lr=0.1)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
