@@ -1,0 +1,212 @@
+"""Migration scaling: full-gather vs delta vs checkpoint-restart.
+
+The paper's elasticity claim (§5, Table 3) is that aggregations migrate
+with *negligible* overhead.  The seed implementation relayouted the
+ENTIRE flat space on every replan (one permutation gather over
+``old.total_len`` lanes); the delta path (repro.ps.elastic.
+compile_migration_delta + repro.kernels.relayout) executes only the
+moved runs, so a plan transition costs O(moved bytes), not O(total
+state).
+
+This benchmark seeds K co-resident jobs (K = 2/4/8) into one compiled
+shared service and times the same two transitions through both
+executors (plan-pair structures pre-compiled for both, exactly as a
+live service holds them in cache):
+
+  arrival   one small job joins (sorts after every resident job, fits in
+            existing shard padding): nothing co-resident moves -- the
+            delta is (near-)empty while the full gather still permutes
+            every lane of every leaf;
+  exit      the first job leaves and survivors consolidate: the delta
+            copies only the shifted runs.
+
+The checkpoint-restart strawman (save + cross-plan restore through
+repro.checkpoint) is measured once at max K.  Every delta result is
+asserted bit-equal to the full-gather oracle before timing is reported.
+
+``run.py --only migration --json BENCH_migration.json`` seeds the
+perf-trajectory file; ``--smoke`` (or MIGRATION_SMOKE=1/HOTPATH_SMOKE=1)
+shrinks sizes for CI.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_ps_checkpoint, save_ps_checkpoint
+from repro.core import ParameterService
+from repro.ps.elastic import (
+    compile_migration_delta,
+    migrate_flat_state,
+    migrate_flat_state_delta,
+    migration_bytes,
+)
+from repro.ps.runtime import (
+    init_shared_state,
+    job_profile_from_tree,
+    seed_job_params,
+)
+
+JOB_COUNTS = (2, 4, 8)
+
+
+def _smoke() -> bool:
+    return any(os.environ.get(k, "") not in ("", "0")
+               for k in ("MIGRATION_SMOKE", "HOTPATH_SMOKE"))
+
+
+def _tree(seed: int, n_leaves: int, leaf: int):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n_leaves)
+    return {f"t{i:03d}": jax.random.normal(k, (leaf,))
+            for i, k in enumerate(ks)}
+
+
+def _build(n_jobs: int, n_leaves: int, leaf: int):
+    """K co-resident jobs in ONE service, with a seeded shared state."""
+    svc = ParameterService(total_budget=64, n_clusters=1, plan_pad_to=128)
+    trees = {f"j{i}": _tree(i, n_leaves, leaf) for i in range(n_jobs)}
+    for jid, tree in sorted(trees.items()):
+        nbytes = sum(4 * v.size for v in tree.values())
+        profile, specs = job_profile_from_tree(
+            jid, tree, required_servers=2, agg_throughput=nbytes / 0.4)
+        svc.register_job(profile, specs=specs)
+    plan = svc.compile_plan()
+    state = init_shared_state(plan)
+    for jid, tree in trees.items():
+        state = seed_job_params(plan, state, jid, tree)
+    state["mu"] = jnp.where(state["flat"] != 0, 0.1, 0.0)
+    jax.block_until_ready(state["flat"])
+    return svc, plan, state
+
+
+def _copy_state(state):
+    return {k: (jax.tree_util.tree_map(lambda x: x.copy(), v)
+                if isinstance(v, dict) else v.copy())
+            for k, v in state.items()}
+
+
+def _time_migration(fn, state, repeats: int) -> float:
+    """Best wall time of fn(copy_of_state); copies stay outside the timed
+    region (the delta path may donate its input buffers)."""
+    best = float("inf")
+    for _ in range(repeats):
+        s = _copy_state(state)
+        jax.block_until_ready(s["flat"])
+        t0 = time.perf_counter()
+        out = fn(s)
+        jax.block_until_ready(out["flat"])
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def _scenario_rows(name, n_jobs, ctx, old, new, state, repeats, out):
+    """Time one (old -> new) transition through both executors."""
+    delta = compile_migration_delta(old, new)  # cached, as a live service
+    oracle = migrate_flat_state(state, old, new)  # holds it across ticks
+    got = migrate_flat_state_delta(_copy_state(state), old, new, delta=delta)
+    for k in ("flat", "mu", "nu"):
+        np.testing.assert_array_equal(np.asarray(oracle[k]),
+                                      np.asarray(got[k]))
+    gather_ms = _time_migration(
+        lambda s: migrate_flat_state(s, old, new), state, repeats)
+    delta_ms = _time_migration(
+        lambda s: migrate_flat_state_delta(s, old, new, delta=delta),
+        state, repeats)
+    mig_bytes = migration_bytes(old, new)
+    out.append((f"migration/gather_ms/{name}/jobs{n_jobs}",
+                f"{gather_ms:.3f}",
+                f"full-space permutation of {old.total_len} lanes x 3 "
+                f"leaves; {ctx}"))
+    out.append((f"migration/delta_ms/{name}/jobs{n_jobs}",
+                f"{delta_ms:.3f}",
+                f"{len(delta.moves)} move + {len(delta.zeros)} zero runs, "
+                f"{delta.moved_elements} lanes moved; {ctx}"))
+    out.append((f"migration/speedup/{name}/jobs{n_jobs}",
+                f"{gather_ms / max(delta_ms, 1e-6):.1f}",
+                "full-gather ms / delta ms for the same transition"))
+    out.append((f"migration/moved_mb/{name}/jobs{n_jobs}",
+                f"{delta.moved_bytes() / 1e6:.3f}",
+                f"delta-path bytes (master+moments); cross-shard "
+                f"migration_bytes={mig_bytes / 1e6:.3f} MB; touched jobs "
+                f"{list(delta.touched_jobs)}"))
+    return gather_ms, delta_ms, delta, mig_bytes
+
+
+def rows():
+    smoke = _smoke()
+    n_leaves = 4 if smoke else 8
+    leaf = 512 if smoke else 8192
+    repeats = 3 if smoke else 15
+    out = []
+    accept = {}
+    for n_jobs in JOB_COUNTS:
+        svc, old, state = _build(n_jobs, n_leaves, leaf)
+        ctx = (f"{n_jobs} jobs x {n_leaves} leaves x {leaf} lanes, "
+               f"space {old.total_len}")
+
+        # Arrival: a small job (sorted after every resident one) joins.
+        probe = _tree(99, max(2, n_leaves // 2), max(128, leaf // 8))
+        nb = sum(4 * v.size for v in probe.values())
+        profile, specs = job_profile_from_tree(
+            "zz-probe", probe, required_servers=1, agg_throughput=nb / 0.4)
+        svc.register_job(profile, specs=specs)
+        plan_arr = svc.compile_plan()
+        _, _, delta, mig_bytes = _scenario_rows(
+            "arrival", n_jobs, ctx, old, plan_arr, state, repeats, out)
+        if n_jobs == JOB_COUNTS[-1]:
+            accept["arrival_delta"] = delta
+            accept["arrival_match"] = delta.moved_bytes() == mig_bytes
+
+        # Exit: the first resident job leaves; survivors consolidate.
+        state_arr = migrate_flat_state(state, old, plan_arr)
+        state_arr = seed_job_params(plan_arr, state_arr, "zz-probe", probe)
+        svc.job_exit("j0")
+        plan_exit = svc.compile_plan()
+        _scenario_rows("exit", n_jobs, ctx, plan_arr, plan_exit, state_arr,
+                       repeats, out)
+
+        if n_jobs == JOB_COUNTS[-1]:
+            with tempfile.TemporaryDirectory() as d:
+                t0 = time.perf_counter()
+                save_ps_checkpoint(d, 0, old, state)
+                _, restored = restore_ps_checkpoint(d, 0, plan=plan_arr)
+                jax.block_until_ready(restored["flat"])
+                ckpt_ms = (time.perf_counter() - t0) * 1e3
+            out.append((f"migration/ckpt_restart_ms/jobs{n_jobs}",
+                        f"{ckpt_ms:.1f}",
+                        "checkpoint-restart strawman for the same arrival "
+                        "transition (full save + cross-plan restore)"))
+
+    # Acceptance (single-job arrival at max co-residency): the delta path
+    # must beat the full gather >= 5x and its moved-bytes accounting must
+    # agree with the cross-shard migration_bytes for this transition.
+    k1 = JOB_COUNTS[-1]
+    g_ms = float(next(v for n, v, _ in out
+                      if n == f"migration/gather_ms/arrival/jobs{k1}"))
+    d_ms = float(next(v for n, v, _ in out
+                      if n == f"migration/delta_ms/arrival/jobs{k1}"))
+    ok = g_ms >= 5 * d_ms and bool(accept.get("arrival_match"))
+    out.append((
+        "migration/delta_5x_and_bytes_match",
+        int(ok),
+        f"arrival at {k1} jobs: delta {d_ms:.3f} ms vs gather {g_ms:.3f} "
+        f"ms ({g_ms / max(d_ms, 1e-6):.1f}x); delta moved bytes "
+        f"{accept['arrival_delta'].moved_bytes()} == migration_bytes "
+        f"(match={accept.get('arrival_match')})",
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv:
+        os.environ["MIGRATION_SMOKE"] = "1"
+    for name, value, derived in rows():
+        print(f'{name},{value},"{derived}"')

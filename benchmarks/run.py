@@ -23,6 +23,7 @@ MODULES = [
     ("fig10", "fig10_case_study"),
     ("fig11", "fig11_trace_sim"),
     ("table3", "table3_migration"),
+    ("migration", "migration_scaling"),
     ("plan", "plan_scaling"),
     ("hotpath", "hotpath_step"),
     ("service_tick", "service_tick"),
@@ -44,12 +45,18 @@ def main(argv=None) -> None:
     if args.smoke:
         os.environ["HOTPATH_SMOKE"] = "1"
 
+    labels = [label for label, _ in MODULES]
+    if args.only:
+        unknown = [pat for pat in args.only
+                   if not any(pat in label for label in labels)]
+        if unknown:
+            raise SystemExit(
+                f"error: --only {', '.join(unknown)} matches no benchmark "
+                f"label.\nAvailable labels: {', '.join(labels)}")
     selected = [
         (label, name) for label, name in MODULES
         if not args.only or any(pat in label for pat in args.only)
     ]
-    if not selected:
-        raise SystemExit(f"--only {args.only} matched no benchmark")
 
     print("name,value,derived")
     collected = []

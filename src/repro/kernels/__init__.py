@@ -7,6 +7,9 @@ flash_attn  blockwise online-softmax attention (training/prefill shapes);
             the jnp chunked_attention in models/attention.py is its oracle.
 embed_bag   embedding-bag gather-reduce with scalar-prefetch row streaming
             (recsys lookup hot path).
+relayout    one-launch run-copy for plan-pair migrations: scatter every
+            state leaf's touched blocks in place (aliased outputs), so a
+            replan costs O(moved bytes) instead of O(total state).
 
 Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper
 with interpret fallback on CPU), ref.py (pure-jnp oracle). All validated in

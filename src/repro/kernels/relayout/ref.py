@@ -1,0 +1,29 @@
+"""Pure-numpy oracle for the run-copy relayout."""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def relayout_ref(leaves: Sequence, delta) -> List[np.ndarray]:
+    """Apply a MigrationDelta's runs with plain numpy slice assignment.
+
+    Semantics mirror ops.relayout exactly: resize the buffer (pad zeros /
+    truncate), zero the vacated runs, copy the moved runs from the
+    ORIGINAL buffer.  Lanes outside every run are untouched.
+    """
+    outs = []
+    for x in leaves:
+        x = np.asarray(x)
+        assert x.ndim == 1 and x.shape[0] == delta.old_len
+        base = np.zeros(delta.new_len, dtype=x.dtype)
+        n = min(delta.old_len, delta.new_len)
+        base[:n] = x[:n]
+        for dst, length in delta.zeros:
+            base[dst : dst + length] = 0
+        for src, dst, length in delta.moves:
+            base[dst : dst + length] = x[src : src + length]
+        outs.append(base)
+    return outs

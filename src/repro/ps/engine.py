@@ -23,17 +23,28 @@ service-side loop that actually batches them:
 Block exclusivity (every ``block_align`` block of the flat space belongs
 to at most one job, the PR-2 invariant) is what makes the batched pass a
 pure execution-order change: its result is bit-exact with applying the
-same pushes as K sequential per-job block steps.
+same pushes as K sequential per-job block steps.  Below the measured
+batching crossover (``min_batch_jobs``; BENCH_service_tick.json showed
+the one-launch concatenation LOSING at 2 pending jobs) a tick dispatches
+the same pushes as per-job block passes instead -- identical result,
+cheaper program.
 
-Replans quiesce the engine: :meth:`ServiceRuntime.add_job` / ``remove_job``
-drain every queued push against the OLD plan before the shared state
-migrates, so a migration never reorders an update across layouts and the
-engine'd runtime stays bit-exact with the unbatched one -- eager
-execution matches it bit-for-bit at any sizes, and the jitted batched
-apply matches jitted sequential block updates bit-for-bit at SIMD-even
-block sizes (fully-jitted END-TO-END runs additionally see XLA:CPU's
-~1-ulp cross-program fusion rounding, the same caveat PR 2 documents for
-jitted block-vs-masked; see tests/test_engine.py).
+Replans are STALL-FREE: the runtime compiles a
+:class:`repro.ps.elastic.MigrationDelta` for the plan pair and quiesces
+ONLY the touched jobs (those whose segment layout changes) -- their
+queued pushes apply against the OLD plan before the state migrates.
+Untouched jobs keep their queues, their compiled programs, and their
+tick cadence straight through the transition; a per-push EPOCH FENCE
+(every queued push is tagged with the plan epoch it was packed under,
+and untouched jobs' surviving pushes are re-tagged at each replan)
+guarantees no push is ever applied across mismatched layouts, extending
+the PR-3 invariant: the engine'd runtime stays bit-exact with the
+unbatched one -- eager execution matches it bit-for-bit at any sizes,
+and the jitted batched apply matches jitted sequential block updates
+bit-for-bit at SIMD-even block sizes (fully-jitted END-TO-END runs
+additionally see XLA:CPU's ~1-ulp cross-program fusion rounding, the
+same caveat PR 2 documents for jitted block-vs-masked; see
+tests/test_engine.py).
 
 Usage::
 
@@ -98,6 +109,10 @@ class TickStats:
     n_applied: int = 0  # pushes applied across all ticks
     n_forced_staleness: int = 0  # ticks forced by a pull at the bound
     n_forced_capacity: int = 0  # ticks forced by a full push queue
+    n_forced_replan: int = 0  # ticks forced to drain TOUCHED jobs on a replan
+    n_per_job_dispatch: int = 0  # ticks dispatched as per-job passes (< K_min)
+    n_replans: int = 0  # plan changes the engine rode through
+    n_retagged: int = 0  # untouched pushes carried across a replan (fence)
 
     @property
     def mean_batch(self) -> float:
@@ -121,7 +136,7 @@ class ServiceTickEngine:
 
     def __init__(self, runtime, *, max_staleness: int = 1,
                  queue_capacity: Optional[int] = None, jit: bool = True,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, min_batch_jobs: int = 3):
         if max_staleness < 0:
             raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
         self.runtime = runtime
@@ -130,10 +145,18 @@ class ServiceTickEngine:
                                else int(queue_capacity))
         if self.queue_capacity < 1:
             raise ValueError("queue_capacity must be >= 1")
+        # Batching crossover: with fewer than this many pending jobs a
+        # tick dispatches per-job block passes -- the one-launch
+        # concatenation only wins once enough jobs share the pass
+        # (BENCH_service_tick.json measured batched LOSING at 2 jobs,
+        # 0.71x, and winning from 4 up).  Result is identical either
+        # way (disjoint blocks commute); this is a pure cost knob.
+        self.min_batch_jobs = int(min_batch_jobs)
         self.stats = TickStats()
         self._poisoned = False
         self._jit = jit
         self._interpret = interpret  # None = auto (jnp path off-TPU)
+        self._epoch = 0  # bumped per plan change; fences queued pushes
         self._queues: Dict[str, deque] = {}
         # Python-side mirror of state["counts"]: futures resolve from it
         # without a device round-trip per tick.
@@ -169,15 +192,57 @@ class ServiceTickEngine:
         q = self._queues.get(job_id)
         return len(q) if q else 0
 
-    def _on_plan_change(self) -> None:
-        """Replan: every compiled structure is plan-specific; drop it.
-        Queues must already be empty (the runtime drains before migrating)."""
-        assert not any(self._queues.values()), (
-            "replan with queued pushes: runtime must drain the engine first")
-        self._appliers.clear()
-        self._pull_fns.clear()
-        self._grad_fns.clear()
-        self._pack_fns.clear()
+    def quiesce_for_replan(self, touched) -> int:
+        """Drain ONLY the touched jobs' queues ahead of a migration.
+
+        Their queued pushes apply against the OLD plan (their layout is
+        about to change); untouched jobs' queues -- and tick cadence --
+        are left alone.  Returns pushes applied."""
+        applied = 0
+        while True:
+            pending = [j for j in touched if self._queues.get(j)]
+            if not pending:
+                return applied
+            self.stats.n_forced_replan += 1
+            applied += self.tick(only=pending)
+
+    def _on_plan_change(self, touched=None) -> None:
+        """Replan landed: invalidate what the new plan breaks.
+
+        ``touched=None`` (full quiesce: first plan, last exit, or a
+        gather-path migration) drops every compiled structure and
+        requires every queue empty.  With a delta's touched set, only
+        the touched jobs' programs die; untouched jobs keep queues and
+        compiled programs -- their layout is bit-identical in the new
+        plan -- and their surviving pushes are re-tagged to the new
+        epoch (the fence that proves no push crosses layouts)."""
+        self._epoch += 1
+        self.stats.n_replans += 1
+        if touched is None:
+            assert not any(self._queues.values()), (
+                "replan with queued pushes: runtime must drain the "
+                "engine first")
+            self._appliers.clear()
+            self._pull_fns.clear()
+            self._grad_fns.clear()
+            self._pack_fns.clear()
+            return
+        touched = set(touched)
+        for j in touched:
+            assert not self._queues.get(j), (
+                f"replan with queued pushes for TOUCHED job {j!r}: "
+                f"quiesce_for_replan must drain it first")
+        for j, q in self._queues.items():
+            if q:  # untouched by construction: carry across the fence
+                self.stats.n_retagged += len(q)
+                self._queues[j] = deque(
+                    (packed, fut, self._epoch) for packed, fut, _ in q)
+        for j in touched:
+            self._pull_fns.pop(j, None)
+            self._grad_fns.pop(j, None)
+            self._pack_fns.pop(j, None)
+        self._appliers = {k: v for k, v in self._appliers.items()
+                         if not touched.intersection(k)}
 
     def _forget_job(self, job_id: str) -> None:
         self._queues.pop(job_id, None)
@@ -247,7 +312,7 @@ class ServiceTickEngine:
             self.stats.n_forced_capacity += 1
             self.tick()
         fut = PushFuture(job_id, self)
-        q.append((packed, fut))
+        q.append((packed, fut, self._epoch))
         return fut
 
     def step(self, job_id: str, batch) -> Dict[str, Any]:
@@ -282,14 +347,17 @@ class ServiceTickEngine:
             self._grad_fns[job_id] = fn
         loss, packed = fn(self.runtime.state["flat"], batch)
         fut = PushFuture(job_id, self)
-        q.append((packed, fut))
+        q.append((packed, fut, self._epoch))
         return {"loss": loss, "future": fut}
 
     # ----------------------------------------------------------------- tick
-    def tick(self) -> int:
-        """One service tick: pop the head push of EVERY pending job and
-        apply them in one batched pass over the shared flat space.
-        Returns the number of jobs applied (0 = nothing pending)."""
+    def tick(self, only=None) -> int:
+        """One service tick: pop the head push of every pending job (or
+        of the ``only`` subset during a replan quiesce) and apply them --
+        in ONE batched pass when at least ``min_batch_jobs`` jobs are
+        pending, as per-job block passes below that crossover (identical
+        result, cheaper program).  Returns the number of jobs applied
+        (0 = nothing pending)."""
         if self._poisoned:
             raise RuntimeError(
                 "engine poisoned by a failed batched apply: the jitted "
@@ -297,56 +365,79 @@ class ServiceTickEngine:
                 "have been deleted mid-tick; restore/re-seed the "
                 "runtime's state and attach a fresh engine before "
                 "continuing")
-        pending = [j for j in self.runtime._jobs if self._queues.get(j)]
+        pending = [j for j in self.runtime._jobs
+                   if self._queues.get(j) and (only is None or j in only)]
         if not pending:
             return 0
-        heads = [self._queues[j].popleft() for j in pending]
-        try:
-            key = tuple(pending)
-            applier = self._appliers.get(key)
-            if applier is None:
-                applier = self._build_applier(key)
-                if len(self._appliers) >= self.MAX_APPLIERS:
-                    # One program per pending-job SUBSET: bound the cache
-                    # (FIFO eviction) so heterogeneous tick patterns can't
-                    # accumulate 2^K compiled appliers.
-                    self._appliers.pop(next(iter(self._appliers)))
-                self._appliers[key] = applier
-            gs = tuple(packed for packed, _ in heads)
-        except BaseException:
-            # Build-time failure (e.g. a non-block-exclusive layout): no
-            # device op ran, so re-queue the popped heads -- nothing is
-            # lost and a later tick can retry.
-            for j, head in zip(pending, heads):
-                self._queues[j].appendleft(head)
-            raise
-        try:
-            self.runtime.state = applier(self.runtime.state, gs)
-        except BaseException:
-            # Execution failure: the jitted applier DONATES the state
-            # buffers, so they may already be deleted -- no retry against
-            # this state can succeed.  Re-queue the heads so the pushes
-            # remain inspectable, and poison the engine so later ticks
-            # (including PushFuture.result() loops) fail fast with a
-            # clear message instead of spinning on dead buffers.
-            for j, head in zip(pending, heads):
-                self._queues[j].appendleft(head)
-            if self._jit:
-                self._poisoned = True
-            raise
-        for j, (_, fut) in zip(pending, heads):
-            self._counts[j] += 1
-            fut._resolve(self._counts[j])
+        # Epoch fence: a queued push packed under a different plan epoch
+        # must never reach the apply -- touched jobs are drained before
+        # the plan changes and untouched survivors are re-tagged, so a
+        # mismatch here is a protocol violation, not a recoverable state.
+        for j in pending:
+            if self._queues[j][0][2] != self._epoch:
+                raise RuntimeError(
+                    f"epoch fence: job {j!r} queued a push under plan "
+                    f"epoch {self._queues[j][0][2]} but the engine is at "
+                    f"{self._epoch}; a replan migrated this job's layout "
+                    f"without draining its queue")
+        if 1 < len(pending) < self.min_batch_jobs:
+            # Below the batching crossover: the same pushes as per-job
+            # passes (disjoint blocks commute, so the result is
+            # bit-identical to the one-launch concatenation).
+            groups = [(j,) for j in pending]
+            self.stats.n_per_job_dispatch += 1
+        else:
+            groups = [tuple(pending)]
+        applied = 0
+        for key in groups:
+            heads = [self._queues[j].popleft() for j in key]
+            try:
+                applier = self._appliers.get(key)
+                if applier is None:
+                    applier = self._build_applier(key)
+                    if len(self._appliers) >= self.MAX_APPLIERS:
+                        # One program per pending-job SUBSET: bound the
+                        # cache (FIFO eviction) so heterogeneous tick
+                        # patterns can't accumulate 2^K compiled appliers.
+                        self._appliers.pop(next(iter(self._appliers)))
+                    self._appliers[key] = applier
+                gs = tuple(packed for packed, _, _ in heads)
+            except BaseException:
+                # Build-time failure (e.g. a non-block-exclusive layout):
+                # no device op ran, so re-queue the popped heads --
+                # nothing is lost and a later tick can retry.
+                for j, head in zip(key, heads):
+                    self._queues[j].appendleft(head)
+                raise
+            try:
+                self.runtime.state = applier(self.runtime.state, gs)
+            except BaseException:
+                # Execution failure: the jitted applier DONATES the state
+                # buffers, so they may already be deleted -- no retry
+                # against this state can succeed.  Re-queue the heads so
+                # the pushes remain inspectable, and poison the engine so
+                # later ticks (including PushFuture.result() loops) fail
+                # fast with a clear message instead of spinning on dead
+                # buffers.
+                for j, head in zip(key, heads):
+                    self._queues[j].appendleft(head)
+                if self._jit:
+                    self._poisoned = True
+                raise
+            for j, (_, fut, _) in zip(key, heads):
+                self._counts[j] += 1
+                fut._resolve(self._counts[j])
+            applied += len(key)
         self.stats.n_ticks += 1
-        self.stats.n_applied += len(pending)
-        return len(pending)
+        self.stats.n_applied += applied
+        return applied
 
-    def drain(self) -> int:
-        """Quiesce: tick until every queue is empty (replans call this
-        before migrating the shared state).  Returns pushes applied."""
+    def drain(self, only=None) -> int:
+        """Quiesce: tick until every (selected) queue is empty.  Returns
+        pushes applied."""
         applied = 0
         while True:
-            n = self.tick()
+            n = self.tick(only=only)
             if n == 0:
                 return applied
             applied += n

@@ -23,12 +23,21 @@ Usage::
     for batch in data:
         metrics = rt.step("mlp", batch)      # only mlp's segments change
 
+Replans execute as DELTA migrations by default (``migration="delta"``):
+the runtime compiles a :class:`repro.ps.elastic.MigrationDelta` for the
+plan pair and relocates only the moved runs (O(moved bytes), one
+run-copy pass -- repro.kernels.relayout), with the full-gather path
+(``migration="gather"``) kept as the parity oracle.
+
 With an attached :class:`repro.ps.engine.ServiceTickEngine`
 (``rt.attach_engine()``), jobs instead submit pushes into per-job bounded
-queues and the engine applies all pending jobs per tick in ONE batched
-pass; replans quiesce the engine (drain every queued push against the old
-plan) before migrating, so engine'd training stays bit-exact with the
-per-job step path across migrations.
+queues and the engine applies all pending jobs per tick in one batched
+pass; replans are STALL-FREE for untouched jobs: only the jobs the
+delta names as touched are quiesced (their queued pushes apply against
+the old plan before the state migrates), everyone else keeps queues,
+compiled programs, and tick cadence straight through the transition --
+and training stays bit-exact with the per-job step path across
+migrations (the engine's per-push epoch fence enforces it).
 """
 
 from __future__ import annotations
@@ -38,7 +47,12 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.ps.elastic import migrate_flat_state, migration_bytes
+from repro.ps.elastic import (
+    compile_migration_delta,
+    migrate_flat_state,
+    migrate_flat_state_delta,
+    migration_bytes,
+)
 from repro.ps.plan import FlatPlan
 from repro.ps.runtime import (
     init_shared_state,
@@ -52,13 +66,19 @@ from repro.ps.runtime import (
 class ServiceRuntime:
     """Shared flat-state executor bound to one ParameterService."""
 
-    def __init__(self, service, jit: bool = True):
+    def __init__(self, service, jit: bool = True, migration: str = "delta"):
+        if migration not in ("delta", "gather"):
+            raise ValueError(f"unknown migration mode {migration!r}")
         self.service = service
         self.plan: Optional[FlatPlan] = None
         self.state: Optional[Dict[str, Any]] = None
-        self.last_migration_bytes = 0
+        self.last_migration_bytes = 0  # cross-shard bytes (paper accounting)
         self.total_migration_bytes = 0
+        self.last_relayout_bytes = 0  # flat-space bytes the delta path moved
+        self.total_relayout_bytes = 0
+        self.last_replan_touched: tuple = ()
         self.n_replans = 0
+        self.migration = migration
         self._jit = jit
         self._jobs: Dict[str, Dict[str, Any]] = {}
         self._steps: Dict[str, Callable] = {}
@@ -134,9 +154,11 @@ class ServiceRuntime:
                 f"unknown job {job_id!r}: not registered with this runtime "
                 f"(have {sorted(self._jobs)})")
         if self._engine is not None:
-            # Quiesce BEFORE the job's segments leave the plan: its queued
-            # pushes (and everyone else's) apply against the old layout.
-            self._engine.drain()
+            # Quiesce the EXITING job before its segments leave the plan:
+            # its queued pushes apply against the old layout.  Co-resident
+            # jobs keep their queues; the replan below only drains the
+            # ones whose layout the exit actually disturbs.
+            self._engine.quiesce_for_replan([job_id])
             self._engine._forget_job(job_id)
         self._jobs.pop(job_id)
         self._steps.pop(job_id, None)
@@ -170,39 +192,72 @@ class ServiceRuntime:
                    for info in self._jobs.values())
 
     def _on_replan(self, old: Optional[FlatPlan], new: Optional[FlatPlan]):
-        if self._engine is not None and self.state is not None:
-            # Quiesce: every queued push applies against the OLD plan, so
-            # the migration below moves a fully-settled state and batched
-            # execution stays bit-exact with the per-job step path.
-            self._engine.drain()
+        engine = self._engine
         if new is None:  # last job exited
+            if engine is not None and self.state is not None:
+                engine.drain()
             self.plan, self.state, self._steps = None, None, {}
-            if self._engine is not None:
-                self._engine._on_plan_change()
+            if engine is not None:
+                engine._on_plan_change()
             return
+        delta = None
+        touched = None  # None = every job's layout may have changed
         if self.state is not None and old is not None:
+            if self.migration == "delta":
+                # Delta replan: quiesce ONLY the jobs whose layout the
+                # transition disturbs -- their queued pushes apply
+                # against the OLD plan; untouched jobs keep ticking.
+                delta = compile_migration_delta(old, new)
+                touched = set(delta.touched_jobs)
+                if engine is not None:
+                    engine.quiesce_for_replan(
+                        [j for j in touched if j in self._jobs])
+                self.state = migrate_flat_state_delta(
+                    self.state, old, new, delta=delta)
+                self.last_relayout_bytes = delta.moved_bytes()
+                self.total_relayout_bytes += self.last_relayout_bytes
+            else:
+                # Full-gather oracle path: hard-quiesce everything.
+                if engine is not None:
+                    engine.drain()
+                self.state = migrate_flat_state(self.state, old, new)
             moved = migration_bytes(old, new)
-            self.state = migrate_flat_state(self.state, old, new)
             self.last_migration_bytes = moved
             self.total_migration_bytes += moved
             self.n_replans += 1
+            self.last_replan_touched = (tuple(sorted(touched))
+                                        if touched is not None
+                                        else tuple(self._jobs))
         else:
+            if engine is not None and self.state is not None:
+                engine.drain()
             self.state = init_shared_state(new, needs_ef=self._needs_ef())
         if self._needs_ef() and "ef" not in self.state:
             # A compressed job joined a runtime whose state predates it.
             self.state = dict(self.state,
                               ef=jnp.zeros_like(self.state["flat"]))
         self.plan = new
-        if self._engine is not None:
-            self._engine._on_plan_change()
-        self._steps = {}
+        if engine is not None:
+            engine._on_plan_change(touched)
+        steps: Dict[str, Callable] = {}
         for job_id, info in self._jobs.items():
+            # An untouched block-mode job's step closes over a layout that
+            # is bit-identical in the new plan: keep its compiled program
+            # (no retrace, no stall).  Masked-mode jobs close over the
+            # full space and rebuild on every plan change.
+            if (touched is not None and job_id not in touched
+                    and job_id in self._steps
+                    and info["step_opts"].get("update_mode",
+                                              "block") == "block"):
+                steps[job_id] = self._steps[job_id]
+                continue
             step = make_ps_train_step(
                 info["loss_fn"], new, info["abstract"],
                 lr=info["lr"], job_id=job_id, **info["step_opts"],
             )
             # Donate the shared state so flat/mu/nu update in place instead
             # of doubling peak memory on every step.
-            self._steps[job_id] = (
+            steps[job_id] = (
                 jax.jit(step, donate_argnums=(0,)) if self._jit else step
             )
+        self._steps = steps

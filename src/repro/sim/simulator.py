@@ -10,8 +10,11 @@ packed at 5% loss finishes 5% later), closing the loop between packing
 decisions and trace timing.
 
 With ``track_plans=True`` every placement change additionally compiles the
-ServicePlan and accounts its data-plane consequences (bytes migrated
-across shards, padding waste) in the result.
+ServicePlan and accounts its data-plane consequences in the result: bytes
+migrated across shards (paper accounting), padding waste, and the
+delta-migration view (repro.ps.elastic.plan_transition_summary) -- bytes
+actually moved by the run-copy path and how many resident jobs each
+replan touches (stalls) vs rides past (stall-free).
 
 With ``tick_interval > 0`` the simulator also accounts service-tick
 batching (repro.ps.engine driven by a periodic tick): while J jobs run,
@@ -65,9 +68,16 @@ class SimResult:
     max_loss_seen: float = 0.0
     n_jobs_done: int = 0
     # Data-plane accounting from *compiled* ServicePlans (track_plans=True).
-    migration_bytes_total: int = 0
+    migration_bytes_total: int = 0  # cross-Aggregator bytes (paper Table 3)
     n_replans: int = 0
     padding_waste: List[float] = field(default_factory=list)
+    # Delta-migration accounting (track_plans=True): what each replan
+    # actually costs on the data plane once transitions are executed as
+    # compiled MigrationDeltas -- bytes = moved runs only, stalls = the
+    # TOUCHED jobs only (untouched co-residents tick straight through).
+    relayout_bytes_total: int = 0  # flat-space bytes the delta paths move
+    replan_stalled_jobs: int = 0  # sum over replans of touched resident jobs
+    replan_coresident_jobs: int = 0  # what a hard quiesce would have stalled
     # Service-tick engine accounting (tick_interval > 0).
     n_service_ticks: float = 0.0  # ticks elapsed while >= 1 job ran
     update_passes_sequential: float = 0.0  # one pass per push (per-job steps)
@@ -85,6 +95,15 @@ class SimResult:
         if not self.padding_waste:
             return 0.0
         return sum(self.padding_waste) / len(self.padding_waste)
+
+    @property
+    def replan_stall_free_fraction(self) -> float:
+        """Fraction of (replan, resident job) pairs that did NOT stall
+        under delta migration (1.0 = every replan was invisible to every
+        co-resident job; 0.0 = hard-quiesce behavior)."""
+        if self.replan_coresident_jobs <= 0:
+            return 1.0
+        return 1.0 - self.replan_stalled_jobs / self.replan_coresident_jobs
 
     @property
     def tick_batching_factor(self) -> float:
@@ -166,6 +185,7 @@ class ClusterSimulator:
             job arrival/exit/tick just made, from the *compiled* plan."""
             if not cfg.track_plans:
                 return
+            from repro.ps.elastic import plan_transition_summary
             from repro.ps.plan import plan_migration_bytes, plan_padding_waste
 
             plan = self.service.compile_plan()
@@ -174,6 +194,19 @@ class ClusterSimulator:
                 if moved or plan != self._last_plan:
                     res.n_replans += 1
                 res.migration_bytes_total += moved
+                if plan != self._last_plan:
+                    # Delta accounting (segment-level summary, O(segments)
+                    # -- the lane-exact delta compile would materialize
+                    # full-space index arrays at simulator scale): bytes =
+                    # moved runs only; stalls = the touched resident jobs
+                    # only (vs every resident job under a hard quiesce).
+                    moved_elems, touched_jobs = plan_transition_summary(
+                        self._last_plan, plan)
+                    res.relayout_bytes_total += moved_elems * 12
+                    touched = set(touched_jobs)
+                    res.replan_stalled_jobs += sum(
+                        1 for j in running if j in touched)
+                    res.replan_coresident_jobs += len(running)
             if plan.n_shards:
                 res.padding_waste.append(plan_padding_waste(plan))
             self._last_plan = plan

@@ -197,9 +197,11 @@ def test_future_resolves_with_job_step_count():
 
 
 # ------------------------------------------------------ replan quiescing
-def test_replan_drains_queued_pushes():
-    """add_job/remove_job quiesce the engine: every queued push applies
-    against the OLD plan before the state migrates."""
+def test_replan_quiesces_only_touched_jobs():
+    """add_job/remove_job fence only the jobs the migration delta names
+    as TOUCHED: their queued pushes apply against the OLD plan before
+    the state migrates; untouched jobs' queues ride straight through the
+    replan (re-tagged by the epoch fence) and apply at later ticks."""
     rt, eng = _runtime(TREES_EVEN,
                        engine=dict(max_staleness=2, queue_capacity=4))
     targets = _targets(TREES_EVEN)
@@ -210,12 +212,115 @@ def test_replan_drains_queued_pushes():
     nb = sum(4 * v.size for v in PROBE_EVEN.values())
     rt.add_job("probe", PROBE_EVEN, _quad_loss, lr=0.05,
                required_servers=1, agg_throughput=nb / 0.6)
-    assert eng.outstanding("a") == 0 and eng.outstanding("b") == 0
     assert rt.n_replans >= 1
+    touched = set(rt.last_replan_touched)
+    assert "probe" in touched
+    for jid in TREES_EVEN:
+        if jid in touched:
+            assert eng.outstanding(jid) == 0  # fenced: drained pre-move
+        else:
+            assert eng.outstanding(jid) == 2  # stall-free: queue survived
     rt.remove_job("probe")
-    # Counts survived the round trip: both jobs applied their 2 pushes.
+    eng.drain()
+    # Counts survived the round trips: both jobs applied their 2 pushes.
     assert int(jax.device_get(rt.state["counts"]["a"])) == 2
     assert "probe" not in rt.state["counts"]
+
+
+def test_untouched_jobs_never_stall_through_replan():
+    """Tentpole acceptance: a replan that does not move a job's layout
+    must be INVISIBLE to it -- zero forced ticks, queue and compiled
+    programs intact, and a trajectory bit-identical to a run where the
+    neighbor never arrived.  (The probe sorts after every resident job
+    and fits existing padding, so the delta touches only the probe.)"""
+    probe = _tree(jax.random.PRNGKey(7), (32,))
+
+    def drive(with_probe):
+        rt, eng = _runtime(TREES_EVEN, jit=False,
+                           engine=dict(max_staleness=2, queue_capacity=4,
+                                       jit=False))
+        targets = _targets(TREES_EVEN)
+        probe_target = jax.tree_util.tree_map(lambda p: p * 0 + 1.0, probe)
+        checks = {}
+        for i in range(4):
+            for jid in TREES_EVEN:
+                eng.step(jid, {"target": targets[jid]})
+            if i == 1 and with_probe:
+                outstanding = {j: eng.outstanding(j) for j in TREES_EVEN}
+                grad_fns = {j: eng._grad_fns.get(j) for j in TREES_EVEN}
+                forced_before = eng.stats.n_forced_replan
+                nb = sum(4 * v.size for v in probe.values())
+                rt.add_job("zz", probe, _quad_loss, lr=0.05,
+                           required_servers=1, agg_throughput=nb / 0.6)
+                checks = dict(outstanding=outstanding, grad_fns=grad_fns,
+                              forced_before=forced_before)
+            if i >= 2 and with_probe:
+                eng.step("zz", {"target": probe_target})
+        eng.drain()
+        return rt, eng, checks
+
+    rt_p, eng_p, checks = drive(with_probe=True)
+    rt_n, _, _ = drive(with_probe=False)
+
+    # The arrival fenced only itself...
+    assert rt_p.last_replan_touched == ("zz",)
+    # ...stalled nobody (no replan-forced ticks, queues rode through)...
+    assert eng_p.stats.n_forced_replan == checks["forced_before"] == 0
+    for jid in TREES_EVEN:
+        assert eng_p.outstanding(jid) == 0  # drained at the END only
+        assert checks["outstanding"][jid] > 0  # queued ACROSS the replan
+        # ...and kept every compiled program alive (no retrace stall).
+        assert eng_p._grad_fns.get(jid) is checks["grad_fns"][jid]
+    assert eng_p.stats.n_retagged >= sum(checks["outstanding"].values())
+
+    # Bit-identical trajectory for the untouched jobs, moments included.
+    from repro.ps.runtime import unflatten_tree
+    for jid, tree in TREES_EVEN.items():
+        for name in ("flat", "mu", "nu"):
+            with_p = unflatten_tree(rt_p.plan, rt_p.state[name], tree,
+                                    job_id=jid)
+            without = unflatten_tree(rt_n.plan, rt_n.state[name], tree,
+                                     job_id=jid)
+            for k in tree:
+                np.testing.assert_array_equal(np.asarray(with_p[k]),
+                                              np.asarray(without[k]))
+
+
+def test_epoch_fence_rejects_cross_layout_push():
+    """The fence: a queued push whose epoch does not match the engine's
+    can never reach the apply -- a replan that migrated a job's layout
+    without draining its queue is a protocol violation, not a silently
+    corrupted update."""
+    rt, eng = _runtime(TREES_EVEN,
+                       engine=dict(max_staleness=3, queue_capacity=4))
+    eng.step("a", {"target": _targets(TREES_EVEN)["a"]})
+    eng._epoch += 1  # simulate a replan that skipped the drain
+    with pytest.raises(RuntimeError, match="epoch fence"):
+        eng.tick()
+
+
+def test_small_k_tick_dispatches_per_job_and_stays_exact():
+    """Below min_batch_jobs a tick dispatches per-job passes (the
+    measured small-K crossover); the applied result is identical and the
+    stats record the dispatch decision."""
+    rt, eng = _runtime(TREES_EVEN,
+                       engine=dict(max_staleness=0, min_batch_jobs=3))
+    targets = _targets(TREES_EVEN)
+    for jid in TREES_EVEN:
+        eng.step(jid, {"target": targets[jid]})
+    assert eng.drain() == 2
+    assert eng.stats.n_per_job_dispatch >= 1  # 2 pending < crossover 3
+
+    rt_b, eng_b = _runtime(TREES_EVEN,
+                           engine=dict(max_staleness=0, min_batch_jobs=2))
+    for jid in TREES_EVEN:
+        eng_b.step(jid, {"target": targets[jid]})
+    assert eng_b.drain() == 2
+    assert eng_b.stats.n_per_job_dispatch == 0  # fused pass took it
+    for name in ("flat", "mu", "nu"):
+        np.testing.assert_allclose(np.asarray(rt.state[name]),
+                                   np.asarray(rt_b.state[name]),
+                                   rtol=1e-6, atol=1e-6)
 
 
 def test_engine_rejects_unknown_and_compressed_jobs():

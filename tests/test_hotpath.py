@@ -19,7 +19,11 @@ import pytest
 
 from repro.core import ParameterService
 from repro.kernels.agg_adam import ops as agg_ops, ref as agg_ref
-from repro.ps.elastic import _plan_perm, migrate_flat_state
+from repro.ps.elastic import (
+    clear_plan_cache,
+    migrate_flat_state,
+    plan_cache_stats,
+)
 from repro.ps.plan import segment_mask
 from repro.ps.runtime import (
     flatten_tree,
@@ -216,11 +220,13 @@ def test_migrate_same_plan_is_identity_and_cached():
                     agg_throughput=nbytes / 0.45)
     plan_b = rt2.plan
     assert plan_b != plan
-    _plan_perm.cache_clear()
+    clear_plan_cache()
+    before = plan_cache_stats()
     migrate_flat_state(state, plan, plan_b)
     migrate_flat_state(state, plan, plan_b)
-    info = _plan_perm.cache_info()
-    assert info.misses == 1 and info.hits >= 1
+    after = plan_cache_stats()
+    assert after["misses"] - before["misses"] == 1
+    assert after["hits"] - before["hits"] >= 1
 
 
 # ------------------------------------------------------------------ satellites

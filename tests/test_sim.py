@@ -70,3 +70,22 @@ def test_simulator_tracks_compiled_plans():
     assert res.n_replans > 0
     assert res.migration_bytes_total >= 0
     assert res.padding_waste and all(0.0 <= w < 1.0 for w in res.padding_waste)
+
+
+def test_simulator_tracks_delta_migration_and_touched_stalls():
+    """track_plans=True also accounts the delta-migration view: bytes the
+    run-copy path actually moves, and replan stalls charged to the
+    TOUCHED resident jobs only (the stall-free fraction is what the
+    hard-quiesce engine could never report: it always stalled everyone)."""
+    trace = philly_like_trace(n_jobs=40, seed=3)
+    res = ClusterSimulator(
+        SimConfig(n_clusters=2, track_plans=True)).run(trace)
+    assert res.relayout_bytes_total >= 0
+    assert 0 <= res.replan_stalled_jobs <= res.replan_coresident_jobs
+    assert res.replan_coresident_jobs > 0
+    assert 0.0 <= res.replan_stall_free_fraction <= 1.0
+    # Without plan tracking the delta accounting stays silent.
+    res_off = ClusterSimulator(SimConfig(n_clusters=2)).run(trace)
+    assert res_off.relayout_bytes_total == 0
+    assert res_off.replan_coresident_jobs == 0
+    assert res_off.replan_stall_free_fraction == 1.0
