@@ -1,0 +1,165 @@
+"""Elastic shard scaling: CPU-ticks of a load-following fleet vs a static
+peak-sized one, plus the REAL data-plane cost and correctness of shard
+split/merge transitions (paper §3.3.2, Fig. 2 / Fig. 11).
+
+Two halves:
+
+* ``trace``: the fig11-style Philly-like trace replayed through the
+  cluster simulator with service-tick accounting -- each allocated
+  Aggregator burns one shard tick per tick interval, a static fleet
+  provisioned for the peak burns ``max_aggregators`` every interval.  The
+  acceptance row asserts the elastic fleet consumes >= 2x fewer CPU-ticks
+  (the paper reports up to 75% CPU reduction).
+
+* ``dataplane``: a real :class:`ShardedServiceRuntime` +
+  :class:`ShardedTickEngine` + :class:`ElasticScaler` driven through a
+  3-phase load scenario (idle -> hot -> idle), with a FLAT eager
+  ServiceRuntime stepping the identical gradient sequence as the parity
+  oracle.  Every scaling transition's executed bytes are asserted equal
+  to ``sharded_transition_summary`` (split/merge moves ONLY the compiled
+  delta's bytes), and every job's parameters are compared bit-exactly
+  after each phase (zero parity violations across fleet resizes).
+
+Run: PYTHONPATH=src python benchmarks/run.py --only elastic_scaling \
+         --json BENCH_elastic.json
+"""
+
+import os
+
+N_JOBS_TRACE = 400
+TICK_INTERVAL = 60.0
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("HOTPATH_SMOKE"))
+
+
+def _trace_rows():
+    from repro.sim import ClusterSimulator, SimConfig, philly_like_trace
+
+    n_jobs = 80 if _smoke() else N_JOBS_TRACE
+    trace = philly_like_trace(n_jobs=n_jobs, seed=1)
+    res = ClusterSimulator(SimConfig(
+        n_clusters=4, tick_interval=TICK_INTERVAL,
+    )).run(trace)
+    red = res.cpu_tick_reduction
+    return [
+        ("elastic/cpu_ticks_static", f"{res.cpu_ticks_static:.0f}",
+         f"peak fleet ({res.max_aggregators} Aggregators) ticking for the "
+         f"whole {res.elapsed_seconds / 3600:.1f}h trace"),
+        ("elastic/cpu_ticks_autoscaled", f"{res.cpu_ticks_autoscaled:.0f}",
+         "load-following fleet: integral of fleet size / tick interval"),
+        ("elastic/cpu_tick_reduction", f"{red:.2f}",
+         "static / autoscaled (paper: up to 75% CPU reduction => 4x)"),
+        ("elastic/ticks_saving_2x", str(int(red >= 2.0)),
+         "acceptance: elastic fleet consumes >= 2x fewer CPU-ticks"),
+    ]
+
+
+def _dataplane_rows():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import ParameterService
+    from repro.ps.autoscaler import AutoscalerConfig, ElasticScaler
+    from repro.ps.elastic import sharded_transition_summary
+    from repro.ps.service_runtime import ServiceRuntime, ShardedServiceRuntime
+
+    def tree(key, sizes):
+        ks = jax.random.split(key, len(sizes))
+        return {f"t{i}": jax.random.normal(k, (n,))
+                for i, (k, n) in enumerate(zip(ks, sizes))}
+
+    def loss(params, batch):
+        return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+                   for k in params)
+
+    trees = {
+        "a": tree(jax.random.PRNGKey(0), (96, 32, 64)),
+        "b": tree(jax.random.PRNGKey(1), (64, 32)),
+        "c": tree(jax.random.PRNGKey(2), (48, 16)),
+    }
+    targets = {j: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+               for j, t in trees.items()}
+
+    def add_jobs(rt):
+        for jid, t in trees.items():
+            nb = sum(4 * v.size for v in t.values())
+            rt.add_job(jid, t, loss, lr=0.05, required_servers=1,
+                       agg_throughput=nb / 0.2)
+
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+    rt = ShardedServiceRuntime(svc, jit=False)
+    eng = rt.attach_engine(max_staleness=0, jit=False)
+    add_jobs(rt)
+    scaler = ElasticScaler(rt, AutoscalerConfig(
+        shard_capacity=12.0, max_shards=4, cooldown=1))
+
+    ref = ServiceRuntime(
+        ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16),
+        jit=False)
+    add_jobs(ref)
+
+    # Shard-count trajectory oracle: every observe() window's transition
+    # must move exactly the compiled summary's bytes, and every phase end
+    # must agree with the flat eager reference bit-for-bit.
+    phases = [(3, 1), (4, 8), (4, 1)] if _smoke() else [(4, 1), (6, 8), (6, 1)]
+    parity_violations = 0
+    bytes_mismatches = 0
+    n_grow = n_shrink = 0
+    split_bytes = merge_bytes = 0
+    max_shards_seen = 1
+    for n_windows, steps_per_window in phases:
+        for _ in range(n_windows):
+            for _ in range(steps_per_window):
+                for j in trees:
+                    eng.step(j, {"target": targets[j]})
+                    ref.step(j, {"target": targets[j]})
+            eng.drain()
+            old_plan = rt.splan
+            decision = scaler.observe()
+            if decision.action != "hold":
+                moved_elems, _ = sharded_transition_summary(
+                    old_plan, rt.splan)
+                if decision.relayout_bytes != moved_elems * 12:
+                    bytes_mismatches += 1
+                if decision.action == "grow":
+                    n_grow += 1
+                    split_bytes += decision.relayout_bytes
+                else:
+                    n_shrink += 1
+                    merge_bytes += decision.relayout_bytes
+            max_shards_seen = max(max_shards_seen, rt.n_shards)
+        for j in trees:
+            p, q = rt.params_of(j), ref.params_of(j)
+            for k in p:
+                if not np.array_equal(np.asarray(p[k]), np.asarray(q[k])):
+                    parity_violations += 1
+    return [
+        ("elastic/max_shards", str(max_shards_seen),
+         "fleet peak under the hot phase (autoscaler-driven)"),
+        ("elastic/final_shards", str(rt.n_shards),
+         "fleet after the cool-down phase (merged back)"),
+        ("elastic/scale_events", f"{n_grow}+{n_shrink}",
+         "grow+shrink actions the scaler took"),
+        ("elastic/split_moved_bytes", str(split_bytes),
+         "shard bytes split transitions shipped (delta-executed)"),
+        ("elastic/merge_moved_bytes", str(merge_bytes),
+         "shard bytes merge transitions shipped (delta-executed)"),
+        ("elastic/transition_bytes_match", str(int(bytes_mismatches == 0)),
+         "acceptance: every split/merge moved exactly "
+         "sharded_transition_summary bytes"),
+        ("elastic/parity_violations", str(parity_violations),
+         "acceptance: sharded+autoscaled trajectory vs flat eager "
+         "reference, bit-exact (must be 0)"),
+    ]
+
+
+def rows():
+    return _trace_rows() + _dataplane_rows()
+
+
+if __name__ == "__main__":
+    for name, value, derived in rows():
+        print(f'{name},{value},"{derived}"')

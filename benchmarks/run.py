@@ -1,6 +1,7 @@
 """Run benchmarks; print name,value,derived CSV (one per paper table).
 
 Options:
+  --list          print every benchmark label and exit
   --only SUBSTR   run only modules whose label contains SUBSTR (repeatable)
   --smoke         shrink sweeps for CI (sets HOTPATH_SMOKE=1)
   --json [PATH]   also write the collected rows as JSON
@@ -27,6 +28,7 @@ MODULES = [
     ("plan", "plan_scaling"),
     ("hotpath", "hotpath_step"),
     ("service_tick", "service_tick"),
+    ("elastic_scaling", "elastic_scaling"),
     ("appd", "appd_interference"),
     ("roofline", "roofline"),
 ]
@@ -34,6 +36,8 @@ MODULES = [
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="print every benchmark label and exit")
     ap.add_argument("--only", action="append", default=None,
                     help="run only modules whose label contains this")
     ap.add_argument("--smoke", action="store_true",
@@ -42,6 +46,10 @@ def main(argv=None) -> None:
                     default=None, metavar="PATH",
                     help="write rows to PATH as JSON")
     args = ap.parse_args(argv)
+    if args.list:
+        for label, mod_name in MODULES:
+            print(f"{label}\tbenchmarks/{mod_name}.py")
+        return
     if args.smoke:
         os.environ["HOTPATH_SMOKE"] = "1"
 

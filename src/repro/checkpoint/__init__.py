@@ -3,11 +3,14 @@ from .checkpoint import (
     restore_checkpoint,
     save_ps_checkpoint,
     restore_ps_checkpoint,
+    save_sharded_checkpoint,
+    restore_sharded_checkpoint,
     load_aux,
     latest_step,
     CheckpointManager,
 )
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "save_ps_checkpoint",
-           "restore_ps_checkpoint", "load_aux", "latest_step",
+           "restore_ps_checkpoint", "save_sharded_checkpoint",
+           "restore_sharded_checkpoint", "load_aux", "latest_step",
            "CheckpointManager"]

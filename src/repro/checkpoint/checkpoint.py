@@ -208,6 +208,61 @@ def restore_ps_checkpoint(directory, step: int, plan=None, verify: bool = True):
     return saved_plan, state
 
 
+def save_sharded_checkpoint(directory, step: int, splan, states, counts,
+                            keep_last: Optional[int] = None,
+                            verify: bool = True) -> Path:
+    """Save a sharded-runtime snapshot: the ShardedPlan (shard map), every
+    shard space's buffers, and the per-job global step counters, in one
+    atomic commit.  ``states`` maps ``agg_id`` -> per-shard state dict;
+    ``counts`` maps ``job_id`` -> step counter."""
+    from repro.ps.plan import sharded_plan_to_json
+
+    tree = {"shards": dict(states), "counts": dict(counts)}
+    aux = {
+        "sharded_plan": sharded_plan_to_json(splan),
+        "shard_leaves": {sid: sorted(st) for sid, st in states.items()},
+        "jobs": sorted(counts),
+    }
+    return save_checkpoint(directory, step, tree, keep_last, verify, aux=aux)
+
+
+def restore_sharded_checkpoint(directory, step: int, splan=None,
+                               verify: bool = True):
+    """Restore a sharded checkpoint; returns ``(splan, states, counts)``.
+
+    With ``splan`` given (the restoring service's compiled ShardedPlan),
+    shard states are migrated from the saved shard map onto it with the
+    O(moved-bytes) sharded delta path -- a checkpoint taken under one
+    fleet size restores under another (the elastic-restart path).  The
+    abstract restore tree is rebuilt from the saved plan itself, so
+    ``agg_id``s containing '/' round-trip exactly."""
+    from repro.ps.elastic import migrate_sharded_state
+    from repro.ps.plan import sharded_plan_from_json
+
+    aux = load_aux(directory, step)
+    if aux is None or "sharded_plan" not in aux:
+        raise IOError(f"step {step} in {directory} is not a sharded "
+                      f"PS checkpoint")
+    saved_plan = sharded_plan_from_json(aux["sharded_plan"])
+    abstract = {
+        "shards": {
+            sid: {
+                k: jax.ShapeDtypeStruct((sp.total_len,), np.float32)
+                for k in aux["shard_leaves"][sid]
+            }
+            for sid, sp in zip(saved_plan.shard_ids, saved_plan.shards)
+        },
+        "counts": {j: jax.ShapeDtypeStruct((), np.int32)
+                   for j in aux["jobs"]},
+    }
+    tree = restore_checkpoint(directory, step, abstract, verify=verify)
+    states, counts = tree["shards"], tree["counts"]
+    if splan is not None and splan != saved_plan:
+        states, _, _ = migrate_sharded_state(states, saved_plan, splan)
+        return splan, states, counts
+    return saved_plan, states, counts
+
+
 class CheckpointManager:
     """Async saves + restart bookkeeping for the train driver."""
 

@@ -140,6 +140,44 @@ def recycle_aggregators(
     return recycled
 
 
+def split_aggregator(
+    aggregators: List[Aggregator],
+    fresh: Aggregator,
+    jobs: Dict[str, JobProfile],
+    config: AssignmentConfig = AssignmentConfig(),
+) -> bool:
+    """Shard split: offload ~half the busiest Aggregator onto ``fresh``.
+
+    The load-driven half of §3.3.2's elasticity: where :func:`admit_job`
+    grows the fleet on job ARRIVAL and :func:`recycle_aggregators` shrinks
+    it on EXIT, this grows it on measured LOAD -- the autoscaler's
+    scale-out action.  Tasks move greedily (largest exec_time first) from
+    the busiest Aggregator until the fresh one carries half its busy time;
+    ``fresh`` is appended to ``aggregators`` on success.  Returns False --
+    and allocates nothing -- when no Aggregator has two tasks to split.
+    """
+    candidates = [a for a in aggregators if len(a.tasks) > 1]
+    if not candidates:
+        return False
+    victim = max(candidates, key=lambda a: a.busy_time())
+    target = victim.busy_time() / 2.0
+    # Largest-first gives the halving greedy its classic 2/3 bound; skim
+    # from a sorted snapshot so removal during iteration is safe.
+    tasks = sorted(victim.tasks.values(), key=lambda t: -t.exec_time)
+    for task in tasks:
+        if len(victim.tasks) <= 1 or fresh.busy_time() >= target:
+            break
+        job = jobs.get(task.job_id)
+        duration = (job.iteration_duration if job is not None
+                    else victim.job_durations.get(task.job_id, 1.0))
+        victim.remove_task(task.key)
+        fresh.add_task(task, duration)
+    if fresh.is_empty:
+        return False
+    aggregators.append(fresh)
+    return True
+
+
 def _refuse_allocation() -> Aggregator:
     raise _NoAllocation()
 

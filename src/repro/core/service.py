@@ -98,6 +98,78 @@ class ParameterService:
             pad_to=self.plan_pad_to if pad_to is None else pad_to,
         )
 
+    def compile_sharded_plan(self, pad_to: Optional[int] = None):
+        """Compile the live assignment into per-Aggregator shard SPACES
+        (``repro.ps.plan.ShardedPlan``): one independently sized flat
+        layout per allocated Aggregator -- the sharded data plane's view
+        of the same placement ``compile_plan`` flattens into one space."""
+        from repro.ps.plan import compile_sharded_plan
+
+        return compile_sharded_plan(
+            self.aggregators, self._specs,
+            pad_to=self.plan_pad_to if pad_to is None else pad_to,
+        )
+
+    # ------------------------------------------------------- elastic scaling
+    def scale_out(self, n: int = 1) -> int:
+        """Load-driven scale-out: split the busiest Aggregator's workload
+        onto a freshly allocated one, ``n`` times (§3.3.2's growth arm,
+        driven by the data plane's measured load instead of a job event).
+        Returns how many Aggregators were actually added; every successful
+        split triggers a replan so the data plane re-shards live."""
+        from .cluster import OverBudget
+        from .scaling import split_aggregator
+
+        added = 0
+        for _ in range(max(0, n)):
+            busiest = None
+            for ctrl in self._pmaster.clusters.values():
+                for agg in ctrl.aggregators:
+                    if len(agg.tasks) > 1 and (
+                            busiest is None
+                            or agg.busy_time() > busiest[1].busy_time()):
+                        busiest = (ctrl, agg)
+            if busiest is None:
+                break
+            ctrl = busiest[0]
+            try:
+                fresh = ctrl._allocate()
+            except OverBudget:
+                if not self._pmaster._grant_budget(ctrl):
+                    break
+                fresh = ctrl._allocate()
+            if not split_aggregator(ctrl.aggregators, fresh, ctrl.jobs,
+                                    self._config):
+                break
+            added += 1
+        if added:
+            self._replan()
+        return added
+
+    def scale_in(self, n: int = 1) -> int:
+        """Load-driven scale-in: drain the least-loaded Aggregator into
+        the rest of its cluster (no new allocations), ``n`` times --
+        exactly the paper's recycling move, here triggered by low measured
+        load.  Returns Aggregators recycled; replans on any change."""
+        from .scaling import recycle_aggregators
+
+        removed = 0
+        for _ in range(max(0, n)):
+            ctrl = max(
+                (c for c in self._pmaster.clusters.values()
+                 if c.n_aggregators > 1),
+                key=lambda c: c.n_aggregators, default=None)
+            if ctrl is None:
+                break
+            got = recycle_aggregators(ctrl.aggregators, ctrl.jobs,
+                                      self._config, max_rounds=1)
+            if not got:
+                break
+            removed += got
+        if removed:
+            self._replan()
+        return removed
+
     @property
     def current_plan(self):
         """Plan as of the last placement change (None before any job)."""

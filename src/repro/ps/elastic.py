@@ -49,7 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .plan import FlatPlan, plan_migration_bytes, segment_mask
+from .plan import FlatPlan, ShardedPlan, plan_migration_bytes, segment_mask
 
 
 class PlanPerm(NamedTuple):
@@ -467,6 +467,147 @@ def migrate_flat_state_delta(
     moved = relayout_ops.relayout(
         [state[k] for k in keys], delta, interpret=interpret)
     return dict(state, **dict(zip(keys, moved)))
+
+
+# ------------------------------------------------------- sharded transitions
+def sharded_transition_summary(old: ShardedPlan, new: ShardedPlan):
+    """Segment-level view of a SHARDED plan transition: O(segments).
+
+    Returns ``(moved_elements, touched_jobs)``.  Segment identity is the
+    job-qualified key; a segment *moved* iff its ``(shard_id, offset)``
+    home changed -- a shard joining or leaving the fleet does not "move"
+    the segments that stayed put on their own Aggregator.  ``touched_jobs``
+    diffs each job's per-shard layout fingerprint (keyed by the stable
+    ``agg_id``), exactly the jobs whose compiled programs a migration
+    invalidates; this is the oracle :func:`migrate_sharded_state`'s
+    executed byte count is asserted against.
+    """
+    key = ("ssummary", old, new)
+    cached = _PAIR_CACHE.get(key)
+    if cached is not None:
+        return cached
+    old_by = old.by_skey
+    moved = 0
+    for sid, sp in zip(new.shard_ids, new.shards):
+        for seg in sp.segments:
+            prev = old_by.get(seg.skey)
+            if prev is None:
+                continue
+            psid, pseg = prev
+            if pseg.size != seg.size:
+                raise ValueError(
+                    f"segment {seg.skey} changed size "
+                    f"{pseg.size} -> {seg.size}")
+            if psid != sid or pseg.offset != seg.offset:
+                moved += seg.size
+
+    def sigs(plan: ShardedPlan) -> Dict[str, Dict[str, Tuple]]:
+        out: Dict[str, Dict[str, Tuple]] = {}
+        for sid, sp in zip(plan.shard_ids, plan.shards):
+            for j, sig in _job_layout_sigs(sp).items():
+                out.setdefault(j, {})[sid] = sig
+        return out
+
+    old_sigs, new_sigs = sigs(old), sigs(new)
+    touched = tuple(sorted(
+        j for j in set(old_sigs) | set(new_sigs)
+        if old_sigs.get(j) != new_sigs.get(j)))
+    summary = (moved, touched)
+    _PAIR_CACHE.put(key, summary)
+    return summary
+
+
+def migrate_sharded_state(
+    states: Dict[str, Dict[str, Any]],
+    old: ShardedPlan,
+    new: ShardedPlan,
+    *,
+    needs_ef: bool = False,
+    interpret: Optional[bool] = None,
+) -> Tuple[Dict[str, Dict[str, Any]], int, Tuple[str, ...]]:
+    """Re-lay per-shard states onto a new ShardedPlan.
+
+    ``states`` maps ``agg_id`` -> per-shard state dict whose 1-D leaves
+    (flat/mu/nu[/ef]) have the shard's ``total_len``.  The transition
+    decomposes into:
+
+      * one :class:`MigrationDelta` per SURVIVING shard (same ``agg_id``
+        in both plans) -- within-shard relocations, vacated-lane zeroing,
+        and resizes execute on the ``repro.kernels.relayout`` run-copy
+        path, O(that shard's moved bytes);
+      * fresh zero spaces for shards that joined the fleet;
+      * one contiguous slice copy per segment that changed Aggregator
+        (the actual cross-shard traffic a split/merge ships).
+
+    Returns ``(new_states, moved_elements, touched_jobs)``; the element
+    count and touched set equal :func:`sharded_transition_summary`'s
+    exactly -- the property the elastic-scaling benchmark asserts.
+    """
+    moved = 0
+    touched: set = set()
+    new_states: Dict[str, Dict[str, Any]] = {}
+    old_ids = set(old.shard_ids)
+    old_by = old.by_skey
+    for sid, sp in zip(new.shard_ids, new.shards):
+        prev = states.get(sid) if sid in old_ids else None
+        if prev is not None:
+            old_sp = old.shard_of(sid)
+            delta = compile_migration_delta(old_sp, sp)
+            st = migrate_flat_state_delta(
+                prev, old_sp, sp, delta=delta, interpret=interpret)
+            if st is prev:
+                st = dict(prev)
+            moved += delta.moved_elements
+            touched.update(delta.touched_jobs)
+        else:
+            flat = jnp.zeros((sp.total_len,), jnp.float32)
+            st = {"flat": flat, "mu": jnp.zeros_like(flat),
+                  "nu": jnp.zeros_like(flat)}
+            if needs_ef or any("ef" in s for s in states.values()):
+                st["ef"] = jnp.zeros_like(flat)
+        new_states[sid] = st
+        # Cross-shard arrivals: segments whose old home was a DIFFERENT
+        # Aggregator.  Their destination lanes are zero after the
+        # within-shard pass (they are uncovered in the per-shard pair);
+        # gather all of them and finish the move with ONE scatter per
+        # leaf -- per-segment functional updates would copy the whole
+        # destination buffer once per (segment, leaf).
+        arrivals = []
+        for seg in sp.segments:
+            prev_home = old_by.get(seg.skey)
+            if prev_home is None:
+                continue  # new job's segment: stays zero until seeded
+            psid, pseg = prev_home
+            if psid == sid:
+                continue  # same Aggregator: the per-shard delta covered it
+            arrivals.append((seg, psid, pseg))
+            moved += seg.size
+            touched.add(seg.job_id)
+        if arrivals:
+            # Segments are in offset order within a shard plan, so the
+            # concatenated destination index is sorted and unique.
+            idx = jnp.asarray(np.concatenate([
+                np.arange(seg.offset, seg.offset + seg.size, dtype=np.int64)
+                for seg, _, _ in arrivals]))
+            for k, buf in st.items():
+                if getattr(buf, "ndim", 0) != 1:
+                    continue
+                pieces = [
+                    jax.lax.slice(states[psid][k], (pseg.offset,),
+                                  (pseg.offset + pseg.size,))
+                    for _, psid, pseg in arrivals
+                    if getattr(states[psid].get(k), "ndim", 0) == 1]
+                if len(pieces) != len(arrivals):
+                    continue  # leaf absent on some source shard: stay zero
+                vals = (jnp.concatenate(pieces) if len(pieces) > 1
+                        else pieces[0])
+                st[k] = buf.at[idx].set(
+                    vals, unique_indices=True, indices_are_sorted=True)
+    # Jobs that only exist on REMOVED shards (or left the fleet) are
+    # touched too: diff the per-shard fingerprints like the summary does.
+    _, sum_touched = sharded_transition_summary(old, new)
+    touched.update(sum_touched)
+    return new_states, moved, tuple(sorted(touched))
 
 
 def migration_bytes(old: FlatPlan, new: FlatPlan, bytes_per_element: int = 12) -> int:

@@ -57,6 +57,11 @@ Usage::
         # pushes apply together at the next tick (forced by staleness,
         # queue pressure, an explicit eng.tick(), or fut.result())
     eng.drain()
+
+PR 5 adds the SHARDED sibling: :class:`ShardedTickEngine` runs one
+independent tick loop per Aggregator shard space (``tick_shard``), with a
+job's push split into one piece per hosting shard -- see the class
+docstring and docs/architecture.md.
 """
 
 from __future__ import annotations
@@ -70,35 +75,66 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ps.plan import FlatPlan
-from repro.ps.runtime import _pack_slots, _unpack_slots
+from repro.ps.runtime import (
+    _gather_packed,
+    _layout_rows,
+    _pack_slots,
+    _split_pieces,
+    _unpack_slots,
+)
 
-__all__ = ["PushFuture", "ServiceTickEngine", "TickStats"]
+__all__ = ["PushFuture", "ServiceTickEngine", "ShardedTickEngine",
+           "TickStats"]
 
 
 class PushFuture:
-    """Handle for one submitted push; resolves when a tick applies it."""
+    """Handle for one submitted push; resolves when a tick applies it.
 
-    __slots__ = ("job_id", "_engine", "_done", "_step")
+    Under the sharded engine one push fans out into one PIECE per hosting
+    shard (``parts``); the future resolves when the LAST piece applies.
+    A push dropped without applying (a job removed with a queue that
+    could not drain) is CANCELLED: ``result()`` raises instead of forcing
+    ticks forever on a job the engine no longer knows.
+    """
 
-    def __init__(self, job_id: str, engine: "ServiceTickEngine"):
+    __slots__ = ("job_id", "_engine", "_done", "_step", "_remaining",
+                 "_cancelled")
+
+    def __init__(self, job_id: str, engine, parts: int = 1):
         self.job_id = job_id
         self._engine = engine
         self._done = False
         self._step = None
+        self._remaining = int(parts)
+        self._cancelled = None  # str reason once cancelled
 
     def done(self) -> bool:
         return self._done
 
+    def cancelled(self) -> bool:
+        return self._cancelled is not None
+
     def result(self) -> int:
         """Block (force service ticks) until applied; returns the job's
-        1-based step count as of this push."""
+        1-based step count as of this push.  Raises ``RuntimeError`` if
+        the push was cancelled before it could apply."""
         while not self._done:
+            if self._cancelled is not None:
+                raise RuntimeError(
+                    f"push for job {self.job_id!r} will never apply: "
+                    f"{self._cancelled}")
             self._engine.tick()
         return self._step
 
     def _resolve(self, step: int) -> None:
-        self._done = True
-        self._step = int(step)
+        self._remaining -= 1
+        if self._remaining <= 0:
+            self._done = True
+            self._step = int(step)
+
+    def _cancel(self, reason: str) -> None:
+        if not self._done:
+            self._cancelled = reason
 
 
 @dataclass
@@ -245,7 +281,14 @@ class ServiceTickEngine:
                          if not touched.intersection(k)}
 
     def _forget_job(self, job_id: str) -> None:
-        self._queues.pop(job_id, None)
+        q = self._queues.pop(job_id, None)
+        if q:
+            # remove_job quiesces first, so a surviving push means the
+            # drain was bypassed; cancel so held futures raise cleanly
+            # instead of forcing ticks forever on an unknown job.
+            for _, fut, _ in q:
+                fut._cancel("job removed from the runtime with this push "
+                            "still queued (drain was bypassed)")
         self._counts.pop(job_id, None)
         self._pull_fns.pop(job_id, None)
         self._grad_fns.pop(job_id, None)
@@ -490,3 +533,413 @@ class ServiceTickEngine:
 
         # Donate the shared state: flat/mu/nu update in place per tick.
         return jax.jit(apply, donate_argnums=(0,)) if self._jit else apply
+
+
+# --------------------------------------------------------------- sharded
+class _ShardLane:
+    """One shard space's service loop state: its own queues, compiled
+    appliers, and TickStats -- the unit of independent cadence."""
+
+    __slots__ = ("shard_id", "queues", "appliers", "stats")
+
+    def __init__(self, shard_id: str):
+        self.shard_id = shard_id
+        self.queues: Dict[str, deque] = {}  # job -> (piece, count, fut, ep)
+        self.appliers: Dict[Tuple[str, ...], Callable] = {}
+        self.stats = TickStats()
+
+
+class ShardedTickEngine:
+    """Per-shard batched executor for one :class:`ShardedServiceRuntime`.
+
+    Where :class:`ServiceTickEngine` runs ONE tick loop over one shared
+    space, this engine runs one independent loop PER SHARD SPACE
+    (``tick_shard``): a hot shard ticking fast never stalls a cold one,
+    and the autoscaler reads each lane's :class:`TickStats` as its load
+    signal.  A job's push splits into one packed PIECE per hosting shard,
+    each tagged with the job's global step count at submit time -- Adam is
+    elementwise, and each lane applies a job's pieces FIFO, so every lane
+    preserves its lanes' per-element ``(gradient, step)`` sequence and the
+    trajectory stays bit-exact with the unsharded engine no matter how
+    shard cadences interleave.  ``tick()`` runs one round over every lane
+    (the BSP convenience); staleness/capacity bounds are per job, taken
+    over its hosting lanes.
+
+    Replans reuse the flat engine's protocol: the runtime quiesces ONLY
+    the jobs the sharded transition touches, surviving pushes are
+    re-tagged across the per-push epoch fence, and lanes are keyed by the
+    stable ``agg_id`` so an untouched job's queues and compiled programs
+    ride straight through a neighboring shard's split or merge.
+    """
+
+    MAX_APPLIERS = 32  # compiled programs per lane (one per job subset)
+
+    def __init__(self, runtime, *, max_staleness: int = 1,
+                 queue_capacity: Optional[int] = None, jit: bool = True,
+                 interpret: Optional[bool] = None, min_batch_jobs: int = 3):
+        if max_staleness < 0:
+            raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
+        self.runtime = runtime
+        self.max_staleness = int(max_staleness)
+        self.queue_capacity = (self.max_staleness + 1 if queue_capacity is None
+                               else int(queue_capacity))
+        if self.queue_capacity < 1:
+            raise ValueError("queue_capacity must be >= 1")
+        self.min_batch_jobs = int(min_batch_jobs)
+        self.stats = TickStats()  # fleet-aggregate counters
+        self._poisoned = False
+        self._jit = jit
+        self._interpret = interpret
+        self._epoch = 0
+        self._lanes: Dict[str, _ShardLane] = {}
+        self._counts: Dict[str, int] = {}  # job step mirror (submit time)
+        self._pull_fns: Dict[str, Callable] = {}
+        self._grad_fns: Dict[str, Callable] = {}
+        self._pack_fns: Dict[str, Callable] = {}
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def plan(self):
+        return self.runtime.splan
+
+    def _lane(self, shard_id: str) -> _ShardLane:
+        lane = self._lanes.get(shard_id)
+        if lane is None:
+            lane = self._lanes[shard_id] = _ShardLane(shard_id)
+        return lane
+
+    def _layout(self, job_id: str):
+        info = self.runtime._jobs.get(job_id)
+        if info is None:
+            raise ValueError(f"unknown job {job_id!r}: not registered with "
+                             f"the runtime (have {sorted(self.runtime._jobs)})")
+        if job_id not in self._counts:
+            self._counts[job_id] = int(jax.device_get(
+                self.runtime.counts[job_id]))
+        return self.plan.job_layout(job_id)
+
+    def outstanding(self, job_id: str) -> int:
+        """Deepest per-shard queue of the job's not-yet-applied pieces."""
+        deepest = 0
+        for lane in self._lanes.values():
+            q = lane.queues.get(job_id)
+            if q:
+                deepest = max(deepest, len(q))
+        return deepest
+
+    def shard_stats(self) -> Dict[str, TickStats]:
+        """Per-shard TickStats (the autoscaler's load signal)."""
+        return {sid: lane.stats for sid, lane in self._lanes.items()}
+
+    # ------------------------------------------------------------ data path
+    def pull(self, job_id: str):
+        """The job's parameters gathered across its hosting shards, after
+        forcing tick rounds down to the staleness bound."""
+        layout = self._layout(job_id)
+        while self.outstanding(job_id) > self.max_staleness:
+            self.stats.n_forced_staleness += 1
+            self.tick()
+        fn = self._pull_fns.get(job_id)
+        if fn is None:
+            abstract = self.runtime._jobs[job_id]["abstract"]
+            rows = _layout_rows(layout)
+
+            def fn(flats, _layout=layout, _rows=rows, _abstract=abstract):
+                p = _gather_packed(_layout, _rows, flats)
+                return _unpack_slots(_layout, p, _abstract)
+
+            if self._jit:
+                fn = jax.jit(fn)
+            self._pull_fns[job_id] = fn
+        return fn(tuple(self.runtime.states[sid]["flat"]
+                        for sid in layout.shard_ids))
+
+    def _enqueue(self, job_id: str, layout, pieces) -> PushFuture:
+        count = self._counts[job_id] + 1
+        self._counts[job_id] = count
+        fut = PushFuture(job_id, self, parts=len(pieces))
+        for sid, piece in zip(layout.shard_ids, pieces):
+            self._lane(sid).queues.setdefault(job_id, deque()).append(
+                (piece, count, fut, self._epoch))
+        return fut
+
+    def _force_capacity(self, job_id: str, layout) -> None:
+        while True:
+            full = [sid for sid in layout.shard_ids
+                    if len(self._lane(sid).queues.get(job_id, ()))
+                    >= self.queue_capacity]
+            if not full:
+                return
+            self.stats.n_forced_capacity += 1
+            for sid in full:
+                self.tick_shard(sid)
+
+    def submit_push(self, job_id: str, grads) -> PushFuture:
+        """Queue a job's gradient pytree: one packed piece per hosting
+        shard, applied by each shard's own ticks."""
+        layout = self._layout(job_id)
+        self._force_capacity(job_id, layout)
+        fn = self._pack_fns.get(job_id)
+        if fn is None:
+            def fn(grads, _layout=layout):
+                g = _pack_slots(_layout, grads)
+                return _split_pieces(_layout, g)
+
+            if self._jit:
+                fn = jax.jit(fn)
+            self._pack_fns[job_id] = fn
+        return self._enqueue(job_id, layout, fn(grads))
+
+    def step(self, job_id: str, batch) -> Dict[str, Any]:
+        """One engine-mode iteration: staleness-bounded pull, loss/grads,
+        one queued piece per hosting shard."""
+        layout = self._layout(job_id)
+        while self.outstanding(job_id) > self.max_staleness:
+            self.stats.n_forced_staleness += 1
+            self.tick()
+        self._force_capacity(job_id, layout)
+        fn = self._grad_fns.get(job_id)
+        if fn is None:
+            info = self.runtime._jobs[job_id]
+            abstract, loss_fn = info["abstract"], info["loss_fn"]
+            rows = _layout_rows(layout)
+
+            def fn(flats, batch, _layout=layout, _rows=rows,
+                   _abstract=abstract, _loss=loss_fn):
+                params = _unpack_slots(
+                    _layout, _gather_packed(_layout, _rows, flats),
+                    _abstract)
+                loss, grads = jax.value_and_grad(_loss)(params, batch)
+                return loss, _split_pieces(_layout, _pack_slots(_layout,
+                                                                grads))
+
+            if self._jit:
+                fn = jax.jit(fn)
+            self._grad_fns[job_id] = fn
+        loss, pieces = fn(
+            tuple(self.runtime.states[sid]["flat"]
+                  for sid in layout.shard_ids), batch)
+        return {"loss": loss,
+                "future": self._enqueue(job_id, layout, pieces)}
+
+    # ----------------------------------------------------------------- tick
+    def tick_shard(self, shard_id: str, only=None) -> int:
+        """One tick of ONE shard space: pop the head piece of every
+        pending job on this lane and apply them in one per-shard pass
+        (batched at/above ``min_batch_jobs`` pending jobs).  Other shards
+        are untouched -- this is the independent cadence primitive."""
+        if self._poisoned:
+            raise RuntimeError(
+                "engine poisoned by a failed shard apply: the jitted "
+                "applier donates the shard's state buffers, so they may "
+                "have been deleted mid-tick; restore/re-seed the "
+                "runtime's state and attach a fresh engine")
+        lane = self._lanes.get(shard_id)
+        if lane is None:
+            return 0
+        pending = [j for j in self.runtime._jobs
+                   if lane.queues.get(j) and (only is None or j in only)]
+        if not pending:
+            return 0
+        for j in pending:
+            if lane.queues[j][0][3] != self._epoch:
+                raise RuntimeError(
+                    f"epoch fence: job {j!r} queued a piece on shard "
+                    f"{shard_id!r} under plan epoch {lane.queues[j][0][3]} "
+                    f"but the engine is at {self._epoch}; a replan "
+                    f"migrated this job's layout without draining it")
+        if 1 < len(pending) < self.min_batch_jobs:
+            groups = [(j,) for j in pending]
+            lane.stats.n_per_job_dispatch += 1
+        else:
+            groups = [tuple(pending)]
+        applied = 0
+        for key in groups:
+            heads = [lane.queues[j].popleft() for j in key]
+            try:
+                applier = lane.appliers.get(key)
+                if applier is None:
+                    applier = self._build_applier(shard_id, key)
+                    if len(lane.appliers) >= self.MAX_APPLIERS:
+                        lane.appliers.pop(next(iter(lane.appliers)))
+                    lane.appliers[key] = applier
+                gs = tuple(piece for piece, _, _, _ in heads)
+                counts = tuple(count for _, count, _, _ in heads)
+            except BaseException:
+                # Build-time failure: no device op ran; re-queue and let a
+                # later tick retry.
+                for j, head in zip(key, heads):
+                    lane.queues[j].appendleft(head)
+                raise
+            try:
+                self.runtime.states[shard_id] = applier(
+                    self.runtime.states[shard_id], gs, counts)
+            except BaseException:
+                # Execution failure: the jitted applier DONATED this
+                # shard's buffers -- poison so later ticks fail fast.
+                for j, head in zip(key, heads):
+                    lane.queues[j].appendleft(head)
+                if self._jit:
+                    self._poisoned = True
+                raise
+            for _, count, fut, _ in heads:
+                fut._resolve(count)
+                if fut.done():
+                    # The push applied on its LAST hosting shard: commit
+                    # the job's global step counter (per-shard states
+                    # carry no counts -- the runtime owns them, and a
+                    # checkpoint must see every applied push).
+                    self.runtime.counts[fut.job_id] = jnp.asarray(
+                        count, jnp.int32)
+            applied += len(key)
+        lane.stats.n_ticks += 1
+        lane.stats.n_applied += applied
+        self.stats.n_ticks += 1
+        self.stats.n_applied += applied
+        return applied
+
+    def tick(self, only=None) -> int:
+        """One ROUND: tick every live shard once.  Returns pieces applied
+        across the fleet (0 = nothing pending anywhere)."""
+        plan = self.plan
+        if plan is None:
+            return 0
+        return sum(self.tick_shard(sid, only=only)
+                   for sid in plan.shard_ids)
+
+    def drain(self, only=None) -> int:
+        """Tick rounds until every (selected) queue on every lane is
+        empty.  Returns pieces applied."""
+        applied = 0
+        while True:
+            n = self.tick(only=only)
+            if n == 0:
+                return applied
+            applied += n
+
+    def quiesce_for_replan(self, touched) -> int:
+        """Drain ONLY the touched jobs' pieces (on every lane) ahead of a
+        sharded migration; untouched lanes and jobs keep their cadence."""
+        applied = 0
+        while True:
+            pending = [j for j in touched
+                       if any(lane.queues.get(j)
+                              for lane in self._lanes.values())]
+            if not pending:
+                return applied
+            self.stats.n_forced_replan += 1
+            applied += self.tick(only=pending)
+
+    # --------------------------------------------------------------- replan
+    def _on_plan_change(self, touched=None) -> None:
+        """Sharded replan landed: invalidate what the new plan breaks.
+
+        Same fence protocol as the flat engine, per lane: ``touched=None``
+        requires every queue empty and drops everything; with a touched
+        set, only touched jobs' programs die, lanes whose Aggregator left
+        the fleet are dropped (their jobs are touched by construction, so
+        their queues are already drained), and untouched jobs' surviving
+        pieces are re-tagged to the new epoch."""
+        self._epoch += 1
+        self.stats.n_replans += 1
+        if touched is None:
+            assert not any(q for lane in self._lanes.values()
+                           for q in lane.queues.values()), (
+                "replan with queued pieces: runtime must drain the "
+                "engine first")
+            self._lanes.clear()
+            self._pull_fns.clear()
+            self._grad_fns.clear()
+            self._pack_fns.clear()
+            return
+        touched = set(touched)
+        live = set(self.plan.shard_ids) if self.plan is not None else set()
+        for sid in list(self._lanes):
+            lane = self._lanes[sid]
+            for j in touched:
+                assert not lane.queues.get(j), (
+                    f"replan with queued pieces for TOUCHED job {j!r} on "
+                    f"shard {sid!r}: quiesce_for_replan must drain it")
+            if sid not in live:
+                assert not any(lane.queues.values()), (
+                    f"shard {sid!r} left the fleet with queued pieces")
+                del self._lanes[sid]
+                continue
+            for j, q in lane.queues.items():
+                if q:  # untouched by construction: carry across the fence
+                    self.stats.n_retagged += len(q)
+                    lane.queues[j] = deque(
+                        (piece, count, fut, self._epoch)
+                        for piece, count, fut, _ in q)
+            for j in touched:
+                lane.queues.pop(j, None)
+            lane.appliers = {k: v for k, v in lane.appliers.items()
+                             if not touched.intersection(k)}
+        for j in touched:
+            self._pull_fns.pop(j, None)
+            self._grad_fns.pop(j, None)
+            self._pack_fns.pop(j, None)
+
+    def _forget_job(self, job_id: str) -> None:
+        for lane in self._lanes.values():
+            q = lane.queues.pop(job_id, None)
+            if q:
+                for _, _, fut, _ in q:
+                    fut._cancel(
+                        "job removed from the runtime with this piece "
+                        "still queued (drain was bypassed)")
+            lane.appliers = {k: v for k, v in lane.appliers.items()
+                             if job_id not in k}
+        self._counts.pop(job_id, None)
+        self._pull_fns.pop(job_id, None)
+        self._grad_fns.pop(job_id, None)
+        self._pack_fns.pop(job_id, None)
+
+    # -------------------------------------------------------------- applier
+    def _build_applier(self, shard_id: str, job_ids: Tuple[str, ...]):
+        """Compile the batched apply for one shard space and one pending
+        job combination.  Identical math to the flat engine's applier --
+        one multi-job update pass over THIS shard's buffers -- except the
+        per-job step counts arrive with the queued pieces (assigned at
+        submit time), so inter-shard apply order cannot skew bias
+        correction."""
+        from repro.kernels.agg_adam import ops as agg_ops
+
+        plan = self.plan
+        shard_plan = plan.shard_of(shard_id)
+        block = shard_plan.block_align
+        layouts = [shard_plan.job_layout(j) for j in job_ids]
+        block_idx = np.concatenate([l.blocks for l in layouts])
+        job_sizes = tuple(int(l.blocks.size) for l in layouts)
+        rows = jnp.asarray(block_idx)
+        infos = [self.runtime._jobs[j] for j in job_ids]
+        lr = tuple(float(i["lr"]) for i in infos)
+        b1 = tuple(float(i["b1"]) for i in infos)
+        b2 = tuple(float(i["b2"]) for i in infos)
+        eps = tuple(float(i["eps"]) for i in infos)
+
+        def scatter(buf, packed):
+            return buf.reshape(-1, block).at[rows].set(
+                packed.reshape(-1, block), unique_indices=True
+            ).reshape(buf.shape)
+
+        def apply(state, gs, counts):
+            g_cat = jnp.concatenate(gs) if len(gs) > 1 else gs[0]
+            # Counts arrive as the pieces' submit-time step numbers; lift
+            # to arrays so eager mode matches the traced path exactly.
+            counts = [jnp.asarray(c, jnp.int32) for c in counts]
+            new_p, new_mu, new_nu = agg_ops.multi_job_adam_update(
+                state["flat"], g_cat, state["mu"], state["nu"],
+                counts,
+                block_idx=block_idx, job_sizes=job_sizes, block=block,
+                lr=lr, b1=b1, b2=b2, eps=eps, wd=0.0,
+                interpret=self._interpret)
+            new_state = dict(state)
+            new_state["flat"] = scatter(state["flat"], new_p)
+            new_state["mu"] = scatter(state["mu"], new_mu)
+            new_state["nu"] = scatter(state["nu"], new_nu)
+            return new_state
+
+        return jax.jit(apply, donate_argnums=(0,)) if self._jit else apply
+
+

@@ -237,6 +237,179 @@ class FlatPlan:
         return layout
 
 
+@dataclass(frozen=True)
+class ShardedJobLayout:
+    """One job's access structure across ALL the shard spaces hosting it.
+
+    ``layouts[i]`` is the per-shard :class:`JobLayout` inside shard space
+    ``shard_ids[i]``; ``slots`` is the job's packed slot table over the
+    CONCATENATION of those per-shard packed vectors (in ``shard_ids``
+    order), so ``_pack_slots`` / ``_unpack_slots`` work on the combined
+    vector unchanged.  ``piece_offsets[i] : piece_offsets[i] + piece
+    length`` slices shard ``i``'s packed piece out of the combined vector.
+    """
+
+    job_id: str
+    shard_ids: Tuple[str, ...]  # hosting Aggregators, in shard order
+    shard_indices: Tuple[int, ...]  # indices into ShardedPlan.shards
+    layouts: Tuple[JobLayout, ...]
+    slots: Tuple[Tuple[str, int, int, Tuple[int, ...], Any], ...]
+    piece_offsets: Tuple[int, ...]  # combined-vector start of each piece
+
+    @property
+    def packed_len(self) -> int:
+        return sum(l.packed_len for l in self.layouts)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.layouts)
+
+
+@dataclass(frozen=True)
+class ShardedPlan:
+    """N per-Aggregator shard spaces (the sharded data plane's layout).
+
+    Where :class:`FlatPlan` flattens every job into ONE shared space with a
+    uniform ``shard_len`` (padding every Aggregator to the largest), a
+    ShardedPlan gives each live Aggregator its OWN flat space -- a
+    single-shard FlatPlan sized to that Aggregator's content -- so shard
+    count changes what actually executes: each shard space ticks, migrates,
+    and checkpoints independently, keyed by its stable ``agg_id``.
+    """
+
+    shards: Tuple[FlatPlan, ...]  # each n_shards=1, shard_ids=(agg_id,)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @cached_property
+    def shard_ids(self) -> Tuple[str, ...]:
+        return tuple(sp.shard_ids[0] for sp in self.shards)
+
+    @property
+    def total_len(self) -> int:
+        return sum(sp.total_len for sp in self.shards)
+
+    @property
+    def payload_elements(self) -> int:
+        return sum(sp.payload_elements for sp in self.shards)
+
+    @cached_property
+    def job_ids(self) -> Tuple[str, ...]:
+        seen: Dict[str, None] = {}
+        for sp in self.shards:
+            for j in sp.job_ids:
+                seen.setdefault(j, None)
+        return tuple(seen)
+
+    @cached_property
+    def _index_of(self) -> Dict[str, int]:
+        return {sid: i for i, sid in enumerate(self.shard_ids)}
+
+    def index_of(self, shard_id: str) -> Optional[int]:
+        """Shard index backing ``shard_id`` (None if not in this plan)."""
+        return self._index_of.get(shard_id)
+
+    def shard_of(self, shard_id: str) -> FlatPlan:
+        return self.shards[self._index_of[shard_id]]
+
+    @cached_property
+    def by_skey(self) -> Dict[Tuple[str, str], Tuple[str, Segment]]:
+        """(job_id, key) -> (shard_id, segment): cross-shard identity map."""
+        out: Dict[Tuple[str, str], Tuple[str, Segment]] = {}
+        for sid, sp in zip(self.shard_ids, self.shards):
+            for seg in sp.segments:
+                out[seg.skey] = (sid, seg)
+        return out
+
+    def job_shards(self, job_id: str) -> Tuple[int, ...]:
+        """Indices of the shards hosting any of the job's segments."""
+        return tuple(i for i, sp in enumerate(self.shards)
+                     if job_id in sp.job_ids)
+
+    @cached_property
+    def _layout_cache(self) -> Dict[str, ShardedJobLayout]:
+        return {}
+
+    def job_layout(self, job_id: str) -> ShardedJobLayout:
+        """Compile (and cache) the job's cross-shard access structure."""
+        cached = self._layout_cache.get(job_id)
+        if cached is not None:
+            return cached
+        hosting = self.job_shards(job_id)
+        if not hosting:
+            raise ValueError(f"job {job_id!r} has no segments in this plan")
+        layouts = tuple(self.shards[i].job_layout(job_id) for i in hosting)
+        slots: List[Tuple[str, int, int, Tuple[int, ...], Any]] = []
+        offsets: List[int] = []
+        off = 0
+        for l in layouts:
+            offsets.append(off)
+            for key, pstart, size, shape, dtype in l.slots:
+                slots.append((key, off + pstart, size, shape, dtype))
+            off += l.packed_len
+        layout = ShardedJobLayout(
+            job_id=job_id,
+            shard_ids=tuple(self.shard_ids[i] for i in hosting),
+            shard_indices=hosting, layouts=layouts, slots=tuple(slots),
+            piece_offsets=tuple(offsets),
+        )
+        self._layout_cache[job_id] = layout
+        return layout
+
+
+def compile_sharded_plan(
+    aggregators: Sequence[Any],
+    specs: Optional[Mapping[str, Mapping[int, TensorSpec]]] = None,
+    pad_to: int = 128,
+) -> ShardedPlan:
+    """Compile the live assignment into per-Aggregator shard spaces.
+
+    Each Aggregator becomes ONE single-shard FlatPlan laid out exactly as
+    :func:`compile_service_plan` lays that Aggregator out (same job-run
+    alignment, same segment order), but with ``shard_len`` padded to the
+    shard's OWN content instead of the fleet-wide maximum -- so with one
+    Aggregator the shard space is bit-identical to the flat plan's, and
+    with many there is no cross-shard padding coupling at all.
+    """
+    specs = specs or {}
+    shards: List[FlatPlan] = []
+    for agg in aggregators:
+        segments: List[Segment] = []
+        off = 0
+        prev_job: Optional[str] = None
+        for (job_id, tensor_id), task in sorted(agg.tasks.items()):
+            if prev_job is not None and job_id != prev_job:
+                off = -(-off // pad_to) * pad_to  # align the job-run start
+            prev_job = job_id
+            spec = specs.get(job_id, {}).get(tensor_id)
+            if spec is None:
+                n = max(1, task.nbytes // 4)
+                spec = TensorSpec(task.name, (n,), np.float32)
+            segments.append(
+                Segment(spec.key, 0, off, spec.size, tuple(spec.shape),
+                        spec.dtype, job_id=job_id, tensor_id=tensor_id)
+            )
+            off += spec.size
+        shard_len = max(1, -(-max(1, off) // pad_to) * pad_to)
+        shards.append(FlatPlan(
+            n_shards=1, shard_len=shard_len, segments=tuple(segments),
+            shard_ids=(getattr(agg, "agg_id", f"shard{len(shards)}"),),
+            block_align=pad_to,
+        ))
+    return ShardedPlan(shards=tuple(shards))
+
+
+def sharded_plan_to_json(plan: ShardedPlan) -> Dict[str, Any]:
+    return {"shards": [plan_to_json(sp) for sp in plan.shards]}
+
+
+def sharded_plan_from_json(obj: Mapping[str, Any]) -> ShardedPlan:
+    return ShardedPlan(
+        shards=tuple(plan_from_json(sp) for sp in obj["shards"]))
+
+
 def plan_padding_waste(plan: FlatPlan) -> float:
     """Fraction of the flat space that is padding (imbalance cost)."""
     if plan.total_len <= 0:

@@ -210,6 +210,38 @@ def _gather_owned(layout, vec: jnp.ndarray) -> jnp.ndarray:
     return rows.reshape(-1)
 
 
+def _layout_rows(layout):
+    """Per-hosting-shard owned-block row indices of a ShardedJobLayout,
+    hoisted to device ONCE at closure-build time (None where the shard
+    gather is the identity)."""
+    return tuple(None if l.covers_all else jnp.asarray(l.blocks)
+                 for l in layout.layouts)
+
+
+def _gather_pieces(layout, rows, flats):
+    """One block-row gather per hosting shard of a ShardedJobLayout
+    (``rows`` from :func:`_layout_rows`): the job's per-shard packed
+    pieces, in shard order."""
+    return [flat if r is None else
+            flat.reshape(-1, l.block)[r].reshape(-1)
+            for l, r, flat in zip(layout.layouts, rows, flats)]
+
+
+def _gather_packed(layout, rows, flats):
+    """The job's COMBINED packed vector across its hosting shards."""
+    pieces = _gather_pieces(layout, rows, flats)
+    return jnp.concatenate(pieces) if len(pieces) > 1 else pieces[0]
+
+
+def _split_pieces(layout, g):
+    """Slice a combined packed vector into per-hosting-shard pieces."""
+    if layout.n_shards == 1:
+        return (g,)
+    return tuple(
+        jax.lax.slice(g, (off,), (off + l.packed_len,))
+        for l, off in zip(layout.layouts, layout.piece_offsets))
+
+
 def _scatter_owned(layout, vec: jnp.ndarray, packed) -> jnp.ndarray:
     """Write a packed job-local vector back onto the owned lanes of a full
     flat buffer -- ONE block-structured row scatter (in place under

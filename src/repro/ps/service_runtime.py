@@ -38,6 +38,11 @@ the old plan before the state migrates), everyone else keeps queues,
 compiled programs, and tick cadence straight through the transition --
 and training stays bit-exact with the per-job step path across
 migrations (the engine's per-push epoch fence enforces it).
+
+:class:`ShardedServiceRuntime` is the PR-5 sibling: instead of one flat
+space it gives every live Aggregator its OWN shard space, so the fleet
+size set by the control plane (and by the load-driven
+``repro.ps.autoscaler.ElasticScaler``) changes what actually executes.
 """
 
 from __future__ import annotations
@@ -51,10 +56,22 @@ from repro.ps.elastic import (
     compile_migration_delta,
     migrate_flat_state,
     migrate_flat_state_delta,
+    migrate_sharded_state,
     migration_bytes,
+    plan_cache_stats,
+    sharded_transition_summary,
 )
-from repro.ps.plan import FlatPlan
+from repro.ps.plan import FlatPlan, ShardedPlan
 from repro.ps.runtime import (
+    _adam_math,
+    _gather_owned,
+    _gather_packed,
+    _gather_pieces,
+    _layout_rows,
+    _pack_slots,
+    _scatter_owned,
+    _split_pieces,
+    _unpack_slots,
     init_shared_state,
     job_profile_from_tree,
     make_ps_train_step,
@@ -101,6 +118,11 @@ class ServiceRuntime:
     @property
     def engine(self):
         return self._engine
+
+    def debug_stats(self) -> Dict[str, Any]:
+        """One dict unifying the plan-pair cache, this runtime's migration
+        counters, and the attached engine's TickStats (None detached)."""
+        return _debug_stats(self, {"migration": self.migration})
 
     # ----------------------------------------------------------------- jobs
     def add_job(
@@ -260,4 +282,349 @@ class ServiceRuntime:
             steps[job_id] = (
                 jax.jit(step, donate_argnums=(0,)) if self._jit else step
             )
+        self._steps = steps
+
+
+# --------------------------------------------------------------------------
+def _debug_stats(rt, extra_runtime: Dict[str, Any],
+                 shards: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Shared debug_stats assembly for both runtimes: plan-pair cache +
+    migration counters + the attached engine's TickStats; the sharded
+    runtime adds its per-shard section via ``shards``."""
+    import dataclasses
+
+    out = {
+        "plan_cache": plan_cache_stats(),
+        "runtime": {
+            "n_jobs": len(rt._jobs),
+            "n_replans": rt.n_replans,
+            "migration_bytes_total": rt.total_migration_bytes,
+            "relayout_bytes_total": rt.total_relayout_bytes,
+            "last_replan_touched": list(rt.last_replan_touched),
+            **extra_runtime,
+        },
+        "engine": (dataclasses.asdict(rt._engine.stats)
+                   if rt._engine is not None else None),
+    }
+    if shards is not None:
+        out["shards"] = shards
+    return out
+
+
+def _init_shard_state(shard_plan: FlatPlan, needs_ef: bool = False):
+    """Empty state for ONE shard space (no per-job counters: those are
+    global to a job and live on the sharded runtime, not in any shard)."""
+    flat = jnp.zeros((shard_plan.total_len,), jnp.float32)
+    state = {"flat": flat, "mu": jnp.zeros_like(flat),
+             "nu": jnp.zeros_like(flat)}
+    if needs_ef:
+        state["ef"] = jnp.zeros_like(flat)
+    return state
+
+
+def _make_sharded_step(model_loss, layout, abstract_params, *,
+                       lr, b1, b2, eps):
+    """O(job-bytes) train step spanning ONLY the shards hosting the job.
+
+    ``layout`` is the plan's :class:`repro.ps.plan.ShardedJobLayout`: the
+    pull gathers each hosting shard's owned blocks and concatenates them
+    (in shard order) into the job's packed domain; the Adam update runs
+    per shard on that shard's piece with the job's GLOBAL step count --
+    elementwise math, so splitting by shard is a pure layout change and
+    the trajectory is bit-exact with the single-space block step.
+    """
+
+    rows = _layout_rows(layout)
+
+    def step(shard_states, count, batch):
+        packed = _gather_pieces(layout, rows,
+                                [st["flat"] for st in shard_states])
+        p = jnp.concatenate(packed) if len(packed) > 1 else packed[0]
+        params = _unpack_slots(layout, p, abstract_params)
+        loss, grads = jax.value_and_grad(model_loss)(params, batch)
+        g = _pack_slots(layout, grads)
+        new_count = count + 1
+        new_states = []
+        for l, st, pp, gj in zip(layout.layouts, shard_states, packed,
+                                 _split_pieces(layout, g)):
+            new_p, mu, nu = _adam_math(
+                pp, gj, _gather_owned(l, st["mu"]),
+                _gather_owned(l, st["nu"]), new_count,
+                lr=lr, b1=b1, b2=b2, eps=eps)
+            new_states.append(dict(
+                st,
+                flat=_scatter_owned(l, st["flat"], new_p),
+                mu=_scatter_owned(l, st["mu"], mu),
+                nu=_scatter_owned(l, st["nu"], nu),
+            ))
+        return tuple(new_states), new_count, {"loss": loss}
+
+    return step
+
+
+class ShardedServiceRuntime:
+    """Per-Aggregator shard spaces executor bound to one ParameterService.
+
+    The sharded sibling of :class:`ServiceRuntime`: instead of ONE flat
+    space sized by the fleet-wide maximum, every live Aggregator owns an
+    independent shard space (``states[agg_id]``), so Aggregator count
+    changes what actually executes -- a job's step touches only the shards
+    hosting its blocks, shard spaces tick on independent cadences under
+    the :class:`repro.ps.engine.ShardedTickEngine`, and the fleet can grow
+    and shrink with measured load (``repro.ps.autoscaler.ElasticScaler``
+    closing the loop through ``service.scale_out`` / ``scale_in``).
+
+    Replans -- including load-driven shard splits and merges -- migrate
+    per-shard states with :func:`repro.ps.elastic.migrate_sharded_state`:
+    surviving shards execute an O(moved-bytes) MigrationDelta on the
+    relayout run-copy path and only the segments that changed Aggregator
+    ship across shard spaces.  With ONE Aggregator the shard space is
+    bit-identical to the flat runtime's, and the trajectory reproduces it
+    bit-exactly (eager; jitted runs see the documented ~1-ulp XLA:CPU
+    cross-program rounding).
+    """
+
+    def __init__(self, service, jit: bool = True):
+        self.service = service
+        self.splan: Optional[ShardedPlan] = None
+        self.states: Dict[str, Dict[str, Any]] = {}
+        self.counts: Dict[str, Any] = {}  # job -> global step counter
+        self.last_migration_bytes = 0  # cross-Aggregator (paper accounting)
+        self.total_migration_bytes = 0
+        self.last_relayout_bytes = 0  # bytes the sharded delta path moved
+        self.total_relayout_bytes = 0
+        self.last_replan_touched: tuple = ()
+        self.n_replans = 0
+        self._jit = jit
+        self._jobs: Dict[str, Dict[str, Any]] = {}
+        self._steps: Dict[str, Any] = {}  # job -> (hosting shard_ids, fn)
+        self._engine = None
+        service.on_replan(self._on_replan)
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def n_shards(self) -> int:
+        return self.splan.n_shards if self.splan is not None else 0
+
+    @property
+    def shard_ids(self):
+        return self.splan.shard_ids if self.splan is not None else ()
+
+    @property
+    def job_ids(self):
+        return tuple(self._jobs)
+
+    @property
+    def engine(self):
+        return self._engine
+
+    def attach_engine(self, **engine_opts):
+        """Create (once) and return the per-shard tick engine
+        (:class:`repro.ps.engine.ShardedTickEngine`)."""
+        from repro.ps.engine import ShardedTickEngine
+
+        if self._engine is None:
+            self._engine = ShardedTickEngine(self, **engine_opts)
+        elif engine_opts:
+            raise ValueError("engine already attached; cannot re-configure")
+        return self._engine
+
+    def debug_stats(self) -> Dict[str, Any]:
+        """Plan-pair cache + migration counters + per-shard TickStats."""
+        import dataclasses
+
+        eng = self._engine
+        return _debug_stats(
+            self, {"n_shards": self.n_shards},
+            shards=({sid: dataclasses.asdict(lane.stats)
+                     for sid, lane in eng._lanes.items()}
+                    if eng is not None else {}))
+
+    # ----------------------------------------------------------------- jobs
+    def add_job(
+        self,
+        job_id: str,
+        params,
+        loss_fn: Callable[[Any, Any], Any],
+        *,
+        iteration_duration: float = 1.0,
+        n_workers: int = 2,
+        required_servers: int = 1,
+        agg_throughput: float = 7e9,
+        lr: float = 3e-4,
+        b1: float = 0.9,
+        b2: float = 0.999,
+        eps: float = 1e-8,
+    ) -> None:
+        """Register a job and seed its parameters into the shards that the
+        control plane assigned its tensors to."""
+        if job_id in self._jobs:
+            raise ValueError(f"job {job_id} already in the runtime")
+        abstract = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+        )
+        profile, specs = job_profile_from_tree(
+            job_id, params,
+            iteration_duration=iteration_duration,
+            n_workers=n_workers,
+            required_servers=required_servers,
+            agg_throughput=agg_throughput,
+        )
+        self._jobs[job_id] = dict(
+            loss_fn=loss_fn, abstract=abstract,
+            lr=lr, b1=b1, b2=b2, eps=eps,
+        )
+        try:
+            self.service.register_job(profile, specs=specs)
+        except Exception:
+            self._jobs.pop(job_id, None)
+            raise
+        self._seed_job(job_id, params)
+
+    def remove_job(self, job_id: str) -> None:
+        """Job exit: drop its segments from every hosting shard.  With an
+        engine attached, the job's queued pushes are drained against the
+        old layout first; any push that somehow survives is CANCELLED so a
+        held future raises instead of spinning forever."""
+        if job_id not in self._jobs:
+            raise ValueError(
+                f"unknown job {job_id!r}: not registered with this runtime "
+                f"(have {sorted(self._jobs)})")
+        if self._engine is not None:
+            self._engine.quiesce_for_replan([job_id])
+            self._engine._forget_job(job_id)
+        self._jobs.pop(job_id)
+        self._steps.pop(job_id, None)
+        self.counts.pop(job_id, None)
+        self.service.job_exit(job_id)
+
+    def _seed_job(self, job_id: str, params) -> None:
+        layout = self.splan.job_layout(job_id)
+        packed = _pack_slots(layout, params)
+        for sid, l, piece in zip(layout.shard_ids, layout.layouts,
+                                 _split_pieces(layout, packed)):
+            st = self.states[sid]
+            new_st = dict(
+                st,
+                flat=_scatter_owned(l, st["flat"], piece),
+                # Fresh zeros per buffer: with covers_all layouts the
+                # scatter returns its packed argument, and one shared
+                # zeros array would alias mu and nu.
+                mu=_scatter_owned(
+                    l, st["mu"], jnp.zeros((l.packed_len,), jnp.float32)),
+                nu=_scatter_owned(
+                    l, st["nu"], jnp.zeros((l.packed_len,), jnp.float32)),
+            )
+            if "ef" in st:
+                new_st["ef"] = _scatter_owned(
+                    l, st["ef"], jnp.zeros((l.packed_len,), jnp.float32))
+            self.states[sid] = new_st
+        self.counts[job_id] = jnp.zeros((), jnp.int32)
+
+    # ------------------------------------------------------------- training
+    def step(self, job_id: str, batch):
+        """One pull->compute->push->update iteration for one job, touching
+        only the shards that host its blocks."""
+        hosting, fn = self._steps[job_id]
+        states_in = tuple(self.states[sid] for sid in hosting)
+        new_states, new_count, metrics = fn(
+            states_in, self.counts[job_id], batch)
+        for sid, st in zip(hosting, new_states):
+            self.states[sid] = st
+        self.counts[job_id] = new_count
+        return metrics
+
+    def params_of(self, job_id: str):
+        """Current parameters of one job, pulled across its shards."""
+        layout = self.splan.job_layout(job_id)
+        packed = _gather_packed(
+            layout, _layout_rows(layout),
+            [self.states[sid]["flat"] for sid in layout.shard_ids])
+        return _unpack_slots(layout, packed,
+                             self._jobs[job_id]["abstract"])
+
+    # ----------------------------------------------------------- checkpoint
+    def save_checkpoint(self, directory, step: int, **kw):
+        """Commit (shard map, every shard space, per-job step counters)
+        atomically.  Drains the engine first: a queued push references
+        the pre-tick state and would be lost by a restore."""
+        from repro.checkpoint import save_sharded_checkpoint
+
+        if self._engine is not None:
+            self._engine.drain()
+        return save_sharded_checkpoint(
+            directory, step, self.splan, self.states, self.counts, **kw)
+
+    def restore_checkpoint(self, directory, step: int, **kw) -> None:
+        """Restore shard states + counters from a sharded checkpoint,
+        migrating them onto THIS runtime's current shard map if the saved
+        fleet differed (the elastic-restart path).  Jobs must already be
+        registered (the plan's layouts come from the live service)."""
+        from repro.checkpoint import restore_sharded_checkpoint
+
+        if self._engine is not None:
+            self._engine.drain()
+        _, states, counts = restore_sharded_checkpoint(
+            directory, step, splan=self.splan, **kw)
+        self.states = {sid: dict(st) for sid, st in states.items()}
+        self.counts = dict(counts)
+        if self._engine is not None:
+            # The engine's submit-time step mirrors are stale; re-sync at
+            # next contact.
+            self._engine._counts.clear()
+
+    # --------------------------------------------------------------- replan
+    def _on_replan(self, old_flat, new_flat):
+        engine = self._engine
+        if new_flat is None:  # last job exited
+            if engine is not None and self.states:
+                engine.drain()
+            self.splan, self.states, self._steps = None, {}, {}
+            self.counts = {}
+            if engine is not None:
+                engine._on_plan_change(None)
+            return
+        new = self.service.compile_sharded_plan()
+        old = self.splan
+        touched = None  # None = every job's layout may have changed
+        if old is not None and self.states:
+            _, touched_pre = sharded_transition_summary(old, new)
+            if engine is not None:
+                engine.quiesce_for_replan(
+                    [j for j in touched_pre if j in self._jobs])
+            self.states, moved_elems, touched_exec = migrate_sharded_state(
+                self.states, old, new)
+            self.last_relayout_bytes = moved_elems * 12
+            self.total_relayout_bytes += self.last_relayout_bytes
+            touched = set(touched_exec)
+            self.last_replan_touched = tuple(sorted(touched))
+            self.n_replans += 1
+            if old_flat is not None:
+                moved = migration_bytes(old_flat, new_flat)
+                self.last_migration_bytes = moved
+                self.total_migration_bytes += moved
+        else:
+            if engine is not None and self.states:
+                engine.drain()
+            self.states = {sid: _init_shard_state(sp)
+                           for sid, sp in zip(new.shard_ids, new.shards)}
+        self.splan = new
+        if engine is not None:
+            engine._on_plan_change(touched)
+        steps: Dict[str, Any] = {}
+        for job_id, info in self._jobs.items():
+            # An untouched job's layout is bit-identical on every hosting
+            # shard: keep its compiled step (no retrace, no stall).
+            if (touched is not None and job_id not in touched
+                    and job_id in self._steps):
+                steps[job_id] = self._steps[job_id]
+                continue
+            layout = new.job_layout(job_id)
+            fn = _make_sharded_step(
+                info["loss_fn"], layout, info["abstract"],
+                lr=info["lr"], b1=info["b1"], b2=info["b2"],
+                eps=info["eps"])
+            if self._jit:
+                fn = jax.jit(fn, donate_argnums=(0,))
+            steps[job_id] = (layout.shard_ids, fn)
         self._steps = steps

@@ -83,6 +83,35 @@ class SimResult:
     update_passes_sequential: float = 0.0  # one pass per push (per-job steps)
     update_passes_batched: float = 0.0  # one pass per tick round (engine)
     tick_limited_job_seconds: float = 0.0  # job-time spent at the staleness cap
+    # Elastic-fleet CPU-tick accounting: each ALLOCATED Aggregator burns
+    # one shard tick per tick_interval (its shard space wakes, drains,
+    # applies) whether hot or cold -- so the integral of fleet size over
+    # time, divided by the tick interval, is the CPU-ticks the elastic
+    # (load-following) fleet consumed; a STATIC fleet provisioned for the
+    # peak burns max_aggregators ticks every interval of the whole run.
+    shard_tick_seconds: float = 0.0  # integral of allocated fleet size
+    max_aggregators: int = 0  # peak fleet (the static fleet's size)
+    elapsed_seconds: float = 0.0  # trace wall-clock covered
+
+    @property
+    def cpu_ticks_autoscaled(self) -> float:
+        """Shard ticks the elastic fleet executed (tick_interval > 0)."""
+        return self.shard_tick_seconds / self._tick  # set by the simulator
+
+    @property
+    def cpu_ticks_static(self) -> float:
+        """Shard ticks a peak-sized always-on fleet would execute."""
+        return self.max_aggregators * self.elapsed_seconds / self._tick
+
+    @property
+    def cpu_tick_reduction(self) -> float:
+        """static / autoscaled CPU-ticks (>= 1: the Fig. 2/11 claim)."""
+        if self.shard_tick_seconds <= 0:
+            return 1.0
+        return (self.max_aggregators * self.elapsed_seconds
+                / self.shard_tick_seconds)
+
+    _tick: float = 1.0  # tick_interval used (for the tick properties)
 
     @property
     def cpu_time_saving(self) -> float:
@@ -134,6 +163,7 @@ class ClusterSimulator:
     def run(self, trace: List[TraceJob]) -> SimResult:
         cfg = self.cfg
         res = SimResult()
+        res._tick = cfg.tick_interval if cfg.tick_interval > 0 else 1.0
         self._last_plan = None  # plan accounting must not leak across runs
         events: List[Tuple[float, int, str, Optional[TraceJob]]] = []
         for tj in trace:
@@ -158,6 +188,10 @@ class ClusterSimulator:
                 req = sum(j.profile.required_servers for j in running.values())
                 res.allocated_cpu_seconds += alloc * dt
                 res.required_cpu_seconds += req * dt
+                res.shard_tick_seconds += self.service.n_aggregators * dt
+                res.max_aggregators = max(res.max_aggregators,
+                                          self.service.n_aggregators)
+                res.elapsed_seconds += dt
                 if cfg.tick_interval > 0 and running:
                     # Service-tick batching: each job pushes 1/d_eff
                     # updates per second; per-job steps would execute one

@@ -426,3 +426,39 @@ def test_multijob_p_packed_disambiguation():
     for a, b in zip(out, ref):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-6, atol=1e-7)
+
+
+# ------------------------------------------------- remove_job regression
+def test_remove_job_drains_queued_pushes_before_replan():
+    """Regression: removing a job while the engine holds its queued
+    pushes must drain (apply) them against the old layout BEFORE the
+    replan -- every held future resolves, nothing is silently dropped,
+    and co-resident jobs keep training."""
+    rt, eng = _runtime(TREES_EVEN, jit=False,
+                       engine=dict(max_staleness=2, jit=False))
+    targets = _targets(TREES_EVEN)
+    futs = [eng.step("b", {"target": targets["b"]})["future"]
+            for _ in range(2)]
+    assert eng.outstanding("b") == 2
+    rt.remove_job("b")
+    assert all(f.done() for f in futs)
+    assert [f.result() for f in futs] == [1, 2]
+    assert "b" not in rt.job_ids
+    assert eng.outstanding("b") == 0
+    # The survivor still trains through the post-exit plan.
+    eng.step("a", {"target": targets["a"]})["future"].result()
+
+
+def test_dropped_push_future_raises_cleanly():
+    """Regression: a push dropped WITHOUT applying (drain bypassed) must
+    cancel its future -- result() raises instead of forcing ticks
+    forever on a job the engine no longer knows."""
+    rt, eng = _runtime(TREES_EVEN, jit=False,
+                       engine=dict(max_staleness=2, jit=False))
+    targets = _targets(TREES_EVEN)
+    fut = eng.step("b", {"target": targets["b"]})["future"]
+    eng._forget_job("b")  # simulate a drop that bypassed the drain
+    assert not fut.done()
+    assert fut.cancelled()
+    with pytest.raises(RuntimeError, match="never apply"):
+        fut.result()

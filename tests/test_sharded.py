@@ -1,0 +1,426 @@
+"""Sharded aggregation spaces: per-Aggregator shard plans, the sharded
+runtime/engine, load-driven elastic scaling, and sharded checkpoints.
+
+Parity notes.  All cross-LAYOUT comparisons (sharded vs flat runtime,
+autoscaled vs static) run EAGER on both sides: per-element Adam math is
+identical across layouts, so trajectories must agree bit-for-bit; jitted
+runs add XLA:CPU's documented ~1-ulp cross-program fusion rounding and
+are only compared against themselves.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParameterService
+from repro.ps.autoscaler import AutoscalerConfig, ElasticScaler
+from repro.ps.elastic import migrate_sharded_state, sharded_transition_summary
+from repro.ps.plan import (
+    compile_sharded_plan,
+    sharded_plan_from_json,
+    sharded_plan_to_json,
+)
+from repro.ps.service_runtime import ServiceRuntime, ShardedServiceRuntime
+
+
+def _tree(key, sizes):
+    ks = jax.random.split(key, len(sizes))
+    return {f"t{i}": jax.random.normal(k, (n,))
+            for i, (k, n) in enumerate(zip(ks, sizes))}
+
+
+def _loss(params, batch):
+    return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+               for k in params)
+
+
+TREES = {
+    "a": _tree(jax.random.PRNGKey(0), (48, 16, 32)),
+    "b": _tree(jax.random.PRNGKey(1), (32, 16)),
+}
+TARGETS = {j: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+           for j, t in TREES.items()}
+PROBE = _tree(jax.random.PRNGKey(7), (24,))
+PROBE_TARGET = jax.tree_util.tree_map(lambda p: p * 0 + 1.0, PROBE)
+
+
+def _service():
+    return ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+
+
+def _add_jobs(rt, trees=TREES, slack=0.2):
+    for jid, t in trees.items():
+        nbytes = sum(4 * v.size for v in t.values())
+        rt.add_job(jid, t, _loss, lr=0.05, required_servers=1,
+                   agg_throughput=nbytes / slack)
+
+
+def _runtime(engine=None, jit=False):
+    rt = ShardedServiceRuntime(_service(), jit=jit)
+    eng = rt.attach_engine(**engine) if engine is not None else None
+    _add_jobs(rt)
+    return rt, eng
+
+
+def _assert_params_equal(rt_a, rt_b, jobs=TREES):
+    for j in jobs:
+        pa, pb = rt_a.params_of(j), rt_b.params_of(j)
+        for k in pa:
+            np.testing.assert_array_equal(np.asarray(pa[k]),
+                                          np.asarray(pb[k]))
+
+
+# ------------------------------------------------------------------- plan
+def test_compile_sharded_plan_structure():
+    svc = _service()
+    rt = ShardedServiceRuntime(svc)
+    _add_jobs(rt)
+    splan = rt.splan
+    assert splan.n_shards == svc.n_aggregators
+    assert splan.shard_ids == tuple(a.agg_id for a in svc.aggregators)
+    # Each shard space is its own single-shard FlatPlan, individually
+    # padded, with block exclusivity inside.
+    for sp in splan.shards:
+        assert sp.n_shards == 1
+        assert sp.shard_len % sp.block_align == 0
+        for j in sp.job_ids:
+            sp.job_layout(j)  # raises if not block-exclusive
+    # Combined job layout covers every leaf exactly once, shard by shard.
+    for jid, t in TREES.items():
+        layout = splan.job_layout(jid)
+        assert set(k for k, *_ in layout.slots) == set(t)
+        assert layout.packed_len == sum(
+            l.packed_len for l in layout.layouts)
+        assert len(layout.shard_ids) == len(set(layout.shard_ids))
+
+
+def test_sharded_plan_json_roundtrip():
+    rt, _ = _runtime()
+    splan = rt.splan
+    again = sharded_plan_from_json(sharded_plan_to_json(splan))
+    assert again == splan
+
+
+def test_single_aggregator_shard_plan_matches_flat_plan():
+    """With ONE Aggregator the shard space is bit-identical to the flat
+    plan's single shard: same segments, same shard_len, same alignment."""
+    svc = _service()
+    rt = ShardedServiceRuntime(svc)
+    _add_jobs(rt)
+    if svc.n_aggregators != 1:
+        pytest.skip("packing spread jobs; single-shard identity untestable")
+    flat = svc.compile_plan()
+    shard = rt.splan.shards[0]
+    assert shard == flat
+
+
+# ------------------------------------------------- trajectory bit-parity
+def _drive(rt, n_steps=12, probe_at=(4, 9), stepper=None):
+    """Step all jobs n times; a probe job arrives and exits, forcing two
+    replan migrations mid-trajectory."""
+    step = stepper or rt.step
+    arrive, leave = probe_at
+    for i in range(n_steps):
+        if i == arrive:
+            nb = sum(4 * v.size for v in PROBE.values())
+            rt.add_job("probe", PROBE, _loss, lr=0.05, required_servers=1,
+                       agg_throughput=nb / 0.3)
+        if i == leave:
+            rt.remove_job("probe")
+        for jid in TREES:
+            step(jid, {"target": TARGETS[jid]})
+        if arrive <= i < leave:
+            step("probe", {"target": PROBE_TARGET})
+    return rt
+
+
+def test_sharded_runtime_bit_exact_vs_flat_through_replans():
+    """Tentpole acceptance: the sharded runtime reproduces the flat
+    single-space trajectory bit-exactly (eager), including through a
+    probe job's arrival/exit replans."""
+    rt_flat = _drive(
+        (lambda rt: (_add_jobs(rt), rt)[1])(ServiceRuntime(_service(),
+                                                           jit=False)))
+    rt_sh, _ = _runtime()
+    _drive(rt_sh)
+    assert rt_sh.n_replans >= 2
+    _assert_params_equal(rt_flat, rt_sh)
+    # Counts advanced identically.
+    for j in TREES:
+        assert int(rt_sh.counts[j]) == int(
+            jax.device_get(rt_flat.state["counts"][j]))
+
+
+def test_scale_out_in_bit_exact_and_moves_only_delta_bytes():
+    """Tentpole acceptance: a load-driven shard split (and the merge
+    back) moves exactly the compiled transition summary's bytes, and the
+    trajectory across both transitions stays bit-exact with the flat
+    reference."""
+    rt_flat = ServiceRuntime(_service(), jit=False)
+    _add_jobs(rt_flat)
+    rt_sh, _ = _runtime()
+
+    def both(n):
+        for _ in range(n):
+            for j in TREES:
+                rt_flat.step(j, {"target": TARGETS[j]})
+                rt_sh.step(j, {"target": TARGETS[j]})
+
+    both(4)
+    old = rt_sh.splan
+    params_before = {j: rt_sh.params_of(j) for j in TREES}
+    assert rt_sh.service.scale_out(1) == 1
+    assert rt_sh.n_shards == old.n_shards + 1
+    moved_elems, touched = sharded_transition_summary(old, rt_sh.splan)
+    assert rt_sh.last_relayout_bytes == moved_elems * 12
+    assert rt_sh.last_replan_touched == touched
+    assert moved_elems > 0  # a split really ships bytes across shards
+    # The migration itself must not perturb any job's parameters.
+    for j in TREES:
+        after = rt_sh.params_of(j)
+        for k in after:
+            np.testing.assert_array_equal(
+                np.asarray(params_before[j][k]), np.asarray(after[k]))
+    both(4)
+    _assert_params_equal(rt_flat, rt_sh)
+
+    old = rt_sh.splan
+    assert rt_sh.service.scale_in(1) == 1
+    moved_elems, touched = sharded_transition_summary(old, rt_sh.splan)
+    assert rt_sh.last_relayout_bytes == moved_elems * 12
+    assert rt_sh.last_replan_touched == touched
+    both(3)
+    _assert_params_equal(rt_flat, rt_sh)
+
+
+def test_migrate_sharded_state_matches_summary_accounting():
+    """Property: the executed sharded migration's element count and
+    touched set equal the O(segments) summary's, on a real split."""
+    rt, _ = _runtime()
+    for _ in range(3):
+        for j in TREES:
+            rt.step(j, {"target": TARGETS[j]})
+    old = rt.splan
+    states_before = {sid: dict(st) for sid, st in rt.states.items()}
+    rt.service.scale_out(1)
+    new = rt.splan
+    # Re-execute the migration from the snapshot and compare accounting.
+    _, moved, touched = migrate_sharded_state(states_before, old, new)
+    sum_moved, sum_touched = sharded_transition_summary(old, new)
+    assert moved == sum_moved
+    assert touched == sum_touched
+
+
+# --------------------------------------------------------- sharded engine
+def test_sharded_engine_bsp_bit_exact_through_scaling():
+    """Engine-driven (BSP) sharded training == per-job sharded steps ==
+    flat runtime, bit-exact, straight through a split."""
+    rt_ref, _ = _runtime()
+    rt_eng, eng = _runtime(engine=dict(max_staleness=0, jit=False))
+
+    def both(n):
+        for _ in range(n):
+            for j in TREES:
+                rt_ref.step(j, {"target": TARGETS[j]})
+                eng.step(j, {"target": TARGETS[j]})
+        eng.drain()
+
+    both(4)
+    rt_ref.service.scale_out(1)
+    rt_eng.service.scale_out(1)
+    both(4)
+    _assert_params_equal(rt_ref, rt_eng)
+    assert eng.stats.n_applied > 0
+    # Per-shard lanes really ran independently sized tick loops.
+    per_shard = eng.shard_stats()
+    assert len(per_shard) == rt_eng.n_shards
+    assert all(s.n_applied > 0 for s in per_shard.values())
+
+
+def test_sharded_engine_independent_cadence_and_multipart_futures():
+    """A hot shard ticking never stalls a cold one: ticking ONE hosting
+    shard applies only that shard's piece; the future resolves only when
+    every hosting shard applied its piece."""
+    rt, eng = _runtime(engine=dict(max_staleness=2, jit=False))
+    rt.service.scale_out(1)
+    layout = rt.splan.job_layout("a")
+    if len(layout.shard_ids) < 2:
+        pytest.skip("split left job 'a' on one shard")
+    fut = eng.step("a", {"target": TARGETS["a"]})["future"]
+    first, rest = layout.shard_ids[0], layout.shard_ids[1:]
+    assert eng.tick_shard(first) == 1
+    assert not fut.done()  # other shards' pieces still queued
+    assert eng.outstanding("a") == 1
+    for sid in rest:
+        eng.tick_shard(sid)
+    assert fut.done()
+    assert fut.result() == 1
+    # The cold lane was never ticked beyond its pending work.
+    stats = eng.shard_stats()
+    assert stats[first].n_ticks == 1
+
+
+def test_sharded_engine_staleness_bound_forces_rounds():
+    rt, eng = _runtime(engine=dict(max_staleness=1, jit=False))
+    eng.step("a", {"target": TARGETS["a"]})
+    eng.step("a", {"target": TARGETS["a"]})
+    assert eng.outstanding("a") <= 2
+    before = eng.stats.n_forced_staleness
+    eng.step("a", {"target": TARGETS["a"]})  # must force a tick round
+    assert eng.stats.n_forced_staleness > before
+    assert eng.outstanding("a") <= 2
+    eng.drain()
+    assert eng.outstanding("a") == 0
+
+
+def test_sharded_engine_epoch_fence_raises_on_stale_piece():
+    rt, eng = _runtime(engine=dict(max_staleness=1, jit=False))
+    eng.step("a", {"target": TARGETS["a"]})
+    # Corrupt the fence: pretend a replan bumped the epoch without
+    # draining (protocol violation).
+    eng._epoch += 1
+    with pytest.raises(RuntimeError, match="epoch fence"):
+        eng.drain()
+
+
+# ------------------------------------------------------------- autoscaler
+def test_autoscaler_follows_load_and_merges_back():
+    rt, eng = _runtime(engine=dict(max_staleness=0, jit=False))
+    scaler = ElasticScaler(rt, AutoscalerConfig(
+        shard_capacity=8.0, max_shards=4, cooldown=1))
+
+    def window(steps):
+        for _ in range(steps):
+            for j in TREES:
+                eng.step(j, {"target": TARGETS[j]})
+        eng.drain()
+        return scaler.observe()
+
+    for _ in range(2):
+        d = window(1)
+        assert d.action == "hold" and rt.n_shards == 1
+    grew = False
+    for _ in range(4):
+        d = window(8)
+        grew = grew or d.action == "grow"
+    assert grew and rt.n_shards > 1
+    peak = rt.n_shards
+    for _ in range(5):
+        d = window(1)
+    assert rt.n_shards < peak
+    assert rt.n_shards == 1
+    # Decision log carries the per-shard loads and migration bytes.
+    assert scaler.n_actions >= 2
+    assert any(dec.relayout_bytes > 0 for dec in scaler.decisions)
+    assert scaler.shard_timeline()[-1] == 1
+
+
+def test_autoscaler_requires_engine():
+    rt = ShardedServiceRuntime(_service())
+    _add_jobs(rt)
+    scaler = ElasticScaler(rt)
+    with pytest.raises(RuntimeError, match="ShardedTickEngine"):
+        scaler.observe()
+
+
+# ------------------------------------------------------------ debug stats
+def test_debug_stats_unifies_cache_and_per_shard_ticks():
+    """Satellite: debug_stats() = plan-pair cache + runtime counters +
+    per-shard TickStats, for both runtimes."""
+    rt_flat = ServiceRuntime(_service(), jit=False)
+    flat_eng = rt_flat.attach_engine(max_staleness=0, jit=False)
+    _add_jobs(rt_flat)
+    flat_eng.step("a", {"target": TARGETS["a"]})
+    flat_eng.drain()
+    stats = rt_flat.debug_stats()
+    assert {"plan_cache", "runtime", "engine"} <= set(stats)
+    assert {"hits", "misses", "entries"} <= set(stats["plan_cache"])
+    assert stats["engine"]["n_applied"] >= 1
+    assert stats["runtime"]["n_jobs"] == 2
+
+    rt, eng = _runtime(engine=dict(max_staleness=0, jit=False))
+    for _ in range(2):
+        for j in TREES:
+            eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+    stats = rt.debug_stats()
+    assert {"plan_cache", "runtime", "engine", "shards"} <= set(stats)
+    assert stats["runtime"]["n_shards"] == rt.n_shards
+    assert set(stats["shards"]) <= set(rt.shard_ids)
+    assert sum(s["n_applied"] for s in stats["shards"].values()) \
+        == stats["engine"]["n_applied"] > 0
+
+
+# ------------------------------------------------------------- checkpoint
+def test_sharded_checkpoint_roundtrip_across_replan(tmp_path):
+    """Satellite: an engine-attached sharded runtime checkpoints and
+    restores bit-exactly -- plan, every shard space, and step counters --
+    and the restored runtime replays a replan-crossing continuation to
+    the identical trajectory."""
+    def build():
+        rt = ShardedServiceRuntime(_service(), jit=False)
+        eng = rt.attach_engine(max_staleness=1, jit=False)
+        _add_jobs(rt)
+        return rt, eng
+
+    def continuation(rt, eng):
+        nb = sum(4 * v.size for v in PROBE.values())
+        rt.add_job("probe", PROBE, _loss, lr=0.05, required_servers=1,
+                   agg_throughput=nb / 0.3)  # REPLAN after the restore point
+        for _ in range(3):
+            for j in TREES:
+                eng.step(j, {"target": TARGETS[j]})
+            eng.step("probe", {"target": PROBE_TARGET})
+        eng.drain()
+
+    rt1, eng1 = build()
+    for _ in range(5):
+        for j in TREES:
+            eng1.step(j, {"target": TARGETS[j]})
+    eng1.drain()
+    rt1.save_checkpoint(tmp_path, 5)
+    continuation(rt1, eng1)
+
+    rt2, eng2 = build()
+    for _ in range(2):  # diverge before restoring
+        for j in TREES:
+            eng2.step(j, {"target": TARGETS[j]})
+    eng2.drain()
+    rt2.restore_checkpoint(tmp_path, 5)
+    for j in TREES:  # counters restored exactly
+        assert int(jax.device_get(rt2.counts[j])) == 5
+    continuation(rt2, eng2)
+    _assert_params_equal(rt1, rt2, jobs=list(TREES) + ["probe"])
+    for j in TREES:
+        assert int(jax.device_get(rt1.counts[j])) == int(
+            jax.device_get(rt2.counts[j]))
+
+
+def test_sharded_checkpoint_restores_across_fleet_resize(tmp_path):
+    """A checkpoint taken under one fleet size restores under another:
+    the saved shard map migrates onto the live plan."""
+    rt1, _ = _runtime()
+    for _ in range(4):
+        for j in TREES:
+            rt1.step(j, {"target": TARGETS[j]})
+    rt1.save_checkpoint(tmp_path, 4)
+    ref = {j: rt1.params_of(j) for j in TREES}
+
+    rt2, _ = _runtime()
+    rt2.service.scale_out(1)  # restoring fleet is BIGGER than the saver's
+    assert rt2.n_shards > rt1.n_shards
+    rt2.restore_checkpoint(tmp_path, 4)
+    for j in TREES:
+        q = rt2.params_of(j)
+        for k in ref[j]:
+            np.testing.assert_array_equal(np.asarray(ref[j][k]),
+                                          np.asarray(q[k]))
+
+
+# ------------------------------------------------------------ remove_job
+def test_remove_job_unknown_leaves_sharded_runtime_untouched():
+    rt, _ = _runtime()
+    with pytest.raises(ValueError, match="unknown job"):
+        rt.remove_job("nope")
+    assert set(rt.job_ids) == set(TREES)
