@@ -153,6 +153,15 @@ def _dataplane_rows():
         ("elastic/parity_violations", str(parity_violations),
          "acceptance: sharded+autoscaled trajectory vs flat eager "
          "reference, bit-exact (must be 0)"),
+        ("elastic/launches_per_tick",
+         f"{eng.stats.n_launches / max(eng.stats.n_ticks, 1):.2f}",
+         f"fused fleet ticks: {eng.stats.n_launches} launches over "
+         f"{eng.stats.n_ticks} ticks across every fleet size the scaler "
+         f"visited"),
+        ("elastic/single_launch_ticks",
+         str(int(eng.stats.n_launches == eng.stats.n_ticks)),
+         "acceptance: every fleet tick was exactly ONE fused launch, "
+         "no matter how many shards were live"),
     ]
 
 

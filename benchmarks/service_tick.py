@@ -22,6 +22,14 @@ pass above it, so the tick must never lose to K per-job passes at ANY
 K and must win outright at max co-residency -- that is the acceptance
 row ``service_tick/tick_never_loses``.
 
+PR 6 adds the FLEET sweep: the same K jobs sharded over S Aggregator
+spaces, timing one all-pending round of the sharded engine both ways --
+``fleet_tick="fused"`` (ONE launch over the lanes' concatenated states)
+vs ``"per_shard"`` (one launch group per lane).  The acceptance row
+``service_tick/fleet_tick_flat_scaling`` asserts the fused per-tick wall
+time stays ~flat (<= 1.3x) as the fleet grows 1 -> 4 shards, where the
+per-shard loop pays one dispatch per lane.
+
 Smoke mode (``SERVICE_TICK_SMOKE=1``/``HOTPATH_SMOKE=1`` or ``--smoke``)
 shrinks the sweep for CI.  ``run.py --only service_tick --json
 BENCH_service_tick.json`` seeds the perf-trajectory file.
@@ -38,9 +46,10 @@ import numpy as np
 
 from repro.core import ParameterService
 from repro.ps.runtime import _pack_slots
-from repro.ps.service_runtime import ServiceRuntime
+from repro.ps.service_runtime import ServiceRuntime, ShardedServiceRuntime
 
 JOB_COUNTS = (2, 4, 8)
+FLEET_SIZES = (1, 2, 4)
 
 
 def _smoke() -> bool:
@@ -111,6 +120,108 @@ def _time_ticks(rt, grads, batched: bool, repeats: int) -> float:
     return best * 1e3
 
 
+def _build_fleet(n_shards: int, n_jobs: int, leaf: int):
+    """K single-tensor jobs on a SHARDED runtime scaled to n_shards.
+
+    SINGLE-tensor jobs on purpose: a segment lives wholly in one shard,
+    so a job never fragments as the fleet splits -- the fused fleet
+    launch runs the SAME per-entry table at every S and the sweep
+    isolates dispatch cost (one launch vs one per lane), not placement
+    fragmentation.  Per-job load is sized so the base placement packs
+    everything onto ONE Aggregator (the sweep then really measures
+    1 -> S scaling).
+    """
+    svc = ParameterService(total_budget=64, n_clusters=1, plan_pad_to=128)
+    rt = ShardedServiceRuntime(svc)
+    trees = {f"j{i}": _job_tree(i, 1, leaf) for i in range(n_jobs)}
+    for jid, tree in sorted(trees.items()):
+        nbytes = sum(4 * v.size for v in tree.values())
+        rt.add_job(jid, tree, _loss, lr=0.05, required_servers=1,
+                   agg_throughput=nbytes / (0.8 / n_jobs))
+    if n_shards > 1:
+        rt.service.scale_out(n_shards - 1)
+    grads = {jid: jax.tree_util.tree_map(
+        lambda x: jnp.ones_like(x) * 0.01, tree)
+        for jid, tree in trees.items()}
+    return rt, grads
+
+
+def _time_fleet_ticks(rt, eng, grads, mode: str, repeats: int) -> float:
+    """Wall time of ONE all-pending round of the sharded engine in the
+    given fleet_tick mode, best of repeats.  Pushes are enqueued OUTSIDE
+    the timed region (identically for both modes), so the timer sees only
+    the tick/apply path -- the dispatch shape under test."""
+    eng.fleet_tick = mode
+    jobs = sorted(grads)
+
+    def enqueue():
+        for jid in jobs:
+            eng.submit_push(jid, grads[jid])
+        for st in rt.states.values():
+            jax.block_until_ready(st["flat"])
+
+    enqueue()
+    eng.tick()  # warmup: compiles this mode's appliers
+    best = float("inf")
+    for _ in range(repeats):
+        enqueue()
+        t0 = time.perf_counter()
+        eng.tick()
+        for st in rt.states.values():
+            jax.block_until_ready(st["flat"])
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def _fleet_rows(smoke: bool):
+    n_jobs = 4 if smoke else 8
+    leaf = 256 if smoke else 1024
+    repeats = 3 if smoke else 25
+    sizes = FLEET_SIZES[:-1] if smoke else FLEET_SIZES
+    out = []
+    fused_ms, per_shard_ms = {}, {}
+    for want in sizes:
+        rt, grads = _build_fleet(want, n_jobs, leaf)
+        eng = rt.attach_engine(max_staleness=0, queue_capacity=1)
+        s = rt.n_shards  # the packing may refuse a requested split
+        if s in fused_ms:
+            continue
+        # Launch accounting sanity: one fused round = ONE launch, one
+        # per-shard round = one launch group per pending lane.
+        eng.fleet_tick = "fused"
+        for jid in sorted(grads):
+            eng.submit_push(jid, grads[jid])
+        before = eng.stats.n_launches
+        eng.tick()
+        assert eng.stats.n_launches == before + 1, "fleet tick must be 1 launch"
+        fused_ms[s] = _time_fleet_ticks(rt, eng, grads, "fused", repeats)
+        per_shard_ms[s] = _time_fleet_ticks(rt, eng, grads, "per_shard",
+                                            repeats)
+        ctx = (f"{n_jobs} single-tensor jobs ({leaf} lanes each) over "
+               f"{s} shard spaces")
+        out.append((f"service_tick/fleet_fused_ms/shards{s}",
+                    f"{fused_ms[s]:.3f}",
+                    f"ONE fused launch per round; {ctx}"))
+        out.append((f"service_tick/fleet_per_shard_ms/shards{s}",
+                    f"{per_shard_ms[s]:.3f}",
+                    f"one launch group per lane per round; {ctx}"))
+        out.append((f"service_tick/fleet_speedup/shards{s}",
+                    f"{per_shard_ms[s] / fused_ms[s]:.2f}",
+                    f"per-shard round / fused round at {s} shards"))
+    lo, hi = min(fused_ms), max(fused_ms)
+    flat_ok = hi > lo and fused_ms[hi] <= 1.3 * fused_ms[lo]
+    out.append((
+        "service_tick/fleet_tick_flat_scaling",
+        int(flat_ok),
+        f"acceptance: fused per-tick wall time ~flat as the fleet grows "
+        f"{lo} -> {hi} shards "
+        f"({fused_ms[lo]:.3f} -> {fused_ms[hi]:.3f} ms, <= 1.3x) while "
+        f"per_shard pays per-lane dispatch "
+        f"({per_shard_ms[lo]:.3f} -> {per_shard_ms[hi]:.3f} ms)",
+    ))
+    return out
+
+
 def rows():
     smoke = _smoke()
     n_leaves = 8 if smoke else 16
@@ -173,6 +284,7 @@ def rows():
         f"batched {[round(bat_ms[k], 3) for k in JOB_COUNTS]} vs sequential "
         f"{[round(seq_ms[k], 3) for k in JOB_COUNTS]} across {JOB_COUNTS} jobs",
     ))
+    out.extend(_fleet_rows(smoke))
     return out
 
 

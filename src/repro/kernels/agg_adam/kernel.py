@@ -26,6 +26,12 @@ Block exclusivity (every block belongs to at
 most one job) is what makes the batched pass semantically identical to K
 sequential per-job updates.
 
+``aggregate_adam_multijob_fused`` is the SINGLE-LAUNCH form: same grid,
+but the outputs are the full shared buffers -- out-specs index by the
+prefetched block table and ``input_output_aliases`` pins each buffer in
+place (the kernels/relayout pattern), so the three post-apply row
+scatters disappear and a whole service tick is ONE kernel launch.
+
 VMEM budget at BLOCK=16384 fp32: (W + 5) x 64 KiB tiles -- e.g. W=8 -> 832
 KiB, comfortably inside the ~16 MiB v5e VMEM with double buffering.
 """
@@ -202,6 +208,67 @@ def _multijob_kernel(bidx_ref, jslot_ref, p_ref, g_ref, mu_ref, nu_ref,
     out_p[...] = (p32 - upd).astype(out_p.dtype)
     out_mu[...] = mu
     out_nu[...] = nu
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def aggregate_adam_multijob_fused(p, grads, mu, nu, hp, block_idx, job_slot,
+                                  *, block=BLOCK, interpret=False):
+    """Multi-job Adam with the row scatters FUSED into the launch.
+
+    Same grid and tile math as :func:`aggregate_adam_multijob`, but the
+    outputs are the FULL shared buffers instead of packed vectors: the
+    out-specs index by the scalar-prefetched block table (grid step i
+    writes tile ``block_idx[i]``), and ``input_output_aliases`` pins each
+    full input buffer to its output -- the kernels/relayout pattern -- so
+    stationary blocks are never read, copied, or written and the caller
+    needs NO post-apply scatter pass.  The in-place write is hazard-free:
+    step i reads and writes the SAME block (exclusive by construction),
+    and distinct grid steps touch distinct blocks.
+
+    p, mu, nu: (N,) FULL shared buffers (p cannot arrive packed here: its
+    untouched lanes must ride through the launch).  Returns the updated
+    full (new_p, new_mu, new_nu), each (N,).
+    """
+    n = mu.shape[-1]
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    n_own = block_idx.shape[0]
+    assert job_slot.shape == (n_own,), (job_slot.shape, n_own)
+    m = grads.shape[-1]
+    assert m == n_own * block, (
+        f"packed gradient length {m} != n_own*block = {n_own}*{block}")
+    assert p.shape[-1] == n, (
+        f"p length {p.shape[-1]} != full length {n} (the fused-scatter "
+        f"form writes into the full buffers; pass the packed p to "
+        f"aggregate_adam_multijob instead)")
+    assert hp.ndim == 2 and hp.shape[1] == HP_COLS, hp.shape
+
+    owned = pl.BlockSpec((block,), lambda i, bidx, jslot: (bidx[i],))
+    if grads.ndim == 2:
+        g_spec = pl.BlockSpec((grads.shape[0], block),
+                              lambda i, bidx, jslot: (0, i))
+    else:
+        g_spec = pl.BlockSpec((block,), lambda i, bidx, jslot: (i,))
+    hp_spec = pl.BlockSpec((1, HP_COLS), lambda i, bidx, jslot: (jslot[i], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_own,),
+        in_specs=[owned, g_spec, owned, owned, hp_spec],
+        out_specs=[owned, owned, owned],
+    )
+    # Inputs 2/4/5 are p/mu/nu (0 and 1 are the prefetched tables); alias
+    # them onto outputs 0/1/2 so untouched blocks stay in place.
+    return pl.pallas_call(
+        _multijob_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(mu.shape, jnp.float32),
+            jax.ShapeDtypeStruct(nu.shape, jnp.float32),
+        ],
+        input_output_aliases={2: 0, 4: 1, 5: 2},
+        interpret=interpret,
+    )(block_idx.astype(jnp.int32), job_slot.astype(jnp.int32),
+      p, grads, mu, nu, hp.astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("block", "p_packed",

@@ -214,6 +214,57 @@ def multi_job_adam_update(p, gs, mu, nu, counts, *, block_idx, job_sizes,
         block=int(block), p_packed=bool(p_packed), interpret=False)
 
 
+def scatter_rows(buf, packed, block_idx, block):
+    """Write packed block tiles back onto their owned rows of a full
+    buffer: the post-apply scatter the fused launch makes redundant (kept
+    as the jnp half of the fallback and for the per-shard oracle path)."""
+    rows = jnp.asarray(block_idx, jnp.int32)
+    return buf.reshape(-1, block).at[rows].set(
+        packed.reshape(-1, block), unique_indices=True
+    ).reshape(buf.shape)
+
+
+def multi_job_adam_update_fused(p, gs, mu, nu, counts, *, block_idx,
+                                job_sizes, block, lr, b1=0.9, b2=0.999,
+                                eps=1e-8, wd=0.0, interpret=None):
+    """One service tick with the row scatters fused into the launch.
+
+    Same contract as :func:`multi_job_adam_update` except p/mu/nu must be
+    the FULL shared (N,) buffers and the returned (new_p, new_mu, new_nu)
+    are full too: every non-owned lane rides through untouched.  On TPU
+    this is ONE launch of ``kernel.aggregate_adam_multijob_fused``
+    (aliased in-place block writes -- no separate scatter pass);
+    elsewhere the fused-scatter jnp path computes the identical packed
+    update and applies the identical row scatter, so the result is
+    bit-exact with the unfused ``multi_job_adam_update`` + caller-side
+    scatter at any sizes.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    assert sum(job_sizes) == int(block_idx.shape[0]), (
+        job_sizes, block_idx.shape)
+    assert len(job_sizes) == len(counts), (job_sizes, len(counts))
+    job_sizes = tuple(int(s) for s in job_sizes)
+    if isinstance(gs, (list, tuple)):
+        g_cat = jnp.concatenate(gs, axis=-1) if len(gs) > 1 else gs[0]
+    else:
+        g_cat = gs
+    if interpret:
+        new_p, new_mu, new_nu = _multi_job_jnp(
+            p, g_cat, mu, nu, counts, block_idx=block_idx,
+            job_sizes=job_sizes, block=int(block), p_packed=False,
+            lr=lr, b1=b1, b2=b2, eps=eps, wd=wd)
+        return (scatter_rows(p, new_p, block_idx, int(block)),
+                scatter_rows(mu, new_mu, block_idx, int(block)),
+                scatter_rows(nu, new_nu, block_idx, int(block)))
+    hp = multi_job_hp(counts, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd)
+    job_slot = jnp.asarray(
+        np.repeat(np.arange(len(job_sizes), dtype=np.int32),
+                  np.asarray(job_sizes, np.int64)))
+    return K.aggregate_adam_multijob_fused(
+        p, g_cat, mu, nu, hp, jnp.asarray(block_idx, jnp.int32), job_slot,
+        block=int(block), interpret=False)
+
+
 def block_adam_update(p, g_packed, mu, nu, count, *, block_idx, block,
                       lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0,
                       interpret=None):

@@ -83,3 +83,43 @@ def aggregate_adam_multijob_ref(p, grads, mu, nu, counts, block_idx,
         outs_nu.append(new_nu)
     return (jnp.concatenate(outs_p), jnp.concatenate(outs_mu),
             jnp.concatenate(outs_nu))
+
+
+def aggregate_adam_multijob_fused_ref(p, grads, mu, nu, counts, block_idx,
+                                      job_sizes, *, block, lr, b1=0.9,
+                                      b2=0.999, eps=1e-8, wd=0.0):
+    """Per-job SEQUENTIAL oracle for the fused-scatter (single-launch)
+    multi-job kernel: each job's block-owned update is computed against
+    the current full buffers and scattered back before the next job runs,
+    so the result is what K sequential shard-lane ticks would leave in
+    the full buffers.  Block exclusivity makes the order irrelevant --
+    the fused one-launch result must match bit-for-bit.
+
+    Returns FULL (new_p, new_mu, new_nu), each shaped like p/mu/nu, with
+    every non-owned lane untouched.
+    """
+    import numpy as np
+
+    def per_job(val):
+        if isinstance(val, (int, float)):
+            return [float(val)] * len(job_sizes)
+        return [float(v) for v in val]
+
+    lrs, b1s, b2s = per_job(lr), per_job(b1), per_job(b2)
+    epss, wds = per_job(eps), per_job(wd)
+    p, mu, nu = jnp.asarray(p), jnp.asarray(mu), jnp.asarray(nu)
+    off = 0
+    for j, nb in enumerate(job_sizes):
+        idx = np.asarray(block_idx)[off:off + nb]
+        lo, hi = off * block, (off + nb) * block
+        off += nb
+        gj = grads[..., lo:hi]
+        new_p, new_mu, new_nu = aggregate_adam_blocks_ref(
+            p, gj, mu, nu, counts[j], idx, block=block, lr=lrs[j],
+            b1=b1s[j], b2=b2s[j], eps=epss[j], wd=wds[j])
+        own = (idx.astype(np.int64)[:, None] * block
+               + np.arange(block)).reshape(-1)
+        p = p.at[own].set(new_p)
+        mu = mu.at[own].set(new_mu)
+        nu = nu.at[own].set(new_nu)
+    return p, mu, nu

@@ -62,6 +62,16 @@ PR 5 adds the SHARDED sibling: :class:`ShardedTickEngine` runs one
 independent tick loop per Aggregator shard space (``tick_shard``), with a
 job's push split into one piece per hosting shard -- see the class
 docstring and docs/architecture.md.
+
+PR 6 makes the hot path a SINGLE LAUNCH: the row scatters that used to
+follow every batched apply are fused into the kernel itself
+(``kernels.agg_adam.aggregate_adam_multijob_fused`` writes the updated
+flat/mu/nu blocks in place via ``input_output_aliases``), and the sharded
+engine gains :meth:`ShardedTickEngine.tick_fleet` -- every lane with
+pending pieces ticks in ONE fused launch over the lanes' concatenated
+states (``fleet_tick="fused"``, the default; ``"per_shard"`` keeps the
+PR-5 loop as a bit-parity oracle).  ``TickStats.n_launches`` counts what
+this buys.
 """
 
 from __future__ import annotations
@@ -143,6 +153,7 @@ class TickStats:
 
     n_ticks: int = 0  # batched passes executed
     n_applied: int = 0  # pushes applied across all ticks
+    n_launches: int = 0  # kernel/applier launches (the single-launch gauge)
     n_forced_staleness: int = 0  # ticks forced by a pull at the bound
     n_forced_capacity: int = 0  # ticks forced by a full push queue
     n_forced_replan: int = 0  # ticks forced to drain TOUCHED jobs on a replan
@@ -157,6 +168,60 @@ class TickStats:
         if not self.n_ticks:
             return 0.0
         return self.n_applied / self.n_ticks
+
+
+# ------------------------------------------------ shared applier building
+def _flat_job_hp(info) -> Tuple[float, float, float, float]:
+    """(lr, b1, b2, eps) of one flat-runtime job (Adam knobs ride in
+    ``step_opts`` on the unsharded runtime)."""
+    so = info["step_opts"]
+    return (float(info["lr"]), float(so.get("b1", 0.9)),
+            float(so.get("b2", 0.999)), float(so.get("eps", 1e-8)))
+
+
+def _sharded_job_hp(info) -> Tuple[float, float, float, float]:
+    """(lr, b1, b2, eps) of one sharded-runtime job (first-class fields)."""
+    return (float(info["lr"]), float(info["b1"]), float(info["b2"]),
+            float(info["eps"]))
+
+
+def _fused_tables(layouts, infos, hp_of, base_blocks=None):
+    """Bake the trace-time tables one fused multi-job apply needs: the
+    concatenated owned-block index table, per-entry packed block counts,
+    and per-entry ``(lr, b1, b2, eps)`` columns.
+
+    ONE builder for every applier in this module -- the flat engine, the
+    per-shard lane applier, and the fleet tick all route through it.  The
+    fleet passes ``base_blocks`` (each entry's shard base offset, in
+    blocks, into the concatenated fleet view) so a shard-local block
+    table rebases to global block ids; single-space appliers leave it 0.
+    """
+    if base_blocks is None:
+        base_blocks = (0,) * len(layouts)
+    block_idx = np.concatenate(
+        [l.blocks.astype(np.int32) + np.int32(b)
+         for l, b in zip(layouts, base_blocks)])
+    job_sizes = tuple(int(l.blocks.size) for l in layouts)
+    lr, b1, b2, eps = zip(*(hp_of(i) for i in infos))
+    return block_idx, job_sizes, (lr, b1, b2, eps)
+
+
+def _fused_state_update(state, gs, counts, *, block, block_idx, job_sizes,
+                        hps, interpret):
+    """ONE fused launch over one state dict: aggregation + Adam + the
+    in-place block writes for flat/mu/nu together (PR 6) -- the three
+    post-apply row scatters earlier engines ran are gone.  ``gs`` is the
+    per-entry packed gradient sequence (concatenated once inside the op:
+    this exact program shape is what the bit-exactness tests pin down);
+    ``counts`` must already be usable as traced int32 scalars."""
+    from repro.kernels.agg_adam import ops as agg_ops
+
+    lr, b1, b2, eps = hps
+    new_p, new_mu, new_nu = agg_ops.multi_job_adam_update_fused(
+        state["flat"], gs, state["mu"], state["nu"], counts,
+        block_idx=block_idx, job_sizes=job_sizes, block=block,
+        lr=lr, b1=b1, b2=b2, eps=eps, wd=0.0, interpret=interpret)
+    return dict(state, flat=new_p, mu=new_mu, nu=new_nu)
 
 
 class ServiceTickEngine:
@@ -473,6 +538,7 @@ class ServiceTickEngine:
             applied += len(key)
         self.stats.n_ticks += 1
         self.stats.n_applied += applied
+        self.stats.n_launches += len(groups)
         return applied
 
     def drain(self, only=None) -> int:
@@ -491,42 +557,21 @@ class ServiceTickEngine:
         All plan-derived structures (concatenated owned-block table,
         per-job packed sizes, hyperparameters) are baked in at build time;
         the returned function is (state, packed_grads) -> state with ONE
-        multi-job update pass and one row scatter per shared buffer.
+        fused launch writing the updated flat/mu/nu blocks in place --
+        no separate row-scatter passes (PR 6).
         """
-        from repro.kernels.agg_adam import ops as agg_ops
-
         plan = self.plan
-        block = plan.block_align
         layouts = [plan.job_layout(j) for j in job_ids]
-        block_idx = np.concatenate([l.blocks for l in layouts])
-        job_sizes = tuple(int(l.blocks.size) for l in layouts)
-        rows = jnp.asarray(block_idx)
         infos = [self.runtime._jobs[j] for j in job_ids]
-        lr = tuple(float(i["lr"]) for i in infos)
-        b1 = tuple(float(i["step_opts"].get("b1", 0.9)) for i in infos)
-        b2 = tuple(float(i["step_opts"].get("b2", 0.999)) for i in infos)
-        eps = tuple(float(i["step_opts"].get("eps", 1e-8)) for i in infos)
-
-        def scatter(buf, packed):
-            return buf.reshape(-1, block).at[rows].set(
-                packed.reshape(-1, block), unique_indices=True
-            ).reshape(buf.shape)
+        block_idx, job_sizes, hps = _fused_tables(layouts, infos,
+                                                  _flat_job_hp)
+        block, interpret = plan.block_align, self._interpret
 
         def apply(state, gs):
-            # One packed-domain concatenation: this exact program shape is
-            # what the bit-exactness tests pin down -- slicing per-job g
-            # views out of separate inputs rerounds a lane under XLA:CPU.
-            g_cat = jnp.concatenate(gs) if len(gs) > 1 else gs[0]
             counts = [state["counts"][j] + 1 for j in job_ids]
-            new_p, new_mu, new_nu = agg_ops.multi_job_adam_update(
-                state["flat"], g_cat, state["mu"], state["nu"], counts,
-                block_idx=block_idx, job_sizes=job_sizes, block=block,
-                lr=lr, b1=b1, b2=b2, eps=eps, wd=0.0,
-                interpret=self._interpret)
-            new_state = dict(state)
-            new_state["flat"] = scatter(state["flat"], new_p)
-            new_state["mu"] = scatter(state["mu"], new_mu)
-            new_state["nu"] = scatter(state["nu"], new_nu)
+            new_state = _fused_state_update(
+                state, gs, counts, block=block, block_idx=block_idx,
+                job_sizes=job_sizes, hps=hps, interpret=interpret)
             new_state["counts"] = dict(
                 state["counts"], **{j: c for j, c in zip(job_ids, counts)})
             return new_state
@@ -570,15 +615,30 @@ class ShardedTickEngine:
     re-tagged across the per-push epoch fence, and lanes are keyed by the
     stable ``agg_id`` so an untouched job's queues and compiled programs
     ride straight through a neighboring shard's split or merge.
+
+    ``fleet_tick`` selects how :meth:`tick` dispatches a round (PR 6):
+    ``"fused"`` (the default) runs ONE fused launch over every lane with
+    pending pieces -- the lanes' flat/mu/nu concatenate into one fleet
+    view, the multi-job kernel runs once with globally-rebased block ids,
+    and per-shard states slice back out -- while ``"per_shard"`` keeps
+    the PR-5 one-launch-group-per-lane loop as a bit-parity oracle.  The
+    attribute is mutable on purpose (benchmarks flip one engine between
+    modes; the two paths keep separate applier caches).  Per-element math
+    is identical either way, so the trajectories match bit-for-bit in
+    eager mode.
     """
 
     MAX_APPLIERS = 32  # compiled programs per lane (one per job subset)
 
     def __init__(self, runtime, *, max_staleness: int = 1,
                  queue_capacity: Optional[int] = None, jit: bool = True,
-                 interpret: Optional[bool] = None, min_batch_jobs: int = 3):
+                 interpret: Optional[bool] = None, min_batch_jobs: int = 3,
+                 fleet_tick: str = "fused"):
         if max_staleness < 0:
             raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
+        if fleet_tick not in ("fused", "per_shard"):
+            raise ValueError(f"fleet_tick must be 'fused' or 'per_shard', "
+                             f"got {fleet_tick!r}")
         self.runtime = runtime
         self.max_staleness = int(max_staleness)
         self.queue_capacity = (self.max_staleness + 1 if queue_capacity is None
@@ -586,6 +646,7 @@ class ShardedTickEngine:
         if self.queue_capacity < 1:
             raise ValueError("queue_capacity must be >= 1")
         self.min_batch_jobs = int(min_batch_jobs)
+        self.fleet_tick = fleet_tick
         self.stats = TickStats()  # fleet-aggregate counters
         self._poisoned = False
         self._jit = jit
@@ -593,6 +654,9 @@ class ShardedTickEngine:
         self._epoch = 0
         self._lanes: Dict[str, _ShardLane] = {}
         self._counts: Dict[str, int] = {}  # job step mirror (submit time)
+        # Fleet appliers are keyed by the whole pending pattern
+        # ((shard_id, jobs), ...) -- separate from the per-lane caches.
+        self._fleet_appliers: Dict[Tuple, Callable] = {}
         self._pull_fns: Dict[str, Callable] = {}
         self._grad_fns: Dict[str, Callable] = {}
         self._pack_fns: Dict[str, Callable] = {}
@@ -613,6 +677,14 @@ class ShardedTickEngine:
         if info is None:
             raise ValueError(f"unknown job {job_id!r}: not registered with "
                              f"the runtime (have {sorted(self.runtime._jobs)})")
+        if info.get("step_opts", {}).get("push_compression"):
+            raise ValueError(
+                f"job {job_id!r} requests push_compression="
+                f"{info['step_opts']['push_compression']!r}: the sharded "
+                f"tick engine's batched apply has no error-feedback "
+                f"buffer (the flat ServiceTickEngine rejects compressed "
+                f"pushes the same way; step such jobs through "
+                f"ServiceRuntime.step() on an unsharded runtime instead)")
         if job_id not in self._counts:
             self._counts[job_id] = int(jax.device_get(
                 self.runtime.counts[job_id]))
@@ -794,18 +866,109 @@ class ShardedTickEngine:
             applied += len(key)
         lane.stats.n_ticks += 1
         lane.stats.n_applied += applied
+        lane.stats.n_launches += len(groups)
         self.stats.n_ticks += 1
         self.stats.n_applied += applied
+        self.stats.n_launches += len(groups)
         return applied
 
     def tick(self, only=None) -> int:
-        """One ROUND: tick every live shard once.  Returns pieces applied
-        across the fleet (0 = nothing pending anywhere)."""
+        """One ROUND over the fleet.  With ``fleet_tick="fused"`` (the
+        default) this is ONE fused launch covering every lane with
+        pending pieces (:meth:`tick_fleet`); with ``"per_shard"`` it
+        ticks every live shard once, one launch group per lane (the PR-5
+        oracle path).  Returns pieces applied (0 = nothing pending
+        anywhere)."""
         plan = self.plan
         if plan is None:
             return 0
+        if self.fleet_tick == "fused":
+            return self.tick_fleet(only=only)
         return sum(self.tick_shard(sid, only=only)
                    for sid in plan.shard_ids)
+
+    def tick_fleet(self, only=None) -> int:
+        """One FLEET tick: pop the head piece of every pending job on
+        EVERY lane and apply all of them in ONE fused launch over the
+        pending lanes' concatenated states.  Lanes with nothing pending
+        are skipped mid-table -- they contribute neither state movement
+        nor launch cost, and their cadence is untouched.  Returns pieces
+        applied across the fleet (0 = nothing pending anywhere)."""
+        if self._poisoned:
+            raise RuntimeError(
+                "engine poisoned by a failed fleet apply: the jitted "
+                "applier donates every pending shard's state buffers, so "
+                "they may have been deleted mid-tick; restore/re-seed "
+                "the runtime's state and attach a fresh engine")
+        plan = self.plan
+        if plan is None:
+            return 0
+        entries = []
+        for sid in plan.shard_ids:
+            lane = self._lanes.get(sid)
+            if lane is None:
+                continue
+            pending = tuple(
+                j for j in self.runtime._jobs
+                if lane.queues.get(j) and (only is None or j in only))
+            if not pending:
+                continue
+            for j in pending:
+                if lane.queues[j][0][3] != self._epoch:
+                    raise RuntimeError(
+                        f"epoch fence: job {j!r} queued a piece on shard "
+                        f"{sid!r} under plan epoch "
+                        f"{lane.queues[j][0][3]} but the engine is at "
+                        f"{self._epoch}; a replan migrated this job's "
+                        f"layout without draining it")
+            entries.append((sid, pending))
+        if not entries:
+            return 0
+        key = tuple(entries)
+        # Build BEFORE popping: a build failure (e.g. mixed block_align
+        # across lanes) leaves every queue untouched for a later retry.
+        applier = self._fleet_appliers.get(key)
+        if applier is None:
+            applier = self._build_fleet_applier(key)
+            if len(self._fleet_appliers) >= self.MAX_APPLIERS:
+                self._fleet_appliers.pop(next(iter(self._fleet_appliers)))
+            self._fleet_appliers[key] = applier
+        popped = []  # (sid, job, head) in key order == table order
+        for sid, jobs in key:
+            lane = self._lanes[sid]
+            for j in jobs:
+                popped.append((sid, j, lane.queues[j].popleft()))
+        gs = tuple(head[0] for _, _, head in popped)
+        counts = tuple(head[1] for _, _, head in popped)
+        states = tuple(self.runtime.states[sid] for sid, _ in key)
+        try:
+            new_states = applier(states, gs, counts)
+        except BaseException:
+            # Execution failure: the jitted applier DONATED every pending
+            # shard's buffers -- re-queue the heads so the pieces stay
+            # inspectable and poison so later ticks fail fast.
+            for sid, j, head in popped:
+                self._lanes[sid].queues[j].appendleft(head)
+            if self._jit:
+                self._poisoned = True
+            raise
+        for (sid, _), st in zip(key, new_states):
+            self.runtime.states[sid] = st
+        for _, _, (_, count, fut, _) in popped:
+            fut._resolve(count)
+            if fut.done():
+                # Applied on its LAST hosting shard: commit the job's
+                # global step counter (the runtime owns counts).
+                self.runtime.counts[fut.job_id] = jnp.asarray(
+                    count, jnp.int32)
+        for sid, jobs in key:
+            lane = self._lanes[sid]
+            lane.stats.n_ticks += 1
+            lane.stats.n_applied += len(jobs)
+        self.stats.n_ticks += 1
+        self.stats.n_applied += len(popped)
+        self.stats.n_launches += 1  # the whole point: ONE launch per fleet
+        return len(popped)
 
     def drain(self, only=None) -> int:
         """Tick rounds until every (selected) queue on every lane is
@@ -842,6 +1005,10 @@ class ShardedTickEngine:
         pieces are re-tagged to the new epoch."""
         self._epoch += 1
         self.stats.n_replans += 1
+        # Fleet appliers bake EVERY participating shard's length into the
+        # concatenated-view offsets, so any plan change invalidates all
+        # of them (per-lane appliers survive for untouched jobs).
+        self._fleet_appliers.clear()
         if touched is None:
             assert not any(q for lane in self._lanes.values()
                            for q in lane.queues.values()), (
@@ -890,6 +1057,9 @@ class ShardedTickEngine:
                         "still queued (drain was bypassed)")
             lane.appliers = {k: v for k, v in lane.appliers.items()
                              if job_id not in k}
+        self._fleet_appliers = {
+            k: v for k, v in self._fleet_appliers.items()
+            if not any(job_id in jobs for _, jobs in k)}
         self._counts.pop(job_id, None)
         self._pull_fns.pop(job_id, None)
         self._grad_fns.pop(job_id, None)
@@ -899,46 +1069,68 @@ class ShardedTickEngine:
     def _build_applier(self, shard_id: str, job_ids: Tuple[str, ...]):
         """Compile the batched apply for one shard space and one pending
         job combination.  Identical math to the flat engine's applier --
-        one multi-job update pass over THIS shard's buffers -- except the
-        per-job step counts arrive with the queued pieces (assigned at
-        submit time), so inter-shard apply order cannot skew bias
-        correction."""
-        from repro.kernels.agg_adam import ops as agg_ops
-
-        plan = self.plan
-        shard_plan = plan.shard_of(shard_id)
-        block = shard_plan.block_align
+        one fused launch over THIS shard's buffers, updated blocks
+        written in place (PR 6) -- except the per-job step counts arrive
+        with the queued pieces (assigned at submit time), so inter-shard
+        apply order cannot skew bias correction."""
+        shard_plan = self.plan.shard_of(shard_id)
         layouts = [shard_plan.job_layout(j) for j in job_ids]
-        block_idx = np.concatenate([l.blocks for l in layouts])
-        job_sizes = tuple(int(l.blocks.size) for l in layouts)
-        rows = jnp.asarray(block_idx)
         infos = [self.runtime._jobs[j] for j in job_ids]
-        lr = tuple(float(i["lr"]) for i in infos)
-        b1 = tuple(float(i["b1"]) for i in infos)
-        b2 = tuple(float(i["b2"]) for i in infos)
-        eps = tuple(float(i["eps"]) for i in infos)
-
-        def scatter(buf, packed):
-            return buf.reshape(-1, block).at[rows].set(
-                packed.reshape(-1, block), unique_indices=True
-            ).reshape(buf.shape)
+        block_idx, job_sizes, hps = _fused_tables(layouts, infos,
+                                                  _sharded_job_hp)
+        block, interpret = shard_plan.block_align, self._interpret
 
         def apply(state, gs, counts):
-            g_cat = jnp.concatenate(gs) if len(gs) > 1 else gs[0]
             # Counts arrive as the pieces' submit-time step numbers; lift
             # to arrays so eager mode matches the traced path exactly.
             counts = [jnp.asarray(c, jnp.int32) for c in counts]
-            new_p, new_mu, new_nu = agg_ops.multi_job_adam_update(
-                state["flat"], g_cat, state["mu"], state["nu"],
-                counts,
-                block_idx=block_idx, job_sizes=job_sizes, block=block,
-                lr=lr, b1=b1, b2=b2, eps=eps, wd=0.0,
-                interpret=self._interpret)
-            new_state = dict(state)
-            new_state["flat"] = scatter(state["flat"], new_p)
-            new_state["mu"] = scatter(state["mu"], new_mu)
-            new_state["nu"] = scatter(state["nu"], new_nu)
-            return new_state
+            return _fused_state_update(
+                state, gs, counts, block=block, block_idx=block_idx,
+                job_sizes=job_sizes, hps=hps, interpret=interpret)
+
+        return jax.jit(apply, donate_argnums=(0,)) if self._jit else apply
+
+    def _build_fleet_applier(self, key) -> Callable:
+        """Compile the SINGLE-LAUNCH fleet apply for one pending pattern.
+
+        ``key`` is ``((shard_id, (job, ...)), ...)`` over the lanes with
+        pending pieces, in plan order.  The applier concatenates those
+        lanes' flat/mu/nu into one fleet view, runs ONE fused multi-job
+        launch whose block table is globally rebased (shard base offset
+        // block + local block id), and slices the per-shard states back
+        out -- one XLA program and one kernel launch no matter how many
+        lanes ticked.  Block exclusivity holds globally because each
+        shard's offset is block-aligned, so the launch is bit-exact with
+        the per-shard oracle loop."""
+        plan = self.plan
+        sids = [sid for sid, _ in key]
+        offsets, _, block = plan.concat_view(sids)
+        lens = [plan.shard_of(sid).total_len for sid in sids]
+        layouts, infos, bases = [], [], []
+        for (sid, jobs), off in zip(key, offsets):
+            shard_plan = plan.shard_of(sid)
+            for j in jobs:
+                layouts.append(shard_plan.job_layout(j))
+                infos.append(self.runtime._jobs[j])
+                bases.append(off // block)
+        block_idx, job_sizes, hps = _fused_tables(
+            layouts, infos, _sharded_job_hp, base_blocks=bases)
+        interpret = self._interpret
+
+        def cat(bufs):
+            return jnp.concatenate(bufs) if len(bufs) > 1 else bufs[0]
+
+        def apply(states, gs, counts):
+            fleet = {k: cat([s[k] for s in states])
+                     for k in ("flat", "mu", "nu")}
+            counts = [jnp.asarray(c, jnp.int32) for c in counts]
+            new = _fused_state_update(
+                fleet, gs, counts, block=block, block_idx=block_idx,
+                job_sizes=job_sizes, hps=hps, interpret=interpret)
+            return tuple(
+                dict(st, flat=new["flat"][lo:lo + n],
+                     mu=new["mu"][lo:lo + n], nu=new["nu"][lo:lo + n])
+                for st, lo, n in zip(states, offsets, lens))
 
         return jax.jit(apply, donate_argnums=(0,)) if self._jit else apply
 

@@ -328,6 +328,58 @@ class ShardedPlan:
         return tuple(i for i, sp in enumerate(self.shards)
                      if job_id in sp.job_ids)
 
+    # --------------------------------------------- concatenated fleet view
+    @cached_property
+    def concat_offsets(self) -> Tuple[int, ...]:
+        """Element offset of each shard space in the CONCATENATED fleet
+        view (``shard_ids`` order): the base the single-launch fleet tick
+        adds to a shard's local indices to address all lanes' state as
+        one buffer."""
+        offs: List[int] = []
+        off = 0
+        for sp in self.shards:
+            offs.append(off)
+            off += sp.total_len
+        return tuple(offs)
+
+    @cached_property
+    def uniform_block_align(self) -> Optional[int]:
+        """The common ``block_align`` of every shard space, or ``None``
+        when shards disagree -- one fused fleet launch needs a single
+        global block granularity across the concatenated view."""
+        aligns = {sp.block_align for sp in self.shards}
+        return aligns.pop() if len(aligns) == 1 else None
+
+    def concat_view(self, shard_ids: Optional[Sequence[str]] = None
+                    ) -> Tuple[Tuple[int, ...], int, int]:
+        """(element offsets, total length, block) of the concatenated view
+        over the given lanes (default: every shard, == ``concat_offsets``).
+
+        Each shard's ``shard_len`` is a multiple of its ``block_align``,
+        so with a uniform alignment the offsets are block-aligned and a
+        shard-local block ``b`` maps to global block
+        ``offset // block + b`` -- the per-block half of the fused fleet
+        tick's scalar-prefetched table.  Raises ``ValueError`` when the
+        participating shards do not share one ``block_align``.
+        """
+        if shard_ids is None:
+            shards = list(self.shards)
+        else:
+            shards = [self.shard_of(sid) for sid in shard_ids]
+        aligns = {sp.block_align for sp in shards}
+        if len(aligns) != 1:
+            raise ValueError(
+                f"concatenated view needs one block granularity across "
+                f"shards, got block_align={sorted(aligns)}; recompile the "
+                f"plan with a uniform pad_to")
+        block = aligns.pop()
+        offs: List[int] = []
+        off = 0
+        for sp in shards:
+            offs.append(off)
+            off += sp.total_len
+        return tuple(offs), off, block
+
     @cached_property
     def _layout_cache(self) -> Dict[str, ShardedJobLayout]:
         return {}

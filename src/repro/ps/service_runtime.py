@@ -455,9 +455,15 @@ class ShardedServiceRuntime:
         b1: float = 0.9,
         b2: float = 0.999,
         eps: float = 1e-8,
+        **step_opts,
     ) -> None:
         """Register a job and seed its parameters into the shards that the
-        control plane assigned its tensors to."""
+        control plane assigned its tensors to.
+
+        Extra ``step_opts`` (e.g. ``push_compression``) are recorded on
+        the job info so the attached engine can reject capabilities the
+        sharded data plane does not implement, with a clear error instead
+        of silently ignoring the option."""
         if job_id in self._jobs:
             raise ValueError(f"job {job_id} already in the runtime")
         abstract = jax.tree_util.tree_map(
@@ -472,7 +478,7 @@ class ShardedServiceRuntime:
         )
         self._jobs[job_id] = dict(
             loss_fn=loss_fn, abstract=abstract,
-            lr=lr, b1=b1, b2=b2, eps=eps,
+            lr=lr, b1=b1, b2=b2, eps=eps, step_opts=step_opts,
         )
         try:
             self.service.register_job(profile, specs=specs)

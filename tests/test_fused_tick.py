@@ -1,0 +1,372 @@
+"""PR-6 single-launch fused tick: the fused-scatter multi-job kernel,
+its jnp fallback, and the fleet-wide one-launch tick.
+
+Parity discipline (same as tests/test_sharded.py): all cross-PATH
+comparisons (fused vs unfused+scatter, fused fleet vs per-shard oracle)
+run EAGER -- per-element math is identical across paths, so results must
+agree bit-for-bit; the kernel-vs-ref comparison tolerates the documented
+reciprocal-vs-division rounding of the hp table.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParameterService
+from repro.kernels.agg_adam import kernel as agg_kernel
+from repro.kernels.agg_adam import ops as agg_ops
+from repro.kernels.agg_adam import ref as agg_ref
+from repro.ps.service_runtime import ShardedServiceRuntime
+
+
+def _tree(key, sizes):
+    ks = jax.random.split(key, len(sizes))
+    return {f"t{i}": jax.random.normal(k, (n,))
+            for i, (k, n) in enumerate(zip(ks, sizes))}
+
+
+def _loss(params, batch):
+    return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+               for k in params)
+
+
+# Uneven job sizes on purpose: shard spaces come out unevenly sized after
+# a split, and one tensor (t0 of "c") packs into a SINGLE 16-element
+# block -- the degenerate table entries the fused launch must handle.
+TREES = {
+    "a": _tree(jax.random.PRNGKey(0), (48, 16, 32)),
+    "b": _tree(jax.random.PRNGKey(1), (32, 16)),
+    "c": _tree(jax.random.PRNGKey(2), (16,)),
+}
+TARGETS = {j: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+           for j, t in TREES.items()}
+
+
+def _service():
+    return ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+
+
+def _add_jobs(rt, trees=TREES, slack=0.2):
+    for jid, t in trees.items():
+        nbytes = sum(4 * v.size for v in t.values())
+        rt.add_job(jid, t, _loss, lr=0.05, required_servers=1,
+                   agg_throughput=nbytes / slack)
+
+
+def _runtime(engine=None, jit=False, trees=TREES):
+    rt = ShardedServiceRuntime(_service(), jit=jit)
+    eng = rt.attach_engine(**engine) if engine is not None else None
+    _add_jobs(rt, trees)
+    return rt, eng
+
+
+def _assert_params_equal(rt_a, rt_b, jobs=TREES):
+    for j in jobs:
+        pa, pb = rt_a.params_of(j), rt_b.params_of(j)
+        for k in pa:
+            np.testing.assert_array_equal(np.asarray(pa[k]),
+                                          np.asarray(pb[k]))
+
+
+# ----------------------------------------------------------- kernel level
+@pytest.mark.parametrize("workers", [0, 3])
+def test_fused_kernel_interpret_matches_sequential_ref(workers):
+    """aggregate_adam_multijob_fused (interpret mode) == sequential
+    per-job block updates scattered into the full buffers, including a
+    single-block job, with every unowned block untouched bit-for-bit."""
+    block, n_blocks = 8, 16
+    n = block * n_blocks
+    bi = [np.array([1, 2, 5], np.int32), np.array([9], np.int32),
+          np.array([0, 3, 10], np.int32)]
+    block_idx = np.concatenate(bi)
+    sizes = tuple(b.size for b in bi)
+    m = block_idx.size * block
+    p = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    mu = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,))) * 0.1
+    nu = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (n,))) * 0.01
+    gshape = (workers, m) if workers else (m,)
+    g = jax.random.normal(jax.random.PRNGKey(3), gshape)
+    counts = [jnp.array(5, jnp.int32), jnp.array(1, jnp.int32),
+              jnp.array(2, jnp.int32)]
+    kw = dict(lr=(1e-2, 2e-2, 3e-3), b1=0.9, b2=0.999, eps=1e-8,
+              wd=(0.01, 0.0, 0.0))
+    hp = agg_ops.multi_job_hp(counts, **kw)
+    job_slot = jnp.asarray(np.repeat(np.arange(3, dtype=np.int32), sizes))
+    out_k = agg_kernel.aggregate_adam_multijob_fused(
+        p, g, mu, nu, hp, jnp.asarray(block_idx), job_slot, block=block,
+        interpret=True)
+    out_r = agg_ref.aggregate_adam_multijob_fused_ref(
+        p, g, mu, nu, counts, block_idx, sizes, block=block, **kw)
+    owned = np.zeros(n, bool)
+    owned[(block_idx[:, None] * block + np.arange(block)).reshape(-1)] = True
+    for a, b, orig in zip(out_k, out_r, (p, mu, nu)):
+        assert a.shape == (n,)  # FULL buffers come back, not packed
+        np.testing.assert_allclose(np.asarray(a)[owned],
+                                   np.asarray(b)[owned],
+                                   rtol=2e-5, atol=2e-6)
+        # The aliased in-place form must leave unowned lanes untouched.
+        np.testing.assert_array_equal(np.asarray(a)[~owned],
+                                      np.asarray(orig)[~owned])
+
+
+def test_fused_kernel_rejects_packed_p():
+    """The fused form writes into the FULL buffers: a packed p (the
+    unfused entry point's shape) must be rejected, not misread."""
+    block = 8
+    n = block * 4
+    block_idx = jnp.asarray(np.array([0, 2], np.int32))
+    job_slot = jnp.zeros((2,), jnp.int32)
+    hp = agg_ops.multi_job_hp([jnp.array(1, jnp.int32)], lr=0.1)
+    full = jnp.zeros((n,))
+    packed = jnp.zeros((2 * block,))
+    with pytest.raises(AssertionError, match="full"):
+        agg_kernel.aggregate_adam_multijob_fused(
+            packed, packed, full, full, hp, block_idx, job_slot,
+            block=block, interpret=True)
+
+
+# -------------------------------------------------------------- ops level
+def test_fused_ops_bit_exact_vs_unfused_plus_scatter():
+    """multi_job_adam_update_fused (jnp fallback) == the PR-3 pipeline
+    (packed multi_job_adam_update + caller-side row scatter), bit-exact:
+    the fusion is a pure program-shape change."""
+    block = 16
+    bi = [np.array([1, 2, 5], np.int32), np.array([7], np.int32)]
+    block_idx = np.concatenate(bi)
+    sizes = tuple(b.size for b in bi)
+    n = block * 12
+    p = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    mu = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,))) * 0.1
+    nu = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (n,))) * 0.01
+    g = jax.random.normal(jax.random.PRNGKey(3), (block_idx.size * block,))
+    gs = (g[:sizes[0] * block], g[sizes[0] * block:])
+    counts = [jnp.array(4, jnp.int32), jnp.array(9, jnp.int32)]
+    kw = dict(block_idx=block_idx, job_sizes=sizes, block=block,
+              lr=(1e-2, 3e-3))
+    fused = agg_ops.multi_job_adam_update_fused(p, gs, mu, nu, counts, **kw)
+    packed = agg_ops.multi_job_adam_update(p, gs, mu, nu, counts, **kw)
+    unfused = tuple(agg_ops.scatter_rows(buf, out, block_idx, block)
+                    for buf, out in zip((p, mu, nu), packed))
+    for a, b in zip(fused, unfused):
+        assert a.shape == (n,)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------- fleet ticks
+def _spread_fleet(rt):
+    """Split until the fleet has >= 2 shards (skip if packing refuses)."""
+    if rt.n_shards < 2:
+        rt.service.scale_out(1)
+    if rt.n_shards < 2:
+        pytest.skip("control plane kept every job on one Aggregator")
+
+
+def test_fleet_tick_is_one_launch_and_bit_exact_vs_per_shard_oracle():
+    """Tentpole acceptance: with pending pushes spread over S shards, one
+    fused fleet tick executes exactly ONE launch (TickStats.n_launches)
+    and leaves every shard state bit-exact with the per-shard oracle
+    loop -- through uneven shard sizes and a mid-trajectory split."""
+    rt_f, eng_f = _runtime(engine=dict(max_staleness=0, jit=False))
+    rt_o, eng_o = _runtime(engine=dict(max_staleness=0, jit=False,
+                                       fleet_tick="per_shard"))
+    assert eng_f.fleet_tick == "fused"
+
+    def both(n):
+        for _ in range(n):
+            for j in TREES:
+                eng_f.step(j, {"target": TARGETS[j]})
+                eng_o.step(j, {"target": TARGETS[j]})
+        eng_f.drain()
+        eng_o.drain()
+
+    both(3)
+    rt_f.service.scale_out(1)
+    rt_o.service.scale_out(1)
+    _spread_fleet(rt_f)
+    # Shard spaces really came out unevenly sized (the concatenated-view
+    # offsets are not a trivial stride).
+    lens = {sp.total_len for sp in rt_f.splan.shards}
+    assert len(lens) > 1 or rt_f.n_shards == 1
+    both(3)
+    _assert_params_equal(rt_f, rt_o)
+    for j in TREES:
+        assert int(jax.device_get(rt_f.counts[j])) == int(
+            jax.device_get(rt_o.counts[j]))
+
+    # Now the launch-count acceptance: queue one push for every job, find
+    # how many lanes have pending pieces, and tick the fleet ONCE.
+    futs = [eng_f.step(j, {"target": TARGETS[j]})["future"] for j in TREES]
+    pending_lanes = [sid for sid, lane in eng_f._lanes.items()
+                     if any(lane.queues.get(j) for j in TREES)]
+    assert len(pending_lanes) == rt_f.n_shards >= 2
+    launches_before = eng_f.stats.n_launches
+    applied = eng_f.tick()
+    assert applied == sum(len(rt_f.splan.job_layout(j).shard_ids)
+                          for j in TREES)
+    assert eng_f.stats.n_launches == launches_before + 1
+    assert all(f.done() for f in futs)
+
+    # The oracle path spends >= S launches on the same work.
+    [eng_o.step(j, {"target": TARGETS[j]}) for j in TREES]
+    launches_before = eng_o.stats.n_launches
+    eng_o.tick()
+    assert eng_o.stats.n_launches - launches_before >= len(pending_lanes)
+    _assert_params_equal(rt_f, rt_o)
+
+
+def test_fleet_tick_spanning_job_resolves_multipart_future_in_one_tick():
+    """A job split across >= 2 shards has ALL its pieces applied by the
+    single fleet launch: the multi-part future resolves in one tick."""
+    rt, eng = _runtime(engine=dict(max_staleness=2, jit=False))
+    rt.service.scale_out(1)
+    spanning = [j for j in TREES
+                if len(rt.splan.job_layout(j).shard_ids) >= 2]
+    if not spanning:
+        pytest.skip("split left every job on one shard")
+    j = spanning[0]
+    fut = eng.step(j, {"target": TARGETS[j]})["future"]
+    assert not fut.done()
+    before = eng.stats.n_launches
+    assert eng.tick_fleet() == len(rt.splan.job_layout(j).shard_ids)
+    assert eng.stats.n_launches == before + 1
+    assert fut.done() and fut.result() >= 1
+    assert int(jax.device_get(rt.counts[j])) == fut.result()
+
+
+def test_fleet_tick_skips_empty_lanes_mid_table():
+    """Lanes with nothing pending contribute neither state movement nor
+    tick counters: only the pending lanes' stats advance, and the launch
+    still counts as ONE."""
+    rt, eng = _runtime(engine=dict(max_staleness=2, jit=False))
+    _spread_fleet(rt)
+    # Pick the job hosted on the FEWEST shards so at least one lane stays
+    # idle (every job spanning every shard would defeat the point).
+    j = min(TREES, key=lambda j: len(rt.splan.job_layout(j).shard_ids))
+    hosting = set(rt.splan.job_layout(j).shard_ids)
+    if hosting == set(rt.splan.shard_ids):
+        pytest.skip("every job spans every shard; no idle lane to skip")
+    eng.step(j, {"target": TARGETS[j]})
+    ticks_before = {sid: lane.stats.n_ticks
+                    for sid, lane in eng._lanes.items()}
+    before = eng.stats.n_launches
+    assert eng.tick_fleet() == len(hosting)
+    assert eng.stats.n_launches == before + 1
+    for sid, lane in eng._lanes.items():
+        expect = 1 if sid in hosting else 0
+        assert lane.stats.n_ticks - ticks_before.get(sid, 0) == expect
+    # An empty fleet tick is free: no launch, no tick.
+    assert eng.tick_fleet() == 0
+    assert eng.stats.n_launches == before + 1
+
+
+def test_fleet_tick_survives_replans_and_caches_invalidate():
+    """The fused path rides through scale_out/scale_in replans: fleet
+    appliers (which bake every shard's concat offset) are rebuilt, the
+    epoch fence holds, and the trajectory stays bit-exact with a fused
+    twin that never scaled -- plus the per-shard oracle."""
+    rt_f, eng_f = _runtime(engine=dict(max_staleness=0, jit=False))
+    rt_o, eng_o = _runtime(engine=dict(max_staleness=0, jit=False,
+                                       fleet_tick="per_shard"))
+
+    def both(n):
+        for _ in range(n):
+            for j in TREES:
+                eng_f.step(j, {"target": TARGETS[j]})
+                eng_o.step(j, {"target": TARGETS[j]})
+        eng_f.drain()
+        eng_o.drain()
+
+    both(2)
+    assert eng_f._fleet_appliers  # the fused path really built one
+    rt_f.service.scale_out(1)
+    rt_o.service.scale_out(1)
+    assert not eng_f._fleet_appliers  # replan cleared the concat layout
+    both(2)
+    rt_f.service.scale_in(1)
+    rt_o.service.scale_in(1)
+    both(2)
+    _assert_params_equal(rt_f, rt_o)
+
+
+def test_fleet_tick_mode_validation_and_flip():
+    rt, _ = _runtime()
+    with pytest.raises(ValueError, match="fleet_tick"):
+        rt.attach_engine(fleet_tick="bogus")
+    rt2, eng = _runtime(engine=dict(max_staleness=0, jit=False))
+    eng.step("a", {"target": TARGETS["a"]})
+    eng.drain()
+    eng.fleet_tick = "per_shard"  # benchmarks flip modes on one engine
+    eng.step("a", {"target": TARGETS["a"]})
+    eng.drain()
+    assert eng.stats.n_applied >= 2
+
+
+# ------------------------------------------------------ engine satellites
+def test_flat_engine_launch_accounting():
+    """n_launches gauges the dispatch shape: one per batched tick at or
+    above the crossover, one per job below it."""
+    from repro.ps.service_runtime import ServiceRuntime
+
+    def flat(min_batch_jobs):
+        rt = ServiceRuntime(_service(), jit=False)
+        eng = rt.attach_engine(max_staleness=1, jit=False,
+                               min_batch_jobs=min_batch_jobs)
+        _add_jobs(rt, {j: TREES[j] for j in ("a", "b")})
+        for j in ("a", "b"):
+            eng.step(j, {"target": TARGETS[j]})
+        eng.tick()
+        return eng.stats
+
+    batched = flat(min_batch_jobs=2)
+    assert (batched.n_ticks, batched.n_launches) == (1, 1)
+    per_job = flat(min_batch_jobs=3)  # 2 pending < 3: per-job dispatch
+    assert (per_job.n_ticks, per_job.n_launches) == (1, 2)
+    assert per_job.n_per_job_dispatch == 1
+
+
+def test_push_compression_rejected_on_sharded_engine():
+    """Satellite: a push_compression job attaching to the sharded engine
+    fails LOUDLY with the job id and a pointer at the flat runtime's
+    error-feedback path, instead of silently dropping the option."""
+    rt, eng = _runtime(engine=dict(max_staleness=0, jit=False))
+    nbytes = sum(4 * v.size for v in TREES["a"].values())
+    rt.add_job("z", _tree(jax.random.PRNGKey(9), (16,)), _loss, lr=0.05,
+               required_servers=1, agg_throughput=nbytes / 0.2,
+               push_compression="int8")
+    with pytest.raises(ValueError, match="push_compression.*'z'|'z'.*push_compression"):
+        eng.step("z", {"target": jax.tree_util.tree_map(
+            lambda p: p * 0 + 1.0, _tree(jax.random.PRNGKey(9), (16,)))})
+    # The message routes users at the supported path.
+    with pytest.raises(ValueError, match="ServiceRuntime.step"):
+        eng.pull("z")
+    # Plain jobs on the same engine are unaffected.
+    eng.step("a", {"target": TARGETS["a"]})
+    eng.drain()
+
+
+def test_n_launches_surfaced_in_debug_stats():
+    """Satellite: both runtimes' debug_stats() expose n_launches -- the
+    fleet aggregate and each shard lane's own counter."""
+    from repro.ps.service_runtime import ServiceRuntime
+
+    rt_flat = ServiceRuntime(_service(), jit=False)
+    feng = rt_flat.attach_engine(max_staleness=0, jit=False)
+    _add_jobs(rt_flat, {"a": TREES["a"]})
+    feng.step("a", {"target": TARGETS["a"]})
+    feng.drain()
+    assert rt_flat.debug_stats()["engine"]["n_launches"] >= 1
+
+    rt, eng = _runtime(engine=dict(max_staleness=0, jit=False))
+    for j in TREES:
+        eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+    stats = rt.debug_stats()
+    assert stats["engine"]["n_launches"] >= 1
+    assert all("n_launches" in s for s in stats["shards"].values())
+    # Fused fleet ticks count on the ENGINE, not per lane: the aggregate
+    # launch count stays below the per-lane tick total once >= 2 lanes
+    # share a launch.
+    if rt.n_shards >= 2:
+        lane_ticks = sum(s["n_ticks"] for s in stats["shards"].values())
+        assert stats["engine"]["n_launches"] <= lane_ticks
