@@ -31,6 +31,7 @@ MODULES = [
     ("elastic_scaling", "elastic_scaling"),
     ("appd", "appd_interference"),
     ("roofline", "roofline"),
+    ("recovery", "recovery"),
 ]
 
 

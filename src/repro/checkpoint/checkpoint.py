@@ -210,11 +210,17 @@ def restore_ps_checkpoint(directory, step: int, plan=None, verify: bool = True):
 
 def save_sharded_checkpoint(directory, step: int, splan, states, counts,
                             keep_last: Optional[int] = None,
-                            verify: bool = True) -> Path:
+                            verify: bool = True,
+                            extra_aux: Optional[Dict[str, Any]] = None
+                            ) -> Path:
     """Save a sharded-runtime snapshot: the ShardedPlan (shard map), every
     shard space's buffers, and the per-job global step counters, in one
     atomic commit.  ``states`` maps ``agg_id`` -> per-shard state dict;
-    ``counts`` maps ``job_id`` -> step counter."""
+    ``counts`` maps ``job_id`` -> step counter.  ``extra_aux`` merges
+    additional JSON-able metadata into the aux record (e.g. the sharded
+    runtime stamps ``shard_health`` so restore tooling can tell a
+    checkpoint was taken on a degraded fleet); reserved keys are
+    rejected."""
     from repro.ps.plan import sharded_plan_to_json
 
     tree = {"shards": dict(states), "counts": dict(counts)}
@@ -223,6 +229,12 @@ def save_sharded_checkpoint(directory, step: int, splan, states, counts,
         "shard_leaves": {sid: sorted(st) for sid, st in states.items()},
         "jobs": sorted(counts),
     }
+    if extra_aux:
+        clash = sorted(set(extra_aux) & set(aux))
+        if clash:
+            raise ValueError(f"extra_aux may not override reserved aux "
+                             f"keys {clash}")
+        aux.update(extra_aux)
     return save_checkpoint(directory, step, tree, keep_last, verify, aux=aux)
 
 

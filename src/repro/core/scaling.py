@@ -178,6 +178,48 @@ def split_aggregator(
     return True
 
 
+def evacuate_aggregator(
+    aggregators: List[Aggregator],
+    victim: Aggregator,
+    jobs: Dict[str, JobProfile],
+    config: AssignmentConfig = AssignmentConfig(),
+    allocator: Optional[AggregatorAllocator] = None,
+) -> int:
+    """Forced drain of ONE named Aggregator: the shard-loss recovery move.
+
+    Unlike :func:`recycle_aggregators` -- an opportunistic shrink that
+    backs off whenever the trial placement would degrade performance --
+    evacuation must not fail: the victim is already lost (or condemned),
+    so its tasks are re-hosted on the survivors even if that overloads
+    them.  Tasks move largest ``exec_time`` first through the normal
+    assignment scheme; when nothing fits under the loss limit the task
+    is force-placed on the least-busy survivor (degraded beats down).
+    ``allocator`` is consulted only when the victim was the ONLY
+    Aggregator (recovery must produce *some* host).  Returns the number
+    of tasks moved; ``victim`` is removed from ``aggregators``.
+    """
+    survivors = [a for a in aggregators if a is not victim]
+    if not survivors:
+        if allocator is None:
+            raise _NoAllocation(
+                f"cannot evacuate {victim.agg_id!r}: it is the only "
+                f"Aggregator and no allocator was provided")
+        survivors = [allocator()]
+    moved = 0
+    for task in sorted(victim.tasks.values(), key=lambda t: -t.exec_time):
+        job = jobs.get(task.job_id)
+        if job is not None and _safe_assign(task, job, survivors, config):
+            moved += 1
+            continue
+        duration = (job.iteration_duration if job is not None
+                    else victim.job_durations.get(task.job_id, 1.0))
+        host = min(survivors, key=lambda a: a.busy_time())
+        host.add_task(task, duration)
+        moved += 1
+    aggregators[:] = survivors
+    return moved
+
+
 def _refuse_allocation() -> Aggregator:
     raise _NoAllocation()
 

@@ -170,6 +170,43 @@ class ParameterService:
             self._replan()
         return removed
 
+    def evacuate_aggregator(self, agg_id: str) -> int:
+        """Declare ONE Aggregator lost and re-host its tasks on the rest
+        of its cluster -- the control-plane half of shard-loss recovery
+        (the data-plane half, state migration, rides the replan this
+        triggers; see ``ShardedServiceRuntime.recover_shard``).
+
+        Unlike ``scale_in`` this names its victim and cannot refuse:
+        tasks are force-placed on survivors even past the loss limit,
+        and a fresh Aggregator is allocated only if the victim was the
+        cluster's last one.  Returns the number of tasks moved; raises
+        ``ValueError`` for an unknown ``agg_id``."""
+        from .cluster import OverBudget
+        from .scaling import evacuate_aggregator
+
+        for ctrl in self._pmaster.clusters.values():
+            victim = next((a for a in ctrl.aggregators
+                           if a.agg_id == agg_id), None)
+            if victim is None:
+                continue
+
+            def _allocate():
+                try:
+                    return ctrl._allocate()
+                except OverBudget:
+                    if not self._pmaster._grant_budget(ctrl):
+                        raise
+                    return ctrl._allocate()
+
+            moved = evacuate_aggregator(
+                ctrl.aggregators, victim, ctrl.jobs, self._config,
+                allocator=_allocate)
+            self._replan()
+            return moved
+        raise ValueError(
+            f"unknown aggregator {agg_id!r} "
+            f"(have {[a.agg_id for a in self.aggregators]})")
+
     @property
     def current_plan(self):
         """Plan as of the last placement change (None before any job)."""

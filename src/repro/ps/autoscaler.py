@@ -63,6 +63,7 @@ class ScaleDecision:
     n_shards_after: int
     action: str  # 'grow' | 'shrink' | 'hold'
     relayout_bytes: int = 0  # shard bytes the action's migration moved
+    quarantined: tuple = ()  # shards quarantined this window (forces hold)
 
 
 class ElasticScaler:
@@ -138,6 +139,11 @@ class ElasticScaler:
         per_shard = self.window_loads()
         load = sum(per_shard.values()) + self.queued_pieces()
         n_before = self.runtime.n_shards
+        # A degraded fleet is never resized: splits and merges migrate
+        # shard state, and a quarantined lane's buffers are condemned --
+        # recover it first (ShardedServiceRuntime.recover_shard), then
+        # let load drive the fleet again.
+        quarantined = tuple(self._engine().quarantined_shards())
         desired = max(
             cfg.min_shards,
             min(cfg.max_shards,
@@ -146,7 +152,8 @@ class ElasticScaler:
         action = "hold"
         relayout = 0
         self._since_action += 1
-        if self._since_action >= cfg.cooldown and desired != n_before:
+        if (not quarantined and self._since_action >= cfg.cooldown
+                and desired != n_before):
             step = max(1, min(cfg.max_step, abs(desired - n_before)))
             before_bytes = self.runtime.total_relayout_bytes
             if desired > n_before:
@@ -161,7 +168,8 @@ class ElasticScaler:
         decision = ScaleDecision(
             window=len(self.decisions), load=load, per_shard=per_shard,
             n_shards_before=n_before, n_shards_after=self.runtime.n_shards,
-            action=action, relayout_bytes=relayout)
+            action=action, relayout_bytes=relayout,
+            quarantined=quarantined)
         self.decisions.append(decision)
         return decision
 

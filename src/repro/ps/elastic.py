@@ -524,6 +524,7 @@ def migrate_sharded_state(
     *,
     needs_ef: bool = False,
     interpret: Optional[bool] = None,
+    fault_injector=None,
 ) -> Tuple[Dict[str, Dict[str, Any]], int, Tuple[str, ...]]:
     """Re-lay per-shard states onto a new ShardedPlan.
 
@@ -543,6 +544,11 @@ def migrate_sharded_state(
     count and touched set equal :func:`sharded_transition_summary`'s
     exactly -- the property the elastic-scaling benchmark asserts.
     """
+    if fault_injector is not None:
+        # Chaos hook: a fault here models a migration dying BEFORE any
+        # state moved (states untouched, caller's replan aborts).
+        fault_injector.on_migration(
+            f"sharded:{old.n_shards}->{new.n_shards}")
     moved = 0
     touched: set = set()
     new_states: Dict[str, Dict[str, Any]] = {}

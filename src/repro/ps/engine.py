@@ -72,18 +72,48 @@ pending pieces ticks in ONE fused launch over the lanes' concatenated
 states (``fleet_tick="fused"``, the default; ``"per_shard"`` keeps the
 PR-5 loop as a bit-parity oracle).  ``TickStats.n_launches`` counts what
 this buys.
+
+PR 7 makes a failed apply SURVIVABLE.  The jitted appliers donate the
+state buffers, so an exec failure may have deleted them mid-update;
+earlier engines poisoned the WHOLE engine permanently.  Now every lane
+(each shard space; the flat engine is one unnamed lane) keeps a
+last-good SNAPSHOT of its state, refreshed every ``snapshot_interval``
+applying ticks with the copy taken *before* the donated apply, plus a
+replay log of the pushes applied since.  On an exec failure the lane
+restores the snapshot, re-queues the failed heads AND the logged
+pushes (in order, futures kept but never re-resolved), and replays them
+on subsequent ticks -- at ``max_staleness=0`` the recovered trajectory
+is bit-exact with a fault-free run, because sharded pieces carry their
+submit-time step counts and flat counts recompute from the restored
+state.  A lane that keeps failing (``max_apply_retries`` consecutive
+rollbacks) is QUARANTINED: its state stays at the last-good snapshot,
+``tick_shard`` skips it, ``tick_fleet`` drops it from the fused launch,
+and blocked work (``drain``/``pull``/``result``) raises
+:class:`repro.ps.faults.EngineQuarantinedError` naming the shard, tick,
+jobs, and original exception.  A fused fleet launch cannot attribute
+which lane failed, so its failure handler rolls back EVERY participating
+lane and replays each with its own per-shard launch -- the faulty lane
+fails (and retries or quarantines) in isolation while the rest re-apply
+(``TickStats.n_fleet_fallbacks``).  ``ShardedServiceRuntime.
+recover_shard`` turns a quarantined lane back into a healthy fleet via
+the PR-4/5 migration machinery; a seedable
+:class:`repro.ps.faults.FaultInjector` drives all of it
+deterministically in tests and benchmarks.
 """
 
 from __future__ import annotations
 
+import time
+
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ps.faults import HEALTHY, QUARANTINED, EngineQuarantinedError
 from repro.ps.plan import FlatPlan
 from repro.ps.runtime import (
     _gather_packed,
@@ -103,12 +133,15 @@ class PushFuture:
     Under the sharded engine one push fans out into one PIECE per hosting
     shard (``parts``); the future resolves when the LAST piece applies.
     A push dropped without applying (a job removed with a queue that
-    could not drain) is CANCELLED: ``result()`` raises instead of forcing
-    ticks forever on a job the engine no longer knows.
+    could not drain, or a piece lost with a dead shard) is CANCELLED:
+    ``result()`` raises instead of forcing ticks forever.  A push whose
+    applied effect was later DISCARDED by shard-loss recovery (it landed
+    inside the lost lane's rollback window) keeps its resolved step but
+    reports ``rolled_back`` -- re-push to land the update again.
     """
 
     __slots__ = ("job_id", "_engine", "_done", "_step", "_remaining",
-                 "_cancelled")
+                 "_cancelled", "_rolled_back")
 
     def __init__(self, job_id: str, engine, parts: int = 1):
         self.job_id = job_id
@@ -117,6 +150,7 @@ class PushFuture:
         self._step = None
         self._remaining = int(parts)
         self._cancelled = None  # str reason once cancelled
+        self._rolled_back = False  # applied, then lost with a dead shard
 
     def done(self) -> bool:
         return self._done
@@ -124,23 +158,72 @@ class PushFuture:
     def cancelled(self) -> bool:
         return self._cancelled is not None
 
-    def result(self) -> int:
+    @property
+    def rolled_back(self) -> bool:
+        """True if this push HAD applied but its effect was discarded by
+        ``recover_shard`` (it was inside the lost shard's rollback
+        window, at most ``snapshot_interval`` ticks deep)."""
+        return self._rolled_back
+
+    def result(self, timeout: Optional[float] = None) -> int:
         """Block (force service ticks) until applied; returns the job's
-        1-based step count as of this push.  Raises ``RuntimeError`` if
-        the push was cancelled before it could apply."""
+        1-based step count as of this push.
+
+        ``timeout`` (seconds, wall clock): raise ``TimeoutError`` if the
+        push has not applied in time -- e.g. its hosting lane is
+        quarantined, or a piece was lost in transit.  With no timeout the
+        call never spins forever either: if ticking makes no progress and
+        the push cannot resolve, it raises the blocking lane's
+        :class:`~repro.ps.faults.EngineQuarantinedError` (or a
+        ``RuntimeError`` when the piece is simply gone).  A cancelled
+        push raises ``RuntimeError`` immediately.  Note the flat engine
+        has a single lane, so its quarantine raises out of ``tick()``
+        itself regardless of ``timeout``."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + float(timeout))
         while not self._done:
             if self._cancelled is not None:
                 raise RuntimeError(
                     f"push for job {self.job_id!r} will never apply: "
                     f"{self._cancelled}")
-            self._engine.tick()
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"push for job {self.job_id!r} still unapplied after "
+                    f"{timeout} s (hosting lane quarantined, or a piece "
+                    f"was dropped in transit)")
+            if self._engine.tick() == 0 and not self._done:
+                # No progress and still pending: either a rollback just
+                # re-queued work (pieces remain on healthy lanes -- keep
+                # ticking) or the push is stuck for good.
+                stall = self._engine._stall_error(self.job_id)
+                if stall is None:
+                    continue
+                if deadline is None:
+                    raise stall
+                time.sleep(0.001)  # wait out the timeout, don't hot-spin
         return self._step
 
-    def _resolve(self, step: int) -> None:
+    def _resolve(self, step: int) -> bool:
+        """One piece applied; True if this transition completed the push
+        (re-applying a rolled-back piece of an already-done future is a
+        no-op, so replay never double-commits)."""
+        if self._done:
+            return False
         self._remaining -= 1
         if self._remaining <= 0:
             self._done = True
             self._step = int(step)
+            return True
+        return False
+
+    def _unresolve(self) -> None:
+        """A rollback un-applied one piece.  A still-pending future gets
+        the part back (it must not complete until the replay re-applies
+        it); a DONE future stays done -- its result was already
+        observable, and the deterministic replay re-lands the identical
+        update."""
+        if not self._done:
+            self._remaining += 1
 
     def _cancel(self, reason: str) -> None:
         if not self._done:
@@ -160,6 +243,11 @@ class TickStats:
     n_per_job_dispatch: int = 0  # ticks dispatched as per-job passes (< K_min)
     n_replans: int = 0  # plan changes the engine rode through
     n_retagged: int = 0  # untouched pushes carried across a replan (fence)
+    n_snapshots: int = 0  # last-good state copies taken (rollback anchors)
+    n_rollbacks: int = 0  # failed applies recovered by snapshot restore
+    n_replayed: int = 0  # applied pushes re-queued for replay by rollbacks
+    n_quarantines: int = 0  # lanes that exhausted retries and stopped
+    n_fleet_fallbacks: int = 0  # fused fleet failures replayed per-shard
 
     @property
     def mean_batch(self) -> float:
@@ -168,6 +256,16 @@ class TickStats:
         if not self.n_ticks:
             return 0.0
         return self.n_applied / self.n_ticks
+
+
+def _copy_state(state):
+    """Deep copy of one state dict, device buffers COPIED (not aliased):
+    a snapshot must survive the donated apply that may consume -- or a
+    failed apply that may delete -- the live buffers, and a restored
+    copy must leave the pristine snapshot available for the NEXT
+    rollback (replay re-donates the restored buffers)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.copy() if hasattr(x, "copy") else x, state)
 
 
 # ------------------------------------------------ shared applier building
@@ -237,9 +335,15 @@ class ServiceTickEngine:
 
     def __init__(self, runtime, *, max_staleness: int = 1,
                  queue_capacity: Optional[int] = None, jit: bool = True,
-                 interpret: Optional[bool] = None, min_batch_jobs: int = 3):
+                 interpret: Optional[bool] = None, min_batch_jobs: int = 3,
+                 snapshot_interval: int = 8, max_apply_retries: int = 1,
+                 fault_injector=None):
         if max_staleness < 0:
             raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
+        if snapshot_interval < 0:
+            raise ValueError(
+                f"snapshot_interval must be >= 0 (0 disables rollback "
+                f"recovery), got {snapshot_interval}")
         self.runtime = runtime
         self.max_staleness = int(max_staleness)
         self.queue_capacity = (self.max_staleness + 1 if queue_capacity is None
@@ -253,8 +357,21 @@ class ServiceTickEngine:
         # 0.71x, and winning from 4 up).  Result is identical either
         # way (disjoint blocks commute); this is a pure cost knob.
         self.min_batch_jobs = int(min_batch_jobs)
+        # Fault tolerance: a last-good state copy every this many
+        # applying ticks bounds both the copy overhead (amortized) and
+        # the rollback window a failure can lose; 0 disables snapshots
+        # (a jitted exec failure then quarantines immediately, since the
+        # donated buffers are unrecoverable).
+        self.snapshot_interval = int(snapshot_interval)
+        self.max_apply_retries = int(max_apply_retries)
+        self.fault_injector = fault_injector
         self.stats = TickStats()
-        self._poisoned = False
+        self.health = HEALTHY
+        self.quarantine_error: Optional[EngineQuarantinedError] = None
+        self._snapshot = None  # (state copy, counts-mirror copy)
+        self._snapshot_log: List[Tuple] = []  # (job, packed, fut) applied
+        self._ticks_since_snapshot = 0
+        self._failures = 0  # consecutive failed applies (reset on success)
         self._jit = jit
         self._interpret = interpret  # None = auto (jnp path off-TPU)
         self._epoch = 0  # bumped per plan change; fences queued pushes
@@ -319,6 +436,13 @@ class ServiceTickEngine:
         epoch (the fence that proves no push crosses layouts)."""
         self._epoch += 1
         self.stats.n_replans += 1
+        # A snapshot is a copy of the PRE-migration layout: restoring it
+        # after the plan changed would resurrect dead geometry.  Drop it
+        # (and its replay log); the rollback window restarts under the
+        # new plan at the next applying tick.
+        self._snapshot = None
+        self._snapshot_log = []
+        self._ticks_since_snapshot = 0
         if touched is None:
             assert not any(self._queues.values()), (
                 "replan with queued pushes: runtime must drain the "
@@ -352,8 +476,11 @@ class ServiceTickEngine:
             # drain was bypassed; cancel so held futures raise cleanly
             # instead of forcing ticks forever on an unknown job.
             for _, fut, _ in q:
-                fut._cancel("job removed from the runtime with this push "
-                            "still queued (drain was bypassed)")
+                if fut is not None:
+                    fut._cancel("job removed from the runtime with this "
+                                "push still queued (drain was bypassed)")
+        self._snapshot_log = [e for e in self._snapshot_log
+                              if e[0] != job_id]
         self._counts.pop(job_id, None)
         self._pull_fns.pop(job_id, None)
         self._grad_fns.pop(job_id, None)
@@ -419,8 +546,18 @@ class ServiceTickEngine:
         while len(q) >= self.queue_capacity:
             self.stats.n_forced_capacity += 1
             self.tick()
+        return self._enqueue(q, job_id, packed)
+
+    def _enqueue(self, q: deque, job_id: str, packed) -> PushFuture:
         fut = PushFuture(job_id, self)
-        q.append((packed, fut, self._epoch))
+        action = ("deliver" if self.fault_injector is None
+                  else self.fault_injector.on_push(job_id, None))
+        if action != "drop":
+            q.append((packed, fut, self._epoch))
+            if action == "duplicate":
+                # An at-least-once delivery bug: the copy applies as an
+                # extra, untracked push (fut=None -- nothing to resolve).
+                q.append((packed, None, self._epoch))
         return fut
 
     def step(self, job_id: str, batch) -> Dict[str, Any]:
@@ -454,9 +591,7 @@ class ServiceTickEngine:
                 fn = jax.jit(fn)
             self._grad_fns[job_id] = fn
         loss, packed = fn(self.runtime.state["flat"], batch)
-        fut = PushFuture(job_id, self)
-        q.append((packed, fut, self._epoch))
-        return {"loss": loss, "future": fut}
+        return {"loss": loss, "future": self._enqueue(q, job_id, packed)}
 
     # ----------------------------------------------------------------- tick
     def tick(self, only=None) -> int:
@@ -466,13 +601,8 @@ class ServiceTickEngine:
         pending, as per-job block passes below that crossover (identical
         result, cheaper program).  Returns the number of jobs applied
         (0 = nothing pending)."""
-        if self._poisoned:
-            raise RuntimeError(
-                "engine poisoned by a failed batched apply: the jitted "
-                "applier donates the shared state buffers, so they may "
-                "have been deleted mid-tick; restore/re-seed the "
-                "runtime's state and attach a fresh engine before "
-                "continuing")
+        if self.health == QUARANTINED:
+            raise self.quarantine_error
         pending = [j for j in self.runtime._jobs
                    if self._queues.get(j) and (only is None or j in only)]
         if not pending:
@@ -496,6 +626,10 @@ class ServiceTickEngine:
             self.stats.n_per_job_dispatch += 1
         else:
             groups = [tuple(pending)]
+        # Refresh the lane snapshot BEFORE any donated apply can consume
+        # the live buffers (queues are still intact, so the snapshot plus
+        # the -- now empty -- replay log reconstructs this exact moment).
+        self._maybe_snapshot()
         applied = 0
         for key in groups:
             heads = [self._queues[j].popleft() for j in key]
@@ -518,38 +652,118 @@ class ServiceTickEngine:
                     self._queues[j].appendleft(head)
                 raise
             try:
+                if self.fault_injector is not None:
+                    self.fault_injector.on_apply(None)
                 self.runtime.state = applier(self.runtime.state, gs)
-            except BaseException:
+            except BaseException as exc:
                 # Execution failure: the jitted applier DONATES the state
-                # buffers, so they may already be deleted -- no retry
-                # against this state can succeed.  Re-queue the heads so
-                # the pushes remain inspectable, and poison the engine so
-                # later ticks (including PushFuture.result() loops) fail
-                # fast with a clear message instead of spinning on dead
-                # buffers.
+                # buffers, so they may already be deleted.  Re-queue the
+                # heads, then roll the lane back to its last-good
+                # snapshot and replay (or quarantine when retries are
+                # exhausted / no snapshot exists) -- the rollback undoes
+                # every group this tick already applied, so nothing from
+                # this tick survives.
                 for j, head in zip(key, heads):
                     self._queues[j].appendleft(head)
-                if self._jit:
-                    self._poisoned = True
-                raise
-            for j, (_, fut, _) in zip(key, heads):
+                self._handle_apply_failure(exc, key)
+                self.stats.n_ticks += 1
+                return 0
+            self._failures = 0
+            for j, (packed, fut, _) in zip(key, heads):
                 self._counts[j] += 1
-                fut._resolve(self._counts[j])
+                if fut is not None:
+                    fut._resolve(self._counts[j])
+                self._snapshot_log.append((j, packed, fut))
             applied += len(key)
         self.stats.n_ticks += 1
         self.stats.n_applied += applied
         self.stats.n_launches += len(groups)
+        self._ticks_since_snapshot += 1
         return applied
+
+    # ------------------------------------------------------- fault recovery
+    def _maybe_snapshot(self) -> None:
+        """Copy (state, counts mirror) as the rollback anchor, every
+        ``snapshot_interval`` applying ticks, BEFORE the donated apply."""
+        if self.snapshot_interval <= 0:
+            return
+        if (self._snapshot is None
+                or self._ticks_since_snapshot >= self.snapshot_interval):
+            self._snapshot = (_copy_state(self.runtime.state),
+                              dict(self._counts))
+            self._snapshot_log = []
+            self._ticks_since_snapshot = 0
+            self.stats.n_snapshots += 1
+
+    def _rollback(self) -> None:
+        """Restore the last-good snapshot and re-queue the logged pushes
+        IN FRONT of whatever is queued (per-job order preserved), so
+        subsequent ticks replay the identical sequence.  Replayed
+        futures ride along un-resolved-if-pending / kept-done-if-done;
+        the snapshot itself stays pristine for a repeated rollback."""
+        state_copy, counts_copy = self._snapshot
+        self.runtime.state = _copy_state(state_copy)
+        self._counts = dict(counts_copy)
+        for j, packed, fut in reversed(self._snapshot_log):
+            if fut is not None:
+                fut._unresolve()
+            self._queues.setdefault(j, deque()).appendleft(
+                (packed, fut, self._epoch))
+            self.stats.n_replayed += 1
+        self._snapshot_log = []
+        self._ticks_since_snapshot = 0
+        self.stats.n_rollbacks += 1
+
+    def _handle_apply_failure(self, exc: BaseException, key) -> None:
+        """Roll back and return (the tick swallows the failure; later
+        ticks replay), or quarantine/re-raise when recovery is off the
+        table."""
+        self._failures += 1
+        can_roll = self._snapshot is not None
+        if can_roll and self._failures <= self.max_apply_retries:
+            self._rollback()
+            return
+        if can_roll:
+            self._rollback()  # leave last-good state installed
+        elif not self._jit:
+            # Eager with snapshots disabled: nothing was donated, the
+            # state is intact -- surface the raw error, caller may retry.
+            raise exc
+        self.health = QUARANTINED
+        self.quarantine_error = EngineQuarantinedError(
+            shard_id=None, tick=self.stats.n_ticks, job_ids=key,
+            original=exc)
+        self.stats.n_quarantines += 1
+        raise self.quarantine_error from exc
+
+    def _stall_error(self, job_id: str) -> Optional[Exception]:
+        """Why a zero-progress tick round cannot resolve this job's push:
+        an exception to raise, or None when progress is still possible
+        (e.g. a rollback just re-queued the work)."""
+        if self.health == QUARANTINED:
+            return self.quarantine_error
+        if self._queues.get(job_id):
+            return None
+        return RuntimeError(
+            f"push for job {job_id!r} can never resolve: no queued push "
+            f"remains for it (piece dropped in transit?)")
 
     def drain(self, only=None) -> int:
         """Quiesce: tick until every (selected) queue is empty.  Returns
-        pushes applied."""
+        pushes applied.  A tick round may legitimately apply nothing
+        while a rollback replays, so the loop only stops when the
+        selected queues are actually empty; a quarantined engine raises
+        :class:`~repro.ps.faults.EngineQuarantinedError` out of
+        ``tick``."""
         applied = 0
         while True:
             n = self.tick(only=only)
-            if n == 0:
-                return applied
             applied += n
+            if n:
+                continue
+            if not any(q for j, q in self._queues.items()
+                       if only is None or j in only):
+                return applied
 
     def _build_applier(self, job_ids: Tuple[str, ...]) -> Callable:
         """Compile the batched apply for one combination of pending jobs.
@@ -583,15 +797,25 @@ class ServiceTickEngine:
 # --------------------------------------------------------------- sharded
 class _ShardLane:
     """One shard space's service loop state: its own queues, compiled
-    appliers, and TickStats -- the unit of independent cadence."""
+    appliers, TickStats -- and now its own health, rollback snapshot,
+    and replay log (the unit of independent cadence is also the unit of
+    failure isolation)."""
 
-    __slots__ = ("shard_id", "queues", "appliers", "stats")
+    __slots__ = ("shard_id", "queues", "appliers", "stats", "health",
+                 "quarantine_error", "snapshot", "log",
+                 "ticks_since_snapshot", "failures")
 
     def __init__(self, shard_id: str):
         self.shard_id = shard_id
         self.queues: Dict[str, deque] = {}  # job -> (piece, count, fut, ep)
         self.appliers: Dict[Tuple[str, ...], Callable] = {}
         self.stats = TickStats()
+        self.health = HEALTHY
+        self.quarantine_error: Optional[EngineQuarantinedError] = None
+        self.snapshot = None  # last-good copy of this shard's state
+        self.log: List[Tuple] = []  # (job, piece, count, fut) since copy
+        self.ticks_since_snapshot = 0
+        self.failures = 0  # consecutive failed applies (reset on success)
 
 
 class ShardedTickEngine:
@@ -633,12 +857,17 @@ class ShardedTickEngine:
     def __init__(self, runtime, *, max_staleness: int = 1,
                  queue_capacity: Optional[int] = None, jit: bool = True,
                  interpret: Optional[bool] = None, min_batch_jobs: int = 3,
-                 fleet_tick: str = "fused"):
+                 fleet_tick: str = "fused", snapshot_interval: int = 8,
+                 max_apply_retries: int = 1, fault_injector=None):
         if max_staleness < 0:
             raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
         if fleet_tick not in ("fused", "per_shard"):
             raise ValueError(f"fleet_tick must be 'fused' or 'per_shard', "
                              f"got {fleet_tick!r}")
+        if snapshot_interval < 0:
+            raise ValueError(
+                f"snapshot_interval must be >= 0 (0 disables rollback "
+                f"recovery), got {snapshot_interval}")
         self.runtime = runtime
         self.max_staleness = int(max_staleness)
         self.queue_capacity = (self.max_staleness + 1 if queue_capacity is None
@@ -647,8 +876,14 @@ class ShardedTickEngine:
             raise ValueError("queue_capacity must be >= 1")
         self.min_batch_jobs = int(min_batch_jobs)
         self.fleet_tick = fleet_tick
+        # Per-LANE rollback anchors (see ServiceTickEngine): each shard
+        # lane copies its state every this many of its own applying
+        # ticks, so one shard's failure rolls back (and quarantines) that
+        # lane alone.
+        self.snapshot_interval = int(snapshot_interval)
+        self.max_apply_retries = int(max_apply_retries)
+        self.fault_injector = fault_injector
         self.stats = TickStats()  # fleet-aggregate counters
-        self._poisoned = False
         self._jit = jit
         self._interpret = interpret
         self._epoch = 0
@@ -703,6 +938,47 @@ class ShardedTickEngine:
         """Per-shard TickStats (the autoscaler's load signal)."""
         return {sid: lane.stats for sid, lane in self._lanes.items()}
 
+    # ---------------------------------------------------------- lane health
+    def shard_health(self) -> Dict[str, str]:
+        """Per-lane health: ``'healthy'`` or ``'quarantined'`` (the
+        autoscaler refuses to resize a fleet with a quarantined lane)."""
+        return {sid: lane.health for sid, lane in self._lanes.items()}
+
+    def quarantined_shards(self) -> Tuple[str, ...]:
+        return tuple(sid for sid, lane in self._lanes.items()
+                     if lane.health == QUARANTINED)
+
+    def _quarantine_blocking(
+            self, only=None) -> Optional[EngineQuarantinedError]:
+        """The quarantine error blocking the given jobs (any job when
+        None): set when a quarantined lane still holds matching queued
+        pieces -- no amount of ticking will ever apply them."""
+        for lane in self._lanes.values():
+            if lane.health != QUARANTINED:
+                continue
+            if any(q and (only is None or j in only)
+                   for j, q in lane.queues.items()):
+                return lane.quarantine_error
+        return None
+
+    def _has_pending(self, only=None) -> bool:
+        return any(q and (only is None or j in only)
+                   for lane in self._lanes.values()
+                   for j, q in lane.queues.items())
+
+    def _stall_error(self, job_id: str) -> Optional[Exception]:
+        """Why a zero-progress tick round cannot resolve this job's push:
+        an exception to raise, or None when progress is still possible
+        (e.g. a rollback just re-queued the replay)."""
+        exc = self._quarantine_blocking((job_id,))
+        if exc is not None:
+            return exc
+        if any(lane.queues.get(job_id) for lane in self._lanes.values()):
+            return None
+        return RuntimeError(
+            f"push for job {job_id!r} can never resolve: no queued piece "
+            f"remains for it on any lane (piece dropped in transit?)")
+
     # ------------------------------------------------------------ data path
     def pull(self, job_id: str):
         """The job's parameters gathered across its hosting shards, after
@@ -710,7 +986,12 @@ class ShardedTickEngine:
         layout = self._layout(job_id)
         while self.outstanding(job_id) > self.max_staleness:
             self.stats.n_forced_staleness += 1
-            self.tick()
+            if self.tick() == 0:
+                stall = self._stall_error(job_id)
+                if stall is not None:
+                    # The backlog lives on a quarantined lane: forcing
+                    # more ticks can never drain it.
+                    raise stall
         fn = self._pull_fns.get(job_id)
         if fn is None:
             abstract = self.runtime._jobs[job_id]["abstract"]
@@ -730,9 +1011,19 @@ class ShardedTickEngine:
         count = self._counts[job_id] + 1
         self._counts[job_id] = count
         fut = PushFuture(job_id, self, parts=len(pieces))
+        inj = self.fault_injector
         for sid, piece in zip(layout.shard_ids, pieces):
-            self._lane(sid).queues.setdefault(job_id, deque()).append(
-                (piece, count, fut, self._epoch))
+            action = "deliver" if inj is None else inj.on_push(job_id, sid)
+            if action == "drop":
+                # Lost in transit: the future keeps the part, so it can
+                # never resolve -- result(timeout=...) surfaces it.
+                continue
+            q = self._lane(sid).queues.setdefault(job_id, deque())
+            q.append((piece, count, fut, self._epoch))
+            if action == "duplicate":
+                # At-least-once delivery bug: the copy applies as an
+                # extra untracked piece (fut=None).
+                q.append((piece, count, None, self._epoch))
         return fut
 
     def _force_capacity(self, job_id: str, layout) -> None:
@@ -744,6 +1035,11 @@ class ShardedTickEngine:
                 return
             self.stats.n_forced_capacity += 1
             for sid in full:
+                lane = self._lanes.get(sid)
+                if lane is not None and lane.health == QUARANTINED:
+                    # A full queue on a lane that will never tick again:
+                    # fail the submit instead of spinning forever.
+                    raise lane.quarantine_error
                 self.tick_shard(sid)
 
     def submit_push(self, job_id: str, grads) -> PushFuture:
@@ -768,7 +1064,10 @@ class ShardedTickEngine:
         layout = self._layout(job_id)
         while self.outstanding(job_id) > self.max_staleness:
             self.stats.n_forced_staleness += 1
-            self.tick()
+            if self.tick() == 0:
+                stall = self._stall_error(job_id)
+                if stall is not None:
+                    raise stall
         self._force_capacity(job_id, layout)
         fn = self._grad_fns.get(job_id)
         if fn is None:
@@ -799,15 +1098,11 @@ class ShardedTickEngine:
         """One tick of ONE shard space: pop the head piece of every
         pending job on this lane and apply them in one per-shard pass
         (batched at/above ``min_batch_jobs`` pending jobs).  Other shards
-        are untouched -- this is the independent cadence primitive."""
-        if self._poisoned:
-            raise RuntimeError(
-                "engine poisoned by a failed shard apply: the jitted "
-                "applier donates the shard's state buffers, so they may "
-                "have been deleted mid-tick; restore/re-seed the "
-                "runtime's state and attach a fresh engine")
+        are untouched -- this is the independent cadence primitive, and
+        the unit of failure isolation: a QUARANTINED lane is skipped
+        (returns 0) so its neighbors' cadence never stalls."""
         lane = self._lanes.get(shard_id)
-        if lane is None:
+        if lane is None or lane.health == QUARANTINED:
             return 0
         pending = [j for j in self.runtime._jobs
                    if lane.queues.get(j) and (only is None or j in only)]
@@ -825,6 +1120,7 @@ class ShardedTickEngine:
             lane.stats.n_per_job_dispatch += 1
         else:
             groups = [tuple(pending)]
+        self._maybe_snapshot_lane(lane)
         applied = 0
         for key in groups:
             heads = [lane.queues[j].popleft() for j in key]
@@ -844,33 +1140,101 @@ class ShardedTickEngine:
                     lane.queues[j].appendleft(head)
                 raise
             try:
+                if self.fault_injector is not None:
+                    self.fault_injector.on_apply(shard_id)
                 self.runtime.states[shard_id] = applier(
                     self.runtime.states[shard_id], gs, counts)
-            except BaseException:
+            except BaseException as exc:
                 # Execution failure: the jitted applier DONATED this
-                # shard's buffers -- poison so later ticks fail fast.
+                # shard's buffers.  Re-queue the heads, restore the
+                # lane's last-good snapshot, and replay on later ticks
+                # -- or quarantine THIS LANE ONLY when retries are
+                # exhausted (neighbor lanes keep ticking either way).
+                # The rollback undoes this tick's earlier groups too, so
+                # nothing from this tick survives.
                 for j, head in zip(key, heads):
                     lane.queues[j].appendleft(head)
-                if self._jit:
-                    self._poisoned = True
-                raise
-            for _, count, fut, _ in heads:
-                fut._resolve(count)
-                if fut.done():
+                self._handle_lane_failure(lane, exc, key)
+                lane.stats.n_ticks += 1
+                self.stats.n_ticks += 1
+                return 0
+            lane.failures = 0
+            for j, (piece, count, fut, _) in zip(key, heads):
+                if fut is not None and fut._resolve(count):
                     # The push applied on its LAST hosting shard: commit
                     # the job's global step counter (per-shard states
                     # carry no counts -- the runtime owns them, and a
-                    # checkpoint must see every applied push).
-                    self.runtime.counts[fut.job_id] = jnp.asarray(
-                        count, jnp.int32)
+                    # checkpoint must see every applied push).  Only the
+                    # done-TRANSITION commits: a replayed piece of an
+                    # already-done future must not rewind the counter.
+                    self.runtime.counts[j] = jnp.asarray(count, jnp.int32)
+                lane.log.append((j, piece, count, fut))
             applied += len(key)
         lane.stats.n_ticks += 1
         lane.stats.n_applied += applied
         lane.stats.n_launches += len(groups)
+        lane.ticks_since_snapshot += 1
         self.stats.n_ticks += 1
         self.stats.n_applied += applied
         self.stats.n_launches += len(groups)
         return applied
+
+    # ------------------------------------------------------- fault recovery
+    def _maybe_snapshot_lane(self, lane: _ShardLane) -> None:
+        """Refresh this lane's rollback anchor every ``snapshot_interval``
+        of ITS applying ticks, BEFORE the donated apply (queues intact,
+        replay log emptied: snapshot + log reconstructs any later
+        moment)."""
+        if self.snapshot_interval <= 0:
+            return
+        if (lane.snapshot is None
+                or lane.ticks_since_snapshot >= self.snapshot_interval):
+            lane.snapshot = _copy_state(self.runtime.states[lane.shard_id])
+            lane.log = []
+            lane.ticks_since_snapshot = 0
+            lane.stats.n_snapshots += 1
+            self.stats.n_snapshots += 1
+
+    def _rollback_lane(self, lane: _ShardLane) -> None:
+        """Restore the lane's last-good state and re-queue its logged
+        pieces IN FRONT of the queued backlog (per-job order preserved):
+        subsequent ticks replay the identical (piece, count) sequence,
+        which is bit-exact because counts were fixed at submit time."""
+        self.runtime.states[lane.shard_id] = _copy_state(lane.snapshot)
+        for j, piece, count, fut in reversed(lane.log):
+            if fut is not None:
+                fut._unresolve()
+            lane.queues.setdefault(j, deque()).appendleft(
+                (piece, count, fut, self._epoch))
+            lane.stats.n_replayed += 1
+            self.stats.n_replayed += 1
+        lane.log = []
+        lane.ticks_since_snapshot = 0
+        lane.stats.n_rollbacks += 1
+        self.stats.n_rollbacks += 1
+
+    def _handle_lane_failure(self, lane: _ShardLane, exc: BaseException,
+                             key) -> None:
+        """Roll the lane back for replay, or quarantine it (stored, NOT
+        raised: the point is that sibling lanes keep ticking -- blocked
+        work surfaces the stored error via drain/pull/result)."""
+        lane.failures += 1
+        can_roll = lane.snapshot is not None
+        if can_roll and lane.failures <= self.max_apply_retries:
+            self._rollback_lane(lane)
+            return
+        if can_roll:
+            self._rollback_lane(lane)  # leave last-good state installed
+        elif not self._jit:
+            # Eager with snapshots disabled: nothing was donated, the
+            # shard state is intact -- surface the raw error.
+            raise exc
+        lane.health = QUARANTINED
+        lane.quarantine_error = EngineQuarantinedError(
+            shard_id=lane.shard_id, tick=lane.stats.n_ticks, job_ids=key,
+            original=exc)
+        lane.stats.n_quarantines += 1
+        self.stats.n_quarantines += 1
 
     def tick(self, only=None) -> int:
         """One ROUND over the fleet.  With ``fleet_tick="fused"`` (the
@@ -892,21 +1256,18 @@ class ShardedTickEngine:
         EVERY lane and apply all of them in ONE fused launch over the
         pending lanes' concatenated states.  Lanes with nothing pending
         are skipped mid-table -- they contribute neither state movement
-        nor launch cost, and their cadence is untouched.  Returns pieces
-        applied across the fleet (0 = nothing pending anywhere)."""
-        if self._poisoned:
-            raise RuntimeError(
-                "engine poisoned by a failed fleet apply: the jitted "
-                "applier donates every pending shard's state buffers, so "
-                "they may have been deleted mid-tick; restore/re-seed "
-                "the runtime's state and attach a fresh engine")
+        nor launch cost, and their cadence is untouched.  QUARANTINED
+        lanes are excluded the same way (their backlog is frozen until
+        recovery), so one dead shard never blocks the fleet launch.
+        Returns pieces applied across the fleet (0 = nothing pending
+        anywhere)."""
         plan = self.plan
         if plan is None:
             return 0
         entries = []
         for sid in plan.shard_ids:
             lane = self._lanes.get(sid)
-            if lane is None:
+            if lane is None or lane.health == QUARANTINED:
                 continue
             pending = tuple(
                 j for j in self.runtime._jobs
@@ -933,6 +1294,11 @@ class ShardedTickEngine:
             if len(self._fleet_appliers) >= self.MAX_APPLIERS:
                 self._fleet_appliers.pop(next(iter(self._fleet_appliers)))
             self._fleet_appliers[key] = applier
+        # Snapshot every participating lane BEFORE popping: queues are
+        # intact, so each lane's (snapshot, empty log) anchors a rollback
+        # of this very launch.
+        for sid, _ in key:
+            self._maybe_snapshot_lane(self._lanes[sid])
         popped = []  # (sid, job, head) in key order == table order
         for sid, jobs in key:
             lane = self._lanes[sid]
@@ -942,29 +1308,60 @@ class ShardedTickEngine:
         counts = tuple(head[1] for _, _, head in popped)
         states = tuple(self.runtime.states[sid] for sid, _ in key)
         try:
+            if self.fault_injector is not None:
+                for sid, _ in key:
+                    self.fault_injector.on_apply(sid)
             new_states = applier(states, gs, counts)
-        except BaseException:
+        except BaseException as exc:
             # Execution failure: the jitted applier DONATED every pending
-            # shard's buffers -- re-queue the heads so the pieces stay
-            # inspectable and poison so later ticks fail fast.
+            # shard's buffers, and the fused launch cannot attribute
+            # WHICH lane blew up.  Re-queue the heads, roll back every
+            # participating lane to its own snapshot, then FALL BACK to
+            # per-shard launches: the faulty lane fails (and retries or
+            # quarantines) in isolation while the healthy rest re-apply.
             for sid, j, head in popped:
                 self._lanes[sid].queues[j].appendleft(head)
-            if self._jit:
-                self._poisoned = True
-            raise
+            if self.snapshot_interval <= 0:
+                # No rollback anchors.  Jitted buffers are gone for every
+                # participating lane: quarantine them all (the pre-PR-7
+                # poisoned behavior, scoped to the participants); eager
+                # states are intact, so surface the raw error.
+                if not self._jit:
+                    raise
+                for sid, jobs in key:
+                    lane = self._lanes[sid]
+                    lane.health = QUARANTINED
+                    lane.quarantine_error = EngineQuarantinedError(
+                        shard_id=sid, tick=lane.stats.n_ticks,
+                        job_ids=jobs, original=exc)
+                    lane.stats.n_quarantines += 1
+                    self.stats.n_quarantines += 1
+                self.stats.n_ticks += 1
+                return 0
+            self.stats.n_fleet_fallbacks += 1
+            for sid, _ in key:
+                self._rollback_lane(self._lanes[sid])
+            applied = 0
+            for sid, _ in key:
+                applied += self.tick_shard(sid)
+            self.stats.n_ticks += 1
+            return applied
         for (sid, _), st in zip(key, new_states):
             self.runtime.states[sid] = st
-        for _, _, (_, count, fut, _) in popped:
-            fut._resolve(count)
-            if fut.done():
+        for sid, j, (piece, count, fut, _) in popped:
+            lane = self._lanes[sid]
+            lane.failures = 0
+            if fut is not None and fut._resolve(count):
                 # Applied on its LAST hosting shard: commit the job's
-                # global step counter (the runtime owns counts).
-                self.runtime.counts[fut.job_id] = jnp.asarray(
-                    count, jnp.int32)
+                # global step counter (the runtime owns counts); only
+                # the done-transition commits (replay never rewinds).
+                self.runtime.counts[j] = jnp.asarray(count, jnp.int32)
+            lane.log.append((j, piece, count, fut))
         for sid, jobs in key:
             lane = self._lanes[sid]
             lane.stats.n_ticks += 1
             lane.stats.n_applied += len(jobs)
+            lane.ticks_since_snapshot += 1
         self.stats.n_ticks += 1
         self.stats.n_applied += len(popped)
         self.stats.n_launches += 1  # the whole point: ONE launch per fleet
@@ -972,17 +1369,29 @@ class ShardedTickEngine:
 
     def drain(self, only=None) -> int:
         """Tick rounds until every (selected) queue on every lane is
-        empty.  Returns pieces applied."""
+        empty.  Returns pieces applied.  A round may apply nothing while
+        a rollback replays (the loop keeps ticking); pieces stuck on a
+        QUARANTINED lane can never drain, so that raises the lane's
+        :class:`~repro.ps.faults.EngineQuarantinedError` instead of
+        spinning forever."""
         applied = 0
         while True:
             n = self.tick(only=only)
-            if n == 0:
-                return applied
             applied += n
+            if n:
+                continue
+            stuck = self._quarantine_blocking(only)
+            if stuck is not None:
+                raise stuck
+            if not self._has_pending(only):
+                return applied
 
     def quiesce_for_replan(self, touched) -> int:
         """Drain ONLY the touched jobs' pieces (on every lane) ahead of a
-        sharded migration; untouched lanes and jobs keep their cadence."""
+        sharded migration; untouched lanes and jobs keep their cadence.
+        Raises the blocking lane's quarantine error if a touched piece is
+        frozen on a dead lane (recover_shard purges the lost lane first,
+        so this only fires on user-driven replans of a broken fleet)."""
         applied = 0
         while True:
             pending = [j for j in touched
@@ -991,7 +1400,12 @@ class ShardedTickEngine:
             if not pending:
                 return applied
             self.stats.n_forced_replan += 1
-            applied += self.tick(only=pending)
+            n = self.tick(only=pending)
+            applied += n
+            if n == 0:
+                stuck = self._quarantine_blocking(pending)
+                if stuck is not None:
+                    raise stuck
 
     # --------------------------------------------------------------- replan
     def _on_plan_change(self, touched=None) -> None:
@@ -1009,6 +1423,14 @@ class ShardedTickEngine:
         # concatenated-view offsets, so any plan change invalidates all
         # of them (per-lane appliers survive for untouched jobs).
         self._fleet_appliers.clear()
+        # Lane snapshots copy the PRE-migration shard geometry: restoring
+        # one after a replan would resurrect dead layouts.  Drop them all
+        # (health survives -- a quarantined lane stays quarantined); the
+        # rollback window restarts at each lane's next applying tick.
+        for lane in self._lanes.values():
+            lane.snapshot = None
+            lane.log = []
+            lane.ticks_since_snapshot = 0
         if touched is None:
             assert not any(q for lane in self._lanes.values()
                            for q in lane.queues.values()), (
@@ -1052,9 +1474,11 @@ class ShardedTickEngine:
             q = lane.queues.pop(job_id, None)
             if q:
                 for _, _, fut, _ in q:
-                    fut._cancel(
-                        "job removed from the runtime with this piece "
-                        "still queued (drain was bypassed)")
+                    if fut is not None:
+                        fut._cancel(
+                            "job removed from the runtime with this piece "
+                            "still queued (drain was bypassed)")
+            lane.log = [e for e in lane.log if e[0] != job_id]
             lane.appliers = {k: v for k, v in lane.appliers.items()
                              if job_id not in k}
         self._fleet_appliers = {

@@ -47,10 +47,14 @@ size set by the control plane (and by the load-driven
 
 from __future__ import annotations
 
+from collections import deque
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.ps.faults import QUARANTINED
 
 from repro.ps.elastic import (
     compile_migration_delta,
@@ -311,6 +315,36 @@ def _debug_stats(rt, extra_runtime: Dict[str, Any],
     return out
 
 
+@dataclass(frozen=True)
+class RecoveryReport:
+    """What one :meth:`ShardedServiceRuntime.recover_shard` call did.
+
+    ``seeded_from`` names where the re-hosted segments' values came from:
+    ``"snapshot"`` (the quarantined lane's state was restored to its
+    last-good snapshot when it stopped -- the normal path, at most
+    ``snapshot_interval`` ticks of rollback), ``"live"`` (the shard was
+    healthy: a proactive decommission, no rollback at all), or
+    ``"zeros"`` (quarantined with snapshots disabled under jit: the
+    donated buffers are unrecoverable and the segments re-seed empty).
+    ``rolled_back_pushes`` counts futures whose observed result was
+    discarded with the lost lane (their ``rolled_back`` flag is set);
+    ``cancelled_pushes`` counts still-pending pushes that can never
+    apply (their futures raise); ``purged_sibling_pieces`` counts queued
+    pieces removed from HEALTHY lanes because a sibling piece of the
+    same push died with the victim (a push applies everywhere or
+    nowhere).
+    """
+
+    shard_id: str
+    seeded_from: str  # 'snapshot' | 'live' | 'zeros'
+    rolled_back_pushes: int
+    cancelled_pushes: int
+    purged_sibling_pieces: int
+    rehosted_segments: int
+    rehosted_elements: int
+    moved_tasks: int
+
+
 def _init_shard_state(shard_plan: FlatPlan, needs_ef: bool = False):
     """Empty state for ONE shard space (no per-job counters: those are
     global to a job and live on the sharded runtime, not in any shard)."""
@@ -436,7 +470,8 @@ class ShardedServiceRuntime:
         eng = self._engine
         return _debug_stats(
             self, {"n_shards": self.n_shards},
-            shards=({sid: dataclasses.asdict(lane.stats)
+            shards=({sid: {**dataclasses.asdict(lane.stats),
+                           "health": lane.health}
                      for sid, lane in eng._lanes.items()}
                     if eng is not None else {}))
 
@@ -549,6 +584,98 @@ class ShardedServiceRuntime:
         return _unpack_slots(layout, packed,
                              self._jobs[job_id]["abstract"])
 
+    # ------------------------------------------------------------- recovery
+    def recover_shard(self, agg_id: str) -> RecoveryReport:
+        """Declare ONE Aggregator lost and re-host its segments on the
+        surviving fleet -- the paper's §3.3 migration machinery used as
+        the repair primitive.
+
+        Works on a QUARANTINED lane (the usual path after an exec
+        failure exhausted its retries: its state was already restored to
+        the last-good snapshot when it stopped, so clients observe at
+        most ``snapshot_interval`` ticks of rollback) or on a healthy
+        shard (proactive decommission: queued pushes drain first and the
+        LIVE state migrates, no rollback).  Pushes inside the rollback
+        window surface it on their futures: already-observed results get
+        ``rolled_back=True`` (re-push to land the update again),
+        still-pending ones are cancelled, and sibling pieces of
+        cancelled pushes are purged from healthy lanes so no push ever
+        half-applies.  The re-host itself is an ordinary control-plane
+        replan (``service.evacuate_aggregator``), so untouched jobs tick
+        straight through it and the moved segments ride the O(moved
+        bytes) sharded delta path.
+        """
+        if self.splan is None or agg_id not in self.splan.shard_ids:
+            raise ValueError(
+                f"unknown shard {agg_id!r}: not in the live fleet "
+                f"(have {list(self.shard_ids)})")
+        old_sp = self.splan.shard_of(agg_id)
+        seeded_from = "live"
+        rolled_back = cancelled = purged = 0
+        eng = self._engine
+        if eng is not None:
+            lane = eng._lanes.get(agg_id)
+            if lane is not None and lane.health != QUARANTINED:
+                # Proactive decommission: land what's queued before the
+                # shard leaves (its state is still good).
+                while any(lane.queues.values()):
+                    if eng.tick_shard(agg_id) == 0:
+                        break  # staleness-stuck leftovers cancel below
+            lane = eng._lanes.pop(agg_id, None)
+        else:
+            lane = None
+        if lane is not None:
+            if lane.health == QUARANTINED:
+                seeded_from = ("snapshot" if lane.snapshot is not None
+                               else "zeros")
+                if lane.snapshot is None:
+                    # Quarantined with snapshots disabled under jit: the
+                    # donated buffers are gone for good -- the segments
+                    # can only re-seed empty.
+                    self.states[agg_id] = _init_shard_state(old_sp)
+            # The rollback window's pushes sit re-queued on the dead
+            # lane.  DONE futures already surfaced a result that the
+            # snapshot restore discarded -> flag rolled_back; pending
+            # ones can never apply -> cancel, and purge their sibling
+            # pieces from healthy lanes (a push applies everywhere or
+            # nowhere).
+            dead_futs = set()
+            for q in lane.queues.values():
+                for _, _, fut, _ in q:
+                    if fut is None:
+                        continue
+                    if fut.done():
+                        if not fut._rolled_back:
+                            fut._rolled_back = True
+                            rolled_back += 1
+                    elif not fut.cancelled():
+                        fut._cancel(
+                            f"shard {agg_id!r} was lost with this piece "
+                            f"queued (inside its rollback window); "
+                            f"re-push after recovery")
+                        cancelled += 1
+                        dead_futs.add(id(fut))
+            if dead_futs and eng is not None:
+                for other in eng._lanes.values():
+                    for j, q in list(other.queues.items()):
+                        kept = deque(
+                            e for e in q
+                            if e[2] is None or id(e[2]) not in dead_futs)
+                        purged += len(q) - len(kept)
+                        other.queues[j] = kept
+        # One control-plane replan does the rest: the victim's tasks move
+        # to survivors, the new ShardedPlan drops its shard, and
+        # migrate_sharded_state copies its (restored) segments onto the
+        # new hosts.
+        moved_tasks = self.service.evacuate_aggregator(agg_id)
+        return RecoveryReport(
+            shard_id=agg_id, seeded_from=seeded_from,
+            rolled_back_pushes=rolled_back, cancelled_pushes=cancelled,
+            purged_sibling_pieces=purged,
+            rehosted_segments=len(old_sp.segments),
+            rehosted_elements=old_sp.payload_elements,
+            moved_tasks=moved_tasks)
+
     # ----------------------------------------------------------- checkpoint
     def save_checkpoint(self, directory, step: int, **kw):
         """Commit (shard map, every shard space, per-job step counters)
@@ -558,6 +685,10 @@ class ShardedServiceRuntime:
 
         if self._engine is not None:
             self._engine.drain()
+        if self._engine is not None and "extra_aux" not in kw:
+            # Record fleet health at save time: a restore tool can warn
+            # when the checkpoint was taken on a degraded fleet.
+            kw["extra_aux"] = {"shard_health": self._engine.shard_health()}
         return save_sharded_checkpoint(
             directory, step, self.splan, self.states, self.counts, **kw)
 
@@ -599,7 +730,9 @@ class ShardedServiceRuntime:
                 engine.quiesce_for_replan(
                     [j for j in touched_pre if j in self._jobs])
             self.states, moved_elems, touched_exec = migrate_sharded_state(
-                self.states, old, new)
+                self.states, old, new,
+                fault_injector=(engine.fault_injector
+                                if engine is not None else None))
             self.last_relayout_bytes = moved_elems * 12
             self.total_relayout_bytes += self.last_relayout_bytes
             touched = set(touched_exec)

@@ -1,0 +1,374 @@
+"""Fault tolerance (PR 7): deterministic fault injection, snapshot-based
+rollback recovery, per-lane quarantine, and shard-loss recovery.
+
+Parity notes.  All recovered-vs-oracle comparisons run EAGER at
+``max_staleness=0``: rollback replays the identical (piece, count)
+sequence through the identical appliers, so a recovered trajectory must
+match a fault-free twin bit for bit -- any divergence is a recovery bug,
+not rounding.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParameterService
+from repro.ps.autoscaler import AutoscalerConfig, ElasticScaler
+from repro.ps.faults import (
+    HEALTHY,
+    QUARANTINED,
+    EngineQuarantinedError,
+    FaultInjector,
+    InjectedFault,
+)
+from repro.ps.service_runtime import (
+    RecoveryReport,
+    ServiceRuntime,
+    ShardedServiceRuntime,
+)
+
+
+def _tree(key, sizes):
+    ks = jax.random.split(key, len(sizes))
+    return {f"t{i}": jax.random.normal(k, (n,))
+            for i, (k, n) in enumerate(zip(ks, sizes))}
+
+
+def _loss(params, batch):
+    return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+               for k in params)
+
+
+TREES = {
+    "a": _tree(jax.random.PRNGKey(0), (48, 16, 32)),
+    "b": _tree(jax.random.PRNGKey(1), (32, 16)),
+    "c": _tree(jax.random.PRNGKey(2), (48, 16)),
+}
+TARGETS = {j: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+           for j, t in TREES.items()}
+
+
+def _add_jobs(rt, trees=TREES):
+    for jid, t in trees.items():
+        nbytes = sum(4 * v.size for v in t.values())
+        rt.add_job(jid, t, _loss, lr=0.05, required_servers=1,
+                   agg_throughput=nbytes / 0.2)
+
+
+def _flat(trees=TREES, **engine_opts):
+    rt = ServiceRuntime(
+        ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16),
+        jit=False)
+    engine_opts.setdefault("max_staleness", 0)
+    eng = rt.attach_engine(jit=False, **engine_opts)
+    _add_jobs(rt, trees)
+    return rt, eng
+
+
+def _sharded(n_shards=3, trees=TREES, **engine_opts):
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+    rt = ShardedServiceRuntime(svc, jit=False)
+    engine_opts.setdefault("max_staleness", 0)
+    eng = rt.attach_engine(jit=False, **engine_opts)
+    _add_jobs(rt, trees)
+    if n_shards > 1:
+        svc.scale_out(n_shards - 1)
+    return rt, eng
+
+
+def _drive(eng, n, trees=TREES):
+    for _ in range(n):
+        for j in trees:
+            eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+
+
+def _assert_params_equal(rt_a, rt_b, jobs=TREES):
+    for j in jobs:
+        pa, pb = rt_a.params_of(j), rt_b.params_of(j)
+        for k in pa:
+            np.testing.assert_array_equal(np.asarray(pa[k]),
+                                          np.asarray(pb[k]))
+
+
+# --------------------------------------------------------------- injector
+def test_injector_schedule_is_deterministic():
+    def fire_points(inj):
+        hits = []
+        for i in range(1, 25):
+            try:
+                inj.on_apply("s0")
+            except InjectedFault:
+                hits.append(i)
+        return hits
+
+    a = FaultInjector(seed=3).random_apply_faults(4, ["s0"])
+    b = FaultInjector(seed=3).random_apply_faults(4, ["s0"])
+    assert [(r.kind, r.shard_id, r.at) for r in a.rules] == \
+        [(r.kind, r.shard_id, r.at) for r in b.rules]
+    assert fire_points(a) == fire_points(b)
+    assert a.n_fired == len(a.log) > 0
+
+
+def test_injector_rules_match_shard_and_occurrence():
+    inj = FaultInjector()
+    inj.fail_apply("s1", at=2)
+    inj.on_apply("s1")  # occurrence 1: armed at 2, no fire
+    inj.on_apply("s0")  # different lane: not even counted
+    with pytest.raises(InjectedFault) as ei:
+        inj.on_apply("s1")
+    assert ei.value.kind == "fail_apply"
+    assert ei.value.shard_id == "s1"
+    assert ei.value.occurrence == 2
+    inj.on_apply("s1")  # times=1: spent
+    # kill = permanent
+    inj.kill_shard("s0", at=1)
+    for _ in range(3):
+        with pytest.raises(InjectedFault):
+            inj.on_apply("s0")
+    # push rules return an action instead of raising
+    inj.drop_push(job_id="a", at=1)
+    assert inj.on_push("b") == "deliver"
+    assert inj.on_push("a") == "drop"
+    assert inj.on_push("a") == "deliver"
+    inj.duplicate_push(job_id="a", at=1)
+    assert inj.on_push("a") == "duplicate"
+
+
+# ------------------------------------------------------ flat engine faults
+def test_flat_transient_fault_recovers_bit_exact():
+    inj = FaultInjector()
+    inj.fail_apply(at=4).fail_apply(at=9)
+    rt, eng = _flat(snapshot_interval=4, fault_injector=inj)
+    twin, teng = _flat(snapshot_interval=4)
+    _drive(eng, 8)
+    _drive(teng, 8)
+    assert inj.n_fired == 2
+    assert eng.stats.n_rollbacks >= 2
+    assert eng.stats.n_replayed >= 2
+    assert eng.stats.n_quarantines == 0
+    assert eng.health == HEALTHY
+    _assert_params_equal(rt, twin)
+
+
+def test_flat_persistent_fault_quarantines_with_context():
+    inj = FaultInjector()
+    inj.kill_shard(None, at=3)  # the flat engine's single unnamed lane
+    rt, eng = _flat(snapshot_interval=4, max_apply_retries=1,
+                    fault_injector=inj)
+    with pytest.raises(EngineQuarantinedError) as ei:
+        _drive(eng, 6)
+    err = ei.value
+    assert eng.health == QUARANTINED
+    assert err.shard_id is None
+    assert err.tick >= 0
+    assert set(err.job_ids) <= set(TREES)
+    assert isinstance(err.original, InjectedFault)
+    # Every subsequent tick/drain re-raises the SAME carried context.
+    with pytest.raises(EngineQuarantinedError) as again:
+        eng.tick()
+    assert again.value is err
+    with pytest.raises(EngineQuarantinedError):
+        eng.drain()
+
+
+def test_flat_eager_without_snapshots_reraises_original():
+    inj = FaultInjector()
+    inj.fail_apply(at=1)
+    rt, eng = _flat(snapshot_interval=0, fault_injector=inj)
+    # No snapshot to roll back to, eager buffers intact: the original
+    # fault propagates (pre-PR-7 behavior minus the poisoning).
+    with pytest.raises(InjectedFault):
+        _drive(eng, 2)
+
+
+# -------------------------------------------------- sharded engine faults
+def test_sharded_transient_fault_fleet_falls_back_bit_exact():
+    inj = FaultInjector()
+    rt, eng = _sharded(fault_injector=inj, snapshot_interval=4)
+    twin, teng = _sharded(snapshot_interval=4)
+    victim = rt.shard_ids[-1]
+    inj.fail_apply(victim, at=2)
+    _drive(eng, 8)
+    _drive(teng, 8)
+    assert inj.n_fired == 1
+    # The fused fleet launch cannot attribute the failure: it rolls every
+    # participant back and replays per shard.
+    assert eng.stats.n_fleet_fallbacks >= 1
+    assert eng.stats.n_rollbacks >= 1
+    assert eng.stats.n_quarantines == 0
+    assert set(eng.shard_health().values()) == {HEALTHY}
+    _assert_params_equal(rt, twin)
+
+
+def test_quarantine_isolates_one_lane_neighbors_tick_on():
+    inj = FaultInjector()
+    rt, eng = _sharded(fault_injector=inj)
+    victim = rt.shard_ids[-1]
+    inj.kill_shard(victim, at=2)
+    with pytest.raises(EngineQuarantinedError) as ei:
+        _drive(eng, 12)
+    assert ei.value.shard_id == victim
+    assert eng.shard_health()[victim] == QUARANTINED
+    assert eng.quarantined_shards() == (victim,)
+    # Jobs with no blocks on the dead shard keep training.
+    untouched = [j for j in TREES
+                 if victim not in rt.splan.job_layout(j).shard_ids]
+    assert untouched, "placement left no job off the victim shard"
+    before = eng.stats.n_applied
+    for _ in range(4):
+        for j in untouched:
+            eng.step(j, {"target": TARGETS[j]})
+    assert eng.stats.n_applied > before
+    for sid, health in eng.shard_health().items():
+        if sid != victim:
+            assert health == HEALTHY
+    # Engine-wide drain is blocked on the dead lane's queued pieces and
+    # says WHICH lane, but a drain scoped to untouched jobs succeeds.
+    with pytest.raises(EngineQuarantinedError) as de:
+        eng.drain()
+    assert de.value.shard_id == victim
+    eng.drain(only=untouched)
+
+
+def test_chaos_seeded_schedules_recover_bit_exact():
+    # Property-style: seeded random transient schedules over the job mix
+    # must always recover to the fault-free trajectory at s=0.
+    for seed in range(4):
+        inj = FaultInjector(seed=seed)
+        rt, eng = _sharded(fault_injector=inj, snapshot_interval=4,
+                           max_apply_retries=3)
+        twin, teng = _sharded(snapshot_interval=4)
+        inj.random_apply_faults(3, rt.shard_ids, max_at=15)
+        _drive(eng, 10)
+        _drive(teng, 10)
+        assert eng.stats.n_quarantines == 0, f"seed {seed} quarantined"
+        _assert_params_equal(rt, twin)
+        if inj.n_fired:
+            assert eng.stats.n_rollbacks >= 1
+
+
+# ----------------------------------------------------- push-piece faults
+def test_dropped_piece_times_out_push_future():
+    inj = FaultInjector()
+    rt, eng = _sharded(fault_injector=inj, max_staleness=8)
+    job = "a"
+    inj.drop_push(job_id=job, at=1)
+    grads = jax.tree_util.tree_map(jnp.ones_like, TREES[job])
+    fut = eng.submit_push(job, grads)
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0.2)
+    assert time.monotonic() - t0 < 5.0
+    assert not fut.done()
+
+
+def test_duplicate_piece_applies_untracked():
+    inj = FaultInjector()
+    rt, eng = _sharded(fault_injector=inj, max_staleness=8)
+    job = "a"
+    inj.duplicate_push(job_id=job, at=1)
+    grads = jax.tree_util.tree_map(jnp.ones_like, TREES[job])
+    fut = eng.submit_push(job, grads)
+    step = fut.result()
+    assert step == 1
+    applied_before = eng.stats.n_applied
+    eng.drain()  # the duplicate is an extra untracked piece
+    assert eng.stats.n_applied >= applied_before
+    assert not any(q for lane in eng._lanes.values()
+                   for q in lane.queues.values())
+
+
+# -------------------------------------------------- shard-loss recovery
+def test_recover_shard_rehosts_and_training_continues():
+    inj = FaultInjector()
+    rt, eng = _sharded(fault_injector=inj, snapshot_interval=4)
+    victim = rt.shard_ids[-1]
+    inj.kill_shard(victim, at=2)
+    with pytest.raises(EngineQuarantinedError):
+        _drive(eng, 10)
+    n_before = rt.n_shards
+    report = rt.recover_shard(victim)
+    assert isinstance(report, RecoveryReport)
+    assert report.shard_id == victim
+    assert report.seeded_from == "snapshot"
+    assert report.moved_tasks >= 1
+    assert report.rehosted_elements > 0
+    assert rt.n_shards == n_before - 1
+    assert victim not in rt.shard_ids
+    assert victim not in eng._lanes
+    # The rollback window is bounded: at most snapshot_interval ticks of
+    # pushes were discarded or cancelled with the lane.
+    assert (report.rolled_back_pushes + report.cancelled_pushes
+            <= 4 * len(TREES) + len(TREES))
+    # The fleet is whole again: every job trains and drains.
+    _drive(eng, 3)
+    assert set(eng.shard_health().values()) == {HEALTHY}
+
+
+def test_recover_healthy_shard_is_a_lossless_decommission():
+    rt, eng = _sharded()
+    _drive(eng, 4)
+    params_before = {j: rt.params_of(j) for j in TREES}
+    victim = rt.shard_ids[-1]
+    report = rt.recover_shard(victim)
+    assert report.seeded_from == "live"
+    assert report.rolled_back_pushes == 0
+    assert report.cancelled_pushes == 0
+    for j in TREES:
+        after = rt.params_of(j)
+        for k in after:
+            np.testing.assert_array_equal(np.asarray(after[k]),
+                                          np.asarray(params_before[j][k]))
+    _drive(eng, 2)
+
+
+def test_recover_shard_unknown_id_raises():
+    rt, _ = _sharded()
+    with pytest.raises(ValueError, match="unknown shard"):
+        rt.recover_shard("nope/agg9")
+
+
+# --------------------------------------------------- scaler + migration
+def test_autoscaler_holds_on_quarantined_fleet():
+    inj = FaultInjector()
+    rt, eng = _sharded(fault_injector=inj)
+    victim = rt.shard_ids[-1]
+    scaler = ElasticScaler(rt, AutoscalerConfig(
+        shard_capacity=1.0, max_shards=8, cooldown=1))
+    inj.kill_shard(victim, at=1)
+    with pytest.raises(EngineQuarantinedError):
+        _drive(eng, 8)
+    n_before = rt.n_shards
+    decision = scaler.observe()  # load >> capacity, would grow
+    assert decision.quarantined == (victim,)
+    assert decision.action == "hold"
+    assert rt.n_shards == n_before
+    # Recovered fleet scales again.
+    rt.recover_shard(victim)
+    _drive(eng, 4)
+    decision = scaler.observe()
+    assert decision.quarantined == ()
+    assert decision.action == "grow"
+
+
+def test_migration_fault_hook_fires_on_replan():
+    inj = FaultInjector()
+    rt, eng = _sharded(n_shards=2, fault_injector=inj)
+    inj.fail_migration(at=1)
+    with pytest.raises(InjectedFault) as ei:
+        rt.service.scale_out(1)
+    assert ei.value.kind == "fail_migration"
+
+
+def test_checkpoint_records_shard_health(tmp_path):
+    from repro.checkpoint.checkpoint import load_aux
+
+    rt, eng = _sharded(n_shards=2)
+    _drive(eng, 2)
+    rt.save_checkpoint(tmp_path, step=1)
+    aux = load_aux(tmp_path, 1)
+    assert aux["shard_health"] == {sid: HEALTHY for sid in rt.shard_ids}
