@@ -32,6 +32,7 @@ MODULES = [
     ("appd", "appd_interference"),
     ("roofline", "roofline"),
     ("recovery", "recovery"),
+    ("wire", "wire_path"),
 ]
 
 

@@ -1,0 +1,246 @@
+"""Wire-efficient push/pull (PR 8): compressed pushes through the tick
+engines and versioned parameter-diff pulls.
+
+Four sections, all on REAL engines (eager, CPU):
+
+* ``push``: transfer bytes of an identical push workload under fp32,
+  bf16, and int8 -- straight from the engines' ``TickStats`` byte
+  counters (``wire_bytes`` model: int8 ships 1B/elem + one fp32 scale
+  per 2048-block).  The acceptance row asserts int8 <= 0.5x fp32.
+
+* ``convergence``: the price of those bytes.  The same quadratic
+  workload trains to convergence uncompressed and int8-compressed with
+  error feedback; the gap between final losses must stay within the
+  documented tolerance (EF-SGD keeps the compressed chain convergent --
+  the gap is quantization noise, not divergence).
+
+* ``pull``: versioned diff pulls vs dirty fraction.  K co-resident jobs
+  share the engine; a reader holds a version vector per job and only a
+  ``dirty_fraction`` subset of jobs steps between pull rounds.  Diff
+  bytes must track the dirty fraction of full-pull bytes (untouched
+  jobs cost ~0: a vector compare and an empty diff).
+
+* ``parity``: compression-off fused fleet tick vs the sequential
+  ``ShardedServiceRuntime.step`` oracle, bit-exact -- the compressed
+  path must be invisible when no job opts in.
+
+Run: PYTHONPATH=src python benchmarks/run.py --only wire \
+         --json BENCH_wire.json
+"""
+
+import os
+
+CONVERGENCE_GAP_TOL = 0.05  # |loss_int8 - loss_fp32| <= tol * (1 + loss_fp32)
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("HOTPATH_SMOKE"))
+
+
+def _trees():
+    import jax
+
+    def tree(key, sizes):
+        ks = jax.random.split(key, len(sizes))
+        return {f"t{i}": jax.random.normal(k, (n,))
+                for i, (k, n) in enumerate(zip(ks, sizes))}
+
+    return {
+        "a": tree(jax.random.PRNGKey(0), (96, 32, 64)),
+        "b": tree(jax.random.PRNGKey(1), (64, 32)),
+        "c": tree(jax.random.PRNGKey(2), (48, 16)),
+    }
+
+
+def _loss():
+    import jax.numpy as jnp
+
+    def loss(params, batch):
+        return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+                   for k in params)
+
+    return loss
+
+
+def _build(n_shards=3, compression=None, trees=None, **engine_opts):
+    """Sharded runtime + engine; ``compression`` applies to EVERY job."""
+    import jax
+
+    from repro.core import ParameterService
+    from repro.ps.service_runtime import ShardedServiceRuntime
+
+    trees = _trees() if trees is None else trees
+    targets = {j: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+               for j, t in trees.items()}
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+    rt = ShardedServiceRuntime(svc, jit=False)
+    eng = rt.attach_engine(max_staleness=0, jit=False, **engine_opts)
+    for jid, t in trees.items():
+        nb = sum(4 * v.size for v in t.values())
+        rt.add_job(jid, t, _loss(), lr=0.05, required_servers=1,
+                   agg_throughput=nb / 0.2,
+                   **({"push_compression": compression}
+                      if compression else {}))
+    if n_shards > 1:
+        svc.scale_out(n_shards - 1)
+    return rt, eng, targets
+
+
+def _run_steps(eng, targets, n):
+    for _ in range(n):
+        for j in targets:
+            eng.step(j, {"target": targets[j]})
+    eng.drain()
+
+
+def _push_rows():
+    n_steps = 8 if _smoke() else 30
+    stats = {}
+    for kind in (None, "bf16", "int8"):
+        rt, eng, targets = _build(compression=kind)
+        _run_steps(eng, targets, n_steps)
+        stats[kind] = (eng.stats.push_bytes_raw, eng.stats.push_bytes_wire)
+    raw = stats[None][0]
+    assert raw == stats[None][1], "uncompressed wire must equal raw"
+    r_bf16 = stats["bf16"][1] / raw
+    r_int8 = stats["int8"][1] / raw
+    return [
+        ("wire/push_bytes_fp32", str(stats[None][1]),
+         f"{n_steps} step rounds x 3 jobs, uncompressed (raw fp32)"),
+        ("wire/push_bytes_bf16", str(stats["bf16"][1]),
+         "same workload, push_compression='bf16'"),
+        ("wire/push_bytes_int8", str(stats["int8"][1]),
+         "same workload, push_compression='int8' (payload + block "
+         "scales)"),
+        ("wire/push_ratio_bf16", f"{r_bf16:.4f}", "bf16 / fp32 bytes"),
+        ("wire/push_ratio_int8", f"{r_int8:.4f}", "int8 / fp32 bytes"),
+        ("wire/push_int8_halved", str(int(r_int8 <= 0.5)),
+         "acceptance: int8 pushes cost <= 0.5x fp32 on the wire "
+         "(must be 1)"),
+    ]
+
+
+def _convergence_rows():
+    n_steps = 15 if _smoke() else 60
+
+    def final_losses(kind):
+        rt, eng, targets = _build(compression=kind)
+        last = {}
+        for _ in range(n_steps):
+            for j in targets:
+                last[j] = eng.step(j, {"target": targets[j]})
+        eng.drain()
+        return {j: float(m["loss"]) for j, m in last.items()}
+
+    base = final_losses(None)
+    comp = final_losses("int8")
+    worst = max(abs(comp[j] - base[j]) / (1.0 + base[j]) for j in base)
+    return [
+        ("wire/convergence_loss_fp32", f"{sum(base.values()):.6f}",
+         f"summed final losses after {n_steps} step rounds, "
+         f"uncompressed"),
+        ("wire/convergence_loss_int8", f"{sum(comp.values()):.6f}",
+         "same schedule with int8 + error feedback"),
+        ("wire/convergence_gap_rel", f"{worst:.6f}",
+         "worst per-job |int8 - fp32| / (1 + fp32) final-loss gap"),
+        ("wire/convergence_gap_ok",
+         str(int(worst <= CONVERGENCE_GAP_TOL)),
+         f"acceptance: EF-compressed training lands within "
+         f"{CONVERGENCE_GAP_TOL} relative gap of fp32 (must be 1)"),
+    ]
+
+
+def _pull_rows():
+    import numpy as np
+
+    rounds = 4 if _smoke() else 10
+    rt, eng, targets = _build()
+    jobs = list(targets)
+    _run_steps(eng, targets, 2)  # all jobs materialized
+    vectors = {}
+    full_per_round = 0
+    for j in jobs:
+        d = eng.pull(j, since_version=0)  # bootstrap: full payload
+        vectors[j] = d.version
+        full_per_round += d.bytes_full
+
+    dirty = jobs[:1]  # 1 of 3 jobs steps between pull rounds
+    wire = full = 0
+    for _ in range(rounds):
+        for j in dirty:
+            eng.step(j, {"target": targets[j]})
+        eng.drain()
+        for j in jobs:
+            d = eng.pull(j, since_version=vectors[j])
+            assert not d.full, "vector held across ticks must diff-pull"
+            vectors[j] = d.version
+            wire += d.bytes_wire
+            full += d.bytes_full
+    dirty_frac = sum(
+        np.asarray(rt.splan.job_layout(j).packed_len) for j in dirty
+    ) / sum(np.asarray(rt.splan.job_layout(j).packed_len) for j in jobs)
+    ratio = wire / full
+    return [
+        ("wire/pull_bytes_full", str(full),
+         f"{rounds} pull rounds x {len(jobs)} jobs, full-pull cost"),
+        ("wire/pull_bytes_diff", str(wire),
+         f"same rounds as versioned diffs ({len(dirty)}/{len(jobs)} "
+         f"jobs dirty per round)"),
+        ("wire/pull_dirty_fraction", f"{float(dirty_frac):.4f}",
+         "dirty jobs' share of the pulled bytes"),
+        ("wire/pull_ratio", f"{ratio:.4f}", "diff / full pull bytes"),
+        ("wire/pull_tracks_dirty", str(int(ratio <= float(dirty_frac))),
+         "acceptance: diff pulls move <= dirty-fraction x full-pull "
+         "bytes (must be 1)"),
+        ("wire/pull_diff_count", str(eng.stats.n_diff_pulls),
+         "versioned pulls served as diffs (vs "
+         f"{eng.stats.n_full_pulls} full)"),
+    ]
+
+
+def _parity_rows():
+    import numpy as np
+
+    n_steps = 8 if _smoke() else 25
+    trees = _trees()
+    rt, eng, targets = _build(trees=trees)  # compression off
+    _run_steps(eng, targets, n_steps)
+
+    from repro.core import ParameterService
+    from repro.ps.service_runtime import ShardedServiceRuntime
+
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+    oracle = ShardedServiceRuntime(svc, jit=False)
+    for jid, t in trees.items():
+        nb = sum(4 * v.size for v in t.values())
+        oracle.add_job(jid, t, _loss(), lr=0.05, required_servers=1,
+                       agg_throughput=nb / 0.2)
+    svc.scale_out(2)
+    for _ in range(n_steps):
+        for j in targets:
+            oracle.step(j, {"target": targets[j]})
+
+    mismatches = 0
+    for j in targets:
+        p, q = rt.params_of(j), oracle.params_of(j)
+        for k in p:
+            if not np.array_equal(np.asarray(p[k]), np.asarray(q[k])):
+                mismatches += 1
+    return [
+        ("wire/parity_steps", str(n_steps),
+         "step rounds compared, fused fleet tick vs sequential "
+         "runtime.step"),
+        ("wire/parity_bit_exact", str(int(mismatches == 0)),
+         "acceptance: with push_compression=None the fused tick "
+         "trajectory is bit-exact vs the per-job oracle (must be 1)"),
+    ]
+
+
+def rows():
+    return (_push_rows() + _convergence_rows() + _pull_rows()
+            + _parity_rows())
+
+
+if __name__ == "__main__":
+    for name, value, derived in rows():
+        print(f'{name},{value},"{derived}"')

@@ -10,10 +10,30 @@ sized traffic depending on where the cast is placed).
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 BLOCK = 2048
+
+# Wire-size model (bytes per element on a real deployment): fp32 ships 4,
+# bf16 ships 2, int8 ships 1 plus one fp32 scale per BLOCK-sized block.
+_SCALE_BYTES = 4
+
+
+def wire_bytes(n: int, kind: Optional[str], block: int = BLOCK) -> int:
+    """Bytes an ``n``-element packed gradient costs on the wire under
+    ``kind`` (None = uncompressed fp32)."""
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if not kind:
+        return 4 * n
+    if kind == "bf16":
+        return 2 * n
+    if kind == "int8":
+        return n + _SCALE_BYTES * (-(-n // block) if n else 0)
+    raise ValueError(f"unknown compression {kind!r}")
 
 
 def _block_scales(x: jnp.ndarray, block: int) -> jnp.ndarray:
@@ -51,6 +71,21 @@ def compress_decompress(x: jnp.ndarray, kind: str) -> jnp.ndarray:
     raise ValueError(f"unknown compression {kind!r}")
 
 
+def ef_transform(g: jnp.ndarray, ef: jnp.ndarray, kind: str):
+    """ONE error-feedback compression round: ``(g, ef) -> (q, resid)``.
+
+    The residual of the previous round rides into this round's gradient
+    before quantization, and what quantization loses becomes the next
+    residual -- the EF-SGD recurrence.  This is THE transform: the
+    runtime's compressed ``step()`` path and both tick engines' appliers
+    call it, so their compressed trajectories agree bit-for-bit (eager)
+    by construction.
+    """
+    g = g + ef
+    q = compress_decompress(g, kind)
+    return q, g - q
+
+
 class ErrorFeedback:
     """Stateful wrapper for host-side loops (the jitted PS step keeps the
     residual in its own state; this class serves tests/examples)."""
@@ -59,7 +94,5 @@ class ErrorFeedback:
         self.residual = jnp.zeros(shape, jnp.float32)
 
     def step(self, grad: jnp.ndarray, kind: str) -> jnp.ndarray:
-        g = grad + self.residual
-        q = compress_decompress(g, kind)
-        self.residual = g - q
+        q, self.residual = ef_transform(grad, self.residual, kind)
         return q

@@ -99,6 +99,30 @@ recover_shard`` turns a quarantined lane back into a healthy fleet via
 the PR-4/5 migration machinery; a seedable
 :class:`repro.ps.faults.FaultInjector` drives all of it
 deterministically in tests and benchmarks.
+
+PR 8 makes the wire path CHEAP.  Compressed-push jobs
+(``push_compression="bf16"|"int8"``), which both engines previously
+rejected, now flow through batched and fused fleet ticks: the shared
+error-feedback buffer (``state["ef"]``, one per shard space under the
+sharded engine -- a compressed job gets one EF round per hosting
+shard's piece) lives next to flat/mu/nu in the engine's donated state,
+so it rides snapshots, rollback replay, relayout migrations, and
+checkpoints like any other state leaf, and appliers whose jobs are all
+uncompressed compile the exact pre-PR-8 program (bit-exact default
+path).  The transform itself is ONE shared function
+(:func:`repro.ps.compression.ef_transform`), so the engine'd compressed
+trajectory matches ``runtime.step()``'s compressed path bit-for-bit in
+eager mode.  Pulls gain a versioned PARAMETER-DIFF protocol: every
+applying tick stamps the applied jobs' owned blocks with a monotone
+version (host-side numpy, one entry per ``block_align`` block;
+rollbacks re-stamp so rewound blocks read as changed), and
+``pull(job_id, since_version=<PullVersion>)`` ships only the changed
+blocks as a :class:`PullDiff` -- full-pull fallback on the first call,
+a plan-epoch change, or a mismatched vector.  ``TickStats`` carries the
+transfer-byte accounting (``push_bytes_raw/wire``,
+``pull_bytes_full/wire``, ``n_full_pulls``/``n_diff_pulls``), surfaced
+by ``debug_stats()`` and measured in BENCH_wire.json
+(benchmarks/wire_path.py).
 """
 
 from __future__ import annotations
@@ -113,18 +137,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ps.compression import ef_transform, wire_bytes
 from repro.ps.faults import HEALTHY, QUARANTINED, EngineQuarantinedError
 from repro.ps.plan import FlatPlan
 from repro.ps.runtime import (
+    _gather_owned,
     _gather_packed,
     _layout_rows,
     _pack_slots,
+    _scatter_owned,
     _split_pieces,
     _unpack_slots,
 )
 
-__all__ = ["PushFuture", "ServiceTickEngine", "ShardedTickEngine",
-           "TickStats"]
+__all__ = ["PullDiff", "PullVersion", "PushFuture", "ServiceTickEngine",
+           "ShardedTickEngine", "TickStats"]
 
 
 class PushFuture:
@@ -248,6 +275,16 @@ class TickStats:
     n_replayed: int = 0  # applied pushes re-queued for replay by rollbacks
     n_quarantines: int = 0  # lanes that exhausted retries and stopped
     n_fleet_fallbacks: int = 0  # fused fleet failures replayed per-shard
+    # Wire accounting (PR 8).  Push bytes are counted at submit time with
+    # the job's ``push_compression`` wire-size model (fp32 4 B/elem, bf16
+    # 2, int8 1 + one fp32 scale per block); pull bytes count the payload
+    # a pull shipped vs. what a full pull of the same slice costs.
+    push_bytes_raw: int = 0  # fp32 bytes of every submitted push/piece
+    push_bytes_wire: int = 0  # same pushes after each job's compression
+    n_full_pulls: int = 0  # whole-slice pulls (incl. diff-pull fallbacks)
+    n_diff_pulls: int = 0  # versioned pulls that shipped changed blocks only
+    pull_bytes_wire: int = 0  # pull payload bytes actually shipped
+    pull_bytes_full: int = 0  # what the same pulls cost as full pulls
 
     @property
     def mean_batch(self) -> float:
@@ -256,6 +293,53 @@ class TickStats:
         if not self.n_ticks:
             return 0.0
         return self.n_applied / self.n_ticks
+
+
+@dataclass(frozen=True)
+class PullVersion:
+    """Opaque version vector one versioned pull returns: the plan epoch
+    it was taken under plus one monotone version per owned block of the
+    job (packed layout order, shard order for sharded jobs).  Hand it
+    back as ``since_version`` to receive only the blocks that changed."""
+
+    epoch: int
+    versions: np.ndarray  # int64, one per owned block, layout order
+
+
+@dataclass(frozen=True)
+class PullDiff:
+    """Result of ``pull(job_id, since_version=...)`` -- the SNIPPETS.md
+    parameter-diff shape: only the owned blocks whose version moved past
+    the client's vector, plus the new vector to hand back next time.
+
+    ``full=True`` is the fallback (first pull, plan-epoch mismatch, or a
+    stale/mismatched vector): ``data`` is the whole packed job vector.
+    Otherwise ``data`` is ``(k, block)`` changed rows and ``block_ids``
+    their job-local packed block indices; :meth:`apply` patches them onto
+    the client's previous packed vector.  ``bytes_wire`` is what this
+    pull shipped under the fp32 wire model, ``bytes_full`` what a full
+    pull would have."""
+
+    job_id: str
+    version: PullVersion
+    full: bool
+    block: int
+    block_ids: np.ndarray  # job-local packed block rows; empty when full
+    data: Any  # (packed_len,) when full, else (k, block) changed rows
+    bytes_wire: int
+    bytes_full: int
+
+    def apply(self, prev_packed):
+        """Patch this diff onto the client's previous packed vector and
+        return the up-to-date packed vector."""
+        if self.full:
+            return self.data
+        if self.block_ids.size == 0:
+            return prev_packed
+        rows = prev_packed.reshape(-1, self.block)
+        return rows.at[jnp.asarray(self.block_ids)].set(
+            self.data, unique_indices=True,
+            indices_are_sorted=True).reshape(-1)
 
 
 def _copy_state(state):
@@ -376,6 +460,13 @@ class ServiceTickEngine:
         self._interpret = interpret  # None = auto (jnp path off-TPU)
         self._epoch = 0  # bumped per plan change; fences queued pushes
         self._queues: Dict[str, deque] = {}
+        # Diff-pull version tracking (PR 8): one monotone version per
+        # ``block_align`` block of the flat space, stamped host-side on
+        # every applying tick.  Reset on plan changes -- the version
+        # vector carries the epoch, so stale clients fall back to a full
+        # pull instead of misreading restarted versions.
+        self._block_versions: Optional[np.ndarray] = None
+        self._version_clock = 0
         # Python-side mirror of state["counts"]: futures resolve from it
         # without a device round-trip per tick.
         self._counts: Dict[str, int] = {}
@@ -395,10 +486,15 @@ class ServiceTickEngine:
         if info is None:
             raise ValueError(f"unknown job {job_id!r}: not registered with "
                              f"the runtime (have {sorted(self.runtime._jobs)})")
-        if info["step_opts"].get("push_compression"):
-            raise NotImplementedError(
-                "the tick engine's batched apply has no error-feedback "
-                "buffer; step compressed-push jobs through runtime.step()")
+        if (info["step_opts"].get("push_compression")
+                and "ef" not in self.runtime.state):
+            # A job turned compressed after the state was built (e.g. a
+            # restore from a pre-compression checkpoint): widen the state
+            # with a zero error-feedback buffer -- exactly what the
+            # runtime's replan path does when a compressed job joins.
+            self.runtime.state = dict(
+                self.runtime.state,
+                ef=jnp.zeros_like(self.runtime.state["flat"]))
         if job_id not in self._counts:
             # One sync at first contact; ticks keep the mirror in step.
             self._counts[job_id] = int(jax.device_get(
@@ -443,6 +539,9 @@ class ServiceTickEngine:
         self._snapshot = None
         self._snapshot_log = []
         self._ticks_since_snapshot = 0
+        # Block versions index the OLD geometry; the epoch bump already
+        # invalidates every held PullVersion, so restart the vector.
+        self._block_versions = None
         if touched is None:
             assert not any(self._queues.values()), (
                 "replan with queued pushes: runtime must drain the "
@@ -491,17 +590,30 @@ class ServiceTickEngine:
                          if job_id not in k}
 
     # ------------------------------------------------------------ data path
-    def pull(self, job_id: str):
+    def pull(self, job_id: str, since_version=None):
         """The job's current parameters from the shared space.
 
         Bounded staleness: a job ``max_staleness`` steps ahead of the
         service blocks here -- the pull forces ticks until the job is back
         within the bound (one tick applies one queued push, so one
-        suffices unless other jobs' queues run deeper)."""
+        suffices unless other jobs' queues run deeper).
+
+        ``since_version`` switches to the VERSIONED DIFF protocol: pass
+        the :class:`PullVersion` a previous versioned pull returned (or
+        ``0`` to bootstrap) and get a :class:`PullDiff` holding only the
+        owned blocks whose version moved, plus the new vector.  A stale
+        or cross-epoch vector falls back to a full-payload diff; plain
+        (``None``) pulls keep returning the parameter pytree."""
         self._queue(job_id)  # validates the job id
         while self.outstanding(job_id) > self.max_staleness:
             self.stats.n_forced_staleness += 1
             self.tick()
+        if since_version is not None:
+            return self._pull_versioned(job_id, since_version)
+        layout = self.plan.job_layout(job_id)
+        self.stats.n_full_pulls += 1
+        self.stats.pull_bytes_wire += 4 * layout.packed_len
+        self.stats.pull_bytes_full += 4 * layout.packed_len
         fn = self._pull_fns.get(job_id)
         if fn is None:
             plan = self.plan
@@ -518,6 +630,61 @@ class ServiceTickEngine:
                 fn = jax.jit(fn)
             self._pull_fns[job_id] = fn
         return fn(self.runtime.state["flat"])
+
+    # ----------------------------------------------------- versioned pulls
+    def _versions_array(self) -> np.ndarray:
+        plan = self.plan
+        nb = plan.total_len // plan.block_align
+        if self._block_versions is None or self._block_versions.size != nb:
+            self._block_versions = np.zeros(nb, np.int64)
+        return self._block_versions
+
+    def _stamp_blocks(self, jobs) -> None:
+        """Advance the version clock and stamp every given job's owned
+        blocks -- called once per applying tick (and on rollback, so a
+        rewound block can never look unchanged to a diff client)."""
+        if self.plan is None or not jobs:
+            return
+        versions = self._versions_array()
+        self._version_clock += 1
+        for j in jobs:
+            versions[np.asarray(self.plan.job_layout(j).blocks)] = \
+                self._version_clock
+
+    def _pull_versioned(self, job_id: str, since) -> PullDiff:
+        plan = self.plan
+        layout = plan.job_layout(job_id)
+        blocks = np.asarray(layout.blocks)
+        vers = self._versions_array()[blocks].copy()
+        version = PullVersion(epoch=self._epoch, versions=vers)
+        bytes_full = 4 * layout.packed_len
+        flat = self.runtime.state["flat"]
+        full = (not isinstance(since, PullVersion)
+                or since.epoch != self._epoch
+                or since.versions.size != vers.size)
+        if full:
+            data = _gather_owned(layout, flat)
+            diff = PullDiff(
+                job_id=job_id, version=version, full=True,
+                block=layout.block, block_ids=np.empty(0, np.int64),
+                data=data, bytes_wire=bytes_full, bytes_full=bytes_full)
+            self.stats.n_full_pulls += 1
+        else:
+            sel = np.nonzero(vers > since.versions)[0]
+            if sel.size:
+                data = flat.reshape(-1, layout.block)[
+                    jnp.asarray(blocks[sel])]
+            else:
+                data = jnp.zeros((0, layout.block), flat.dtype)
+            diff = PullDiff(
+                job_id=job_id, version=version, full=False,
+                block=layout.block, block_ids=sel.astype(np.int64),
+                data=data, bytes_wire=4 * int(sel.size) * layout.block,
+                bytes_full=bytes_full)
+            self.stats.n_diff_pulls += 1
+        self.stats.pull_bytes_wire += diff.bytes_wire
+        self.stats.pull_bytes_full += bytes_full
+        return diff
 
     def submit_push(self, job_id: str, grads) -> PushFuture:
         """Queue a job's gradient pytree for the next tick; returns a
@@ -550,6 +717,13 @@ class ServiceTickEngine:
 
     def _enqueue(self, q: deque, job_id: str, packed) -> PushFuture:
         fut = PushFuture(job_id, self)
+        # Wire accounting: what this push costs as fp32 vs. under the
+        # job's compression (bytes are spent whether or not the injector
+        # later drops the push -- it models loss IN transit).
+        n = int(packed.size)
+        kind = self.runtime._jobs[job_id]["step_opts"].get("push_compression")
+        self.stats.push_bytes_raw += 4 * n
+        self.stats.push_bytes_wire += wire_bytes(n, kind)
         action = ("deliver" if self.fault_injector is None
                   else self.fault_injector.on_push(job_id, None))
         if action != "drop":
@@ -675,6 +849,7 @@ class ServiceTickEngine:
                     fut._resolve(self._counts[j])
                 self._snapshot_log.append((j, packed, fut))
             applied += len(key)
+        self._stamp_blocks(pending)  # diff-pull clients see these as dirty
         self.stats.n_ticks += 1
         self.stats.n_applied += applied
         self.stats.n_launches += len(groups)
@@ -704,6 +879,10 @@ class ServiceTickEngine:
         state_copy, counts_copy = self._snapshot
         self.runtime.state = _copy_state(state_copy)
         self._counts = dict(counts_copy)
+        # The restore REWOUND every block the logged pushes had touched:
+        # re-stamp them so a diff-pull client who saw the undone values
+        # is told those blocks changed (versions only move forward).
+        self._stamp_blocks({j for j, _, _ in self._snapshot_log})
         for j, packed, fut in reversed(self._snapshot_log):
             if fut is not None:
                 fut._unresolve()
@@ -780,12 +959,34 @@ class ServiceTickEngine:
         block_idx, job_sizes, hps = _fused_tables(layouts, infos,
                                                   _flat_job_hp)
         block, interpret = plan.block_align, self._interpret
+        # Compressed-push jobs (PR 8): each gets the EF transform against
+        # its owned rows of the shared error-feedback buffer before the
+        # fused update.  ``compressed`` is empty for the common case, and
+        # that branch's program is IDENTICAL to the pre-compression
+        # applier -- the parity tests pin this down.
+        compressed = [(i, kind, layouts[i])
+                      for i, info in enumerate(infos)
+                      if (kind := info["step_opts"].get("push_compression"))]
 
         def apply(state, gs):
             counts = [state["counts"][j] + 1 for j in job_ids]
+            if compressed:
+                ef = state.get("ef")
+                if ef is None:
+                    # A rollback can restore a snapshot that predates the
+                    # ef widening; the buffer was all-zero back then.
+                    ef = jnp.zeros_like(state["flat"])
+                gs = list(gs)
+                for i, kind, layout in compressed:
+                    gs[i], resid = ef_transform(
+                        gs[i], _gather_owned(layout, ef), kind)
+                    ef = _scatter_owned(layout, ef, resid)
+                gs = tuple(gs)
             new_state = _fused_state_update(
                 state, gs, counts, block=block, block_idx=block_idx,
                 job_sizes=job_sizes, hps=hps, interpret=interpret)
+            if compressed:
+                new_state["ef"] = ef
             new_state["counts"] = dict(
                 state["counts"], **{j: c for j, c in zip(job_ids, counts)})
             return new_state
@@ -803,7 +1004,7 @@ class _ShardLane:
 
     __slots__ = ("shard_id", "queues", "appliers", "stats", "health",
                  "quarantine_error", "snapshot", "log",
-                 "ticks_since_snapshot", "failures")
+                 "ticks_since_snapshot", "failures", "versions")
 
     def __init__(self, shard_id: str):
         self.shard_id = shard_id
@@ -816,6 +1017,7 @@ class _ShardLane:
         self.log: List[Tuple] = []  # (job, piece, count, fut) since copy
         self.ticks_since_snapshot = 0
         self.failures = 0  # consecutive failed applies (reset on success)
+        self.versions: Optional[np.ndarray] = None  # per-block, diff pulls
 
 
 class ShardedTickEngine:
@@ -887,6 +1089,7 @@ class ShardedTickEngine:
         self._jit = jit
         self._interpret = interpret
         self._epoch = 0
+        self._version_clock = 0  # fleet-wide monotone diff-pull clock
         self._lanes: Dict[str, _ShardLane] = {}
         self._counts: Dict[str, int] = {}  # job step mirror (submit time)
         # Fleet appliers are keyed by the whole pending pattern
@@ -912,18 +1115,21 @@ class ShardedTickEngine:
         if info is None:
             raise ValueError(f"unknown job {job_id!r}: not registered with "
                              f"the runtime (have {sorted(self.runtime._jobs)})")
+        layout = self.plan.job_layout(job_id)
         if info.get("step_opts", {}).get("push_compression"):
-            raise ValueError(
-                f"job {job_id!r} requests push_compression="
-                f"{info['step_opts']['push_compression']!r}: the sharded "
-                f"tick engine's batched apply has no error-feedback "
-                f"buffer (the flat ServiceTickEngine rejects compressed "
-                f"pushes the same way; step such jobs through "
-                f"ServiceRuntime.step() on an unsharded runtime instead)")
+            # Late-arriving compression (e.g. a restore from a
+            # pre-compression checkpoint): widen each hosting shard's
+            # state with a zero error-feedback buffer, mirroring the
+            # runtime's replan-time widening.
+            for sid in layout.shard_ids:
+                st = self.runtime.states[sid]
+                if "ef" not in st:
+                    self.runtime.states[sid] = dict(
+                        st, ef=jnp.zeros_like(st["flat"]))
         if job_id not in self._counts:
             self._counts[job_id] = int(jax.device_get(
                 self.runtime.counts[job_id]))
-        return self.plan.job_layout(job_id)
+        return layout
 
     def outstanding(self, job_id: str) -> int:
         """Deepest per-shard queue of the job's not-yet-applied pieces."""
@@ -980,9 +1186,15 @@ class ShardedTickEngine:
             f"remains for it on any lane (piece dropped in transit?)")
 
     # ------------------------------------------------------------ data path
-    def pull(self, job_id: str):
+    def pull(self, job_id: str, since_version=None):
         """The job's parameters gathered across its hosting shards, after
-        forcing tick rounds down to the staleness bound."""
+        forcing tick rounds down to the staleness bound.
+
+        ``since_version`` switches to the VERSIONED DIFF protocol (see
+        :meth:`ServiceTickEngine.pull`): a :class:`PullDiff` of only the
+        owned blocks whose version moved since the client's
+        :class:`PullVersion` -- versions concatenate over the hosting
+        shards in shard order, matching the packed piece order."""
         layout = self._layout(job_id)
         while self.outstanding(job_id) > self.max_staleness:
             self.stats.n_forced_staleness += 1
@@ -992,6 +1204,11 @@ class ShardedTickEngine:
                     # The backlog lives on a quarantined lane: forcing
                     # more ticks can never drain it.
                     raise stall
+        if since_version is not None:
+            return self._pull_versioned(job_id, layout, since_version)
+        self.stats.n_full_pulls += 1
+        self.stats.pull_bytes_wire += 4 * layout.packed_len
+        self.stats.pull_bytes_full += 4 * layout.packed_len
         fn = self._pull_fns.get(job_id)
         if fn is None:
             abstract = self.runtime._jobs[job_id]["abstract"]
@@ -1007,12 +1224,106 @@ class ShardedTickEngine:
         return fn(tuple(self.runtime.states[sid]["flat"]
                         for sid in layout.shard_ids))
 
+    # ----------------------------------------------------- versioned pulls
+    def _lane_versions(self, lane: _ShardLane) -> np.ndarray:
+        sp = self.plan.shard_of(lane.shard_id)
+        nb = sp.total_len // sp.block_align
+        if lane.versions is None or lane.versions.size != nb:
+            lane.versions = np.zeros(nb, np.int64)
+        return lane.versions
+
+    def _stamp_lane(self, lane: _ShardLane, jobs) -> None:
+        """Advance the fleet-wide version clock and stamp the given jobs'
+        owned blocks of THIS shard space (applying ticks and rollbacks --
+        a rewound block must never look unchanged to a diff client)."""
+        if self.plan is None or not jobs:
+            return
+        sp = self.plan.shard_of(lane.shard_id)
+        versions = self._lane_versions(lane)
+        self._version_clock += 1
+        for j in jobs:
+            if j in self.runtime._jobs:
+                versions[np.asarray(sp.job_layout(j).blocks)] = \
+                    self._version_clock
+
+    def _pull_versioned(self, job_id: str, layout, since) -> PullDiff:
+        # The job-local version vector: each hosting shard's versions of
+        # the job's owned blocks, concatenated in shard order -- the same
+        # order its packed pieces concatenate in, so job-local block row
+        # i of the packed vector is entry i of the vector.
+        parts = []
+        for sid, l in zip(layout.shard_ids, layout.layouts):
+            lane = self._lane(sid)
+            parts.append(self._lane_versions(lane)[np.asarray(l.blocks)])
+        vers = (np.concatenate(parts) if len(parts) > 1
+                else parts[0].copy())
+        version = PullVersion(epoch=self._epoch, versions=vers)
+        bytes_full = 4 * layout.packed_len
+        blocks = {l.block for l in layout.layouts}
+        uniform = len(blocks) == 1
+        full = (not uniform  # mixed granularity: no single row width
+                or not isinstance(since, PullVersion)
+                or since.epoch != self._epoch
+                or since.versions.size != vers.size)
+        if full:
+            data = _gather_packed(
+                layout, _layout_rows(layout),
+                [self.runtime.states[sid]["flat"]
+                 for sid in layout.shard_ids])
+            diff = PullDiff(
+                job_id=job_id, version=version, full=True,
+                block=(blocks.pop() if uniform else 0),
+                block_ids=np.empty(0, np.int64), data=data,
+                bytes_wire=bytes_full, bytes_full=bytes_full)
+            self.stats.n_full_pulls += 1
+        else:
+            block = blocks.pop()
+            changed = vers > since.versions
+            data_parts, id_parts = [], []
+            off = 0  # job-local block row of this shard's first piece row
+            for sid, l in zip(layout.shard_ids, layout.layouts):
+                nb = int(np.asarray(l.blocks).size)
+                sel = np.nonzero(changed[off:off + nb])[0]
+                if sel.size:
+                    flat = self.runtime.states[sid]["flat"]
+                    data_parts.append(flat.reshape(-1, l.block)[
+                        jnp.asarray(np.asarray(l.blocks)[sel])])
+                    id_parts.append(off + sel)
+                off += nb
+            if data_parts:
+                data = (jnp.concatenate(data_parts) if len(data_parts) > 1
+                        else data_parts[0])
+                ids = np.concatenate(id_parts).astype(np.int64)
+            else:
+                data = jnp.zeros((0, block), jnp.float32)
+                ids = np.empty(0, np.int64)
+            diff = PullDiff(
+                job_id=job_id, version=version, full=False, block=block,
+                block_ids=ids, data=data,
+                bytes_wire=4 * int(ids.size) * block,
+                bytes_full=bytes_full)
+            self.stats.n_diff_pulls += 1
+        self.stats.pull_bytes_wire += diff.bytes_wire
+        self.stats.pull_bytes_full += bytes_full
+        return diff
+
     def _enqueue(self, job_id: str, layout, pieces) -> PushFuture:
         count = self._counts[job_id] + 1
         self._counts[job_id] = count
         fut = PushFuture(job_id, self, parts=len(pieces))
         inj = self.fault_injector
+        kind = self.runtime._jobs[job_id]["step_opts"].get("push_compression")
         for sid, piece in zip(layout.shard_ids, pieces):
+            # Wire accounting per PIECE (each crosses to its own hosting
+            # shard), on the fleet and the receiving lane's stats alike;
+            # bytes are spent even when the injector drops the piece.
+            n = int(piece.size)
+            wire = wire_bytes(n, kind)
+            self.stats.push_bytes_raw += 4 * n
+            self.stats.push_bytes_wire += wire
+            lane_stats = self._lane(sid).stats
+            lane_stats.push_bytes_raw += 4 * n
+            lane_stats.push_bytes_wire += wire
             action = "deliver" if inj is None else inj.on_push(job_id, sid)
             if action == "drop":
                 # Lost in transit: the future keeps the part, so it can
@@ -1170,6 +1481,7 @@ class ShardedTickEngine:
                     self.runtime.counts[j] = jnp.asarray(count, jnp.int32)
                 lane.log.append((j, piece, count, fut))
             applied += len(key)
+        self._stamp_lane(lane, pending)  # diff-pull dirty marks
         lane.stats.n_ticks += 1
         lane.stats.n_applied += applied
         lane.stats.n_launches += len(groups)
@@ -1201,6 +1513,9 @@ class ShardedTickEngine:
         subsequent ticks replay the identical (piece, count) sequence,
         which is bit-exact because counts were fixed at submit time."""
         self.runtime.states[lane.shard_id] = _copy_state(lane.snapshot)
+        # The restore rewound the logged jobs' blocks: re-stamp so diff
+        # clients who saw the undone values are told they changed.
+        self._stamp_lane(lane, {j for j, _, _, _ in lane.log})
         for j, piece, count, fut in reversed(lane.log):
             if fut is not None:
                 fut._unresolve()
@@ -1359,6 +1674,7 @@ class ShardedTickEngine:
             lane.log.append((j, piece, count, fut))
         for sid, jobs in key:
             lane = self._lanes[sid]
+            self._stamp_lane(lane, jobs)  # diff-pull dirty marks
             lane.stats.n_ticks += 1
             lane.stats.n_applied += len(jobs)
             lane.ticks_since_snapshot += 1
@@ -1431,6 +1747,10 @@ class ShardedTickEngine:
             lane.snapshot = None
             lane.log = []
             lane.ticks_since_snapshot = 0
+            # Versions index the OLD shard geometry; the epoch bump
+            # already sends every held PullVersion to the full-pull
+            # fallback, so restart the vector.
+            lane.versions = None
         if touched is None:
             assert not any(q for lane in self._lanes.values()
                            for q in lane.queues.values()), (
@@ -1503,14 +1823,36 @@ class ShardedTickEngine:
         block_idx, job_sizes, hps = _fused_tables(layouts, infos,
                                                   _sharded_job_hp)
         block, interpret = shard_plan.block_align, self._interpret
+        # Compressed-push jobs (PR 8): the EF transform runs per HOSTING
+        # SHARD against this shard's own ef buffer (one compressed piece
+        # per shard).  Empty for the common case, whose program is
+        # byte-identical to the pre-compression applier.
+        compressed = [(i, kind, layouts[i])
+                      for i, info in enumerate(infos)
+                      if (kind := info["step_opts"].get("push_compression"))]
 
         def apply(state, gs, counts):
             # Counts arrive as the pieces' submit-time step numbers; lift
             # to arrays so eager mode matches the traced path exactly.
             counts = [jnp.asarray(c, jnp.int32) for c in counts]
-            return _fused_state_update(
+            if compressed:
+                ef = state.get("ef")
+                if ef is None:
+                    # A rollback can restore a snapshot predating the ef
+                    # widening; the buffer was all-zero back then.
+                    ef = jnp.zeros_like(state["flat"])
+                gs = list(gs)
+                for i, kind, layout in compressed:
+                    gs[i], resid = ef_transform(
+                        gs[i], _gather_owned(layout, ef), kind)
+                    ef = _scatter_owned(layout, ef, resid)
+                gs = tuple(gs)
+            new_state = _fused_state_update(
                 state, gs, counts, block=block, block_idx=block_idx,
                 job_sizes=job_sizes, hps=hps, interpret=interpret)
+            if compressed:
+                new_state["ef"] = ef
+            return new_state
 
         return jax.jit(apply, donate_argnums=(0,)) if self._jit else apply
 
@@ -1531,11 +1873,22 @@ class ShardedTickEngine:
         offsets, _, block = plan.concat_view(sids)
         lens = [plan.shard_of(sid).total_len for sid in sids]
         layouts, infos, bases = [], [], []
-        for (sid, jobs), off in zip(key, offsets):
+        # Compressed entries (PR 8): (entry index in gs, shard index in
+        # ``states``, kind, shard-local layout).  The EF transform runs
+        # per entry against ITS shard's own ef buffer -- ef never joins
+        # the concatenated fleet view, so the common all-uncompressed
+        # launch is byte-identical to the pre-compression program.
+        compressed = []
+        for si, ((sid, jobs), off) in enumerate(zip(key, offsets)):
             shard_plan = plan.shard_of(sid)
             for j in jobs:
-                layouts.append(shard_plan.job_layout(j))
-                infos.append(self.runtime._jobs[j])
+                layout = shard_plan.job_layout(j)
+                info = self.runtime._jobs[j]
+                kind = info["step_opts"].get("push_compression")
+                if kind:
+                    compressed.append((len(layouts), si, kind, layout))
+                layouts.append(layout)
+                infos.append(info)
                 bases.append(off // block)
         block_idx, job_sizes, hps = _fused_tables(
             layouts, infos, _sharded_job_hp, base_blocks=bases)
@@ -1545,16 +1898,31 @@ class ShardedTickEngine:
             return jnp.concatenate(bufs) if len(bufs) > 1 else bufs[0]
 
         def apply(states, gs, counts):
+            counts = [jnp.asarray(c, jnp.int32) for c in counts]
+            efs = {}
+            if compressed:
+                gs = list(gs)
+                for gi, si, kind, layout in compressed:
+                    ef = efs.get(si)
+                    if ef is None:
+                        ef = states[si].get("ef")
+                    if ef is None:  # snapshot predating the ef widening
+                        ef = jnp.zeros_like(states[si]["flat"])
+                    gs[gi], resid = ef_transform(
+                        gs[gi], _gather_owned(layout, ef), kind)
+                    efs[si] = _scatter_owned(layout, ef, resid)
+                gs = tuple(gs)
             fleet = {k: cat([s[k] for s in states])
                      for k in ("flat", "mu", "nu")}
-            counts = [jnp.asarray(c, jnp.int32) for c in counts]
             new = _fused_state_update(
                 fleet, gs, counts, block=block, block_idx=block_idx,
                 job_sizes=job_sizes, hps=hps, interpret=interpret)
             return tuple(
                 dict(st, flat=new["flat"][lo:lo + n],
-                     mu=new["mu"][lo:lo + n], nu=new["nu"][lo:lo + n])
-                for st, lo, n in zip(states, offsets, lens))
+                     mu=new["mu"][lo:lo + n], nu=new["nu"][lo:lo + n],
+                     **({"ef": efs[i]} if i in efs else {}))
+                for i, (st, lo, n) in enumerate(zip(states, offsets,
+                                                    lens)))
 
         return jax.jit(apply, donate_argnums=(0,)) if self._jit else apply
 

@@ -26,6 +26,13 @@ pieces both the engine and its tests share:
 Injected faults raise :class:`InjectedFault` (a ``RuntimeError``), so
 they route through exactly the recovery paths a real device/runtime
 error would.
+
+Rollback recovery is compression-safe (PR 8): a compressed-push job's
+error-feedback buffer (``state["ef"]``) lives in the lane's donated
+state, so the last-good snapshot captures it and a replay restarts the
+EF recurrence from the exact residual it held -- at ``max_staleness=0``
+a recovered compressed trajectory is bit-exact with a fault-free
+compressed twin (see tests/test_faults.py).
 """
 
 from __future__ import annotations

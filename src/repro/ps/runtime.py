@@ -422,7 +422,7 @@ def _make_block_step(model_loss, plan, abstract_params, *, lr, b1, b2, eps,
     jobs share the space.
     """
     from repro.ps import act_sharding as act
-    from repro.ps.compression import compress_decompress
+    from repro.ps.compression import ef_transform
 
     layout = plan.job_layout(job_id)
 
@@ -433,10 +433,11 @@ def _make_block_step(model_loss, plan, abstract_params, *, lr, b1, b2, eps,
         loss, grads = jax.value_and_grad(model_loss)(params, batch)
         g = _pack_slots(layout, grads)  # PUSH: one concatenate
         if push_compression:
-            g = g + _gather_owned(layout, state["ef"])
-            q = compress_decompress(g, push_compression)
-            resid = g - q
-            g = q
+            # The SAME transform the tick engines' appliers run, so the
+            # engine'd compressed trajectory matches step()'s bit-for-bit
+            # (eager) -- see tests/test_fused_tick.py.
+            g, resid = ef_transform(
+                g, _gather_owned(layout, state["ef"]), push_compression)
         g = act.constrain(g, "all")  # reduce-scatter point
 
         count = state["counts"][job_id] + 1

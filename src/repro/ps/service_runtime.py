@@ -54,6 +54,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.ps.compression import ef_transform
 from repro.ps.faults import QUARANTINED
 
 from repro.ps.elastic import (
@@ -357,7 +358,7 @@ def _init_shard_state(shard_plan: FlatPlan, needs_ef: bool = False):
 
 
 def _make_sharded_step(model_loss, layout, abstract_params, *,
-                       lr, b1, b2, eps):
+                       lr, b1, b2, eps, push_compression=None):
     """O(job-bytes) train step spanning ONLY the shards hosting the job.
 
     ``layout`` is the plan's :class:`repro.ps.plan.ShardedJobLayout`: the
@@ -366,6 +367,12 @@ def _make_sharded_step(model_loss, layout, abstract_params, *,
     per shard on that shard's piece with the job's GLOBAL step count --
     elementwise math, so splitting by shard is a pure layout change and
     the trajectory is bit-exact with the single-space block step.
+
+    With ``push_compression`` each shard's piece runs one
+    :func:`repro.ps.compression.ef_transform` round against THAT shard's
+    ``ef`` rows before Adam -- the same per-hosting-shard recurrence the
+    :class:`repro.ps.engine.ShardedTickEngine` appliers run, so engine
+    and direct-step compressed trajectories agree bit-for-bit (eager).
     """
 
     rows = _layout_rows(layout)
@@ -381,16 +388,24 @@ def _make_sharded_step(model_loss, layout, abstract_params, *,
         new_states = []
         for l, st, pp, gj in zip(layout.layouts, shard_states, packed,
                                  _split_pieces(layout, g)):
+            new_st = dict(st)
+            if push_compression:
+                ef = st.get("ef")
+                if ef is None:
+                    ef = jnp.zeros_like(st["flat"])
+                gj, resid = ef_transform(gj, _gather_owned(l, ef),
+                                         push_compression)
+                new_st["ef"] = _scatter_owned(l, ef, resid)
             new_p, mu, nu = _adam_math(
                 pp, gj, _gather_owned(l, st["mu"]),
                 _gather_owned(l, st["nu"]), new_count,
                 lr=lr, b1=b1, b2=b2, eps=eps)
-            new_states.append(dict(
-                st,
+            new_st.update(
                 flat=_scatter_owned(l, st["flat"], new_p),
                 mu=_scatter_owned(l, st["mu"], mu),
                 nu=_scatter_owned(l, st["nu"], nu),
-            ))
+            )
+            new_states.append(new_st)
         return tuple(new_states), new_count, {"loss": loss}
 
     return step
@@ -495,10 +510,11 @@ class ShardedServiceRuntime:
         """Register a job and seed its parameters into the shards that the
         control plane assigned its tensors to.
 
-        Extra ``step_opts`` (e.g. ``push_compression``) are recorded on
-        the job info so the attached engine can reject capabilities the
-        sharded data plane does not implement, with a clear error instead
-        of silently ignoring the option."""
+        Extra ``step_opts`` ride on the job info for the attached engine;
+        ``push_compression="bf16"|"int8"`` makes the job's pushes flow
+        through the engines' error-feedback compression path (each
+        hosting shard's state gains an ``ef`` buffer that migrates,
+        snapshots, and checkpoints with flat/mu/nu)."""
         if job_id in self._jobs:
             raise ValueError(f"job {job_id} already in the runtime")
         abstract = jax.tree_util.tree_map(
@@ -632,7 +648,8 @@ class ShardedServiceRuntime:
                     # Quarantined with snapshots disabled under jit: the
                     # donated buffers are gone for good -- the segments
                     # can only re-seed empty.
-                    self.states[agg_id] = _init_shard_state(old_sp)
+                    self.states[agg_id] = _init_shard_state(
+                        old_sp, needs_ef=self._needs_ef())
             # The rollback window's pushes sit re-queued on the dead
             # lane.  DONE futures already surfaced a result that the
             # snapshot restore discarded -> flag rolled_back; pending
@@ -711,6 +728,10 @@ class ShardedServiceRuntime:
             self._engine._counts.clear()
 
     # --------------------------------------------------------------- replan
+    def _needs_ef(self) -> bool:
+        return any(info["step_opts"].get("push_compression")
+                   for info in self._jobs.values())
+
     def _on_replan(self, old_flat, new_flat):
         engine = self._engine
         if new_flat is None:  # last job exited
@@ -730,7 +751,7 @@ class ShardedServiceRuntime:
                 engine.quiesce_for_replan(
                     [j for j in touched_pre if j in self._jobs])
             self.states, moved_elems, touched_exec = migrate_sharded_state(
-                self.states, old, new,
+                self.states, old, new, needs_ef=self._needs_ef(),
                 fault_injector=(engine.fault_injector
                                 if engine is not None else None))
             self.last_relayout_bytes = moved_elems * 12
@@ -745,8 +766,17 @@ class ShardedServiceRuntime:
         else:
             if engine is not None and self.states:
                 engine.drain()
-            self.states = {sid: _init_shard_state(sp)
+            self.states = {sid: _init_shard_state(sp,
+                                                  needs_ef=self._needs_ef())
                            for sid, sp in zip(new.shard_ids, new.shards)}
+        if self._needs_ef():
+            # A compressed job joined shards whose states predate it:
+            # widen each with a zero error-feedback buffer (surviving
+            # shards' migrated states keep theirs bit-exactly).
+            for sid, st in self.states.items():
+                if "ef" not in st:
+                    self.states[sid] = dict(
+                        st, ef=jnp.zeros_like(st["flat"]))
         self.splan = new
         if engine is not None:
             engine._on_plan_change(touched)
@@ -762,7 +792,8 @@ class ShardedServiceRuntime:
             fn = _make_sharded_step(
                 info["loss_fn"], layout, info["abstract"],
                 lr=info["lr"], b1=info["b1"], b2=info["b2"],
-                eps=info["eps"])
+                eps=info["eps"],
+                push_compression=info["step_opts"].get("push_compression"))
             if self._jit:
                 fn = jax.jit(fn, donate_argnums=(0,))
             steps[job_id] = (layout.shard_ids, fn)

@@ -56,6 +56,18 @@ class SimConfig:
     # ahead -- the sustained push rate of a tick-limited job is one per
     # tick regardless -- so it does not appear in this accounting.)
     tick_interval: float = 0.0
+    # Wire accounting (PR 8).  ``push_compression`` prices every push
+    # under repro.ps.compression.wire_bytes (None = fp32, "bf16" = 2B/
+    # elem, "int8" = 1B/elem + scales); pushes themselves are unchanged
+    # -- this is the transfer-byte model of the engines' compressed push
+    # path.  With ``pull_interval > 0`` each running job is also pulled
+    # by a reader every pull_interval seconds; a versioned diff pull
+    # ships only the blocks that changed since the reader's last vector,
+    # modeled as ``pull_dirty_fraction`` of the job's bytes (1.0 = every
+    # pull is effectively full).
+    push_compression: Optional[str] = None
+    pull_interval: float = 0.0
+    pull_dirty_fraction: float = 1.0
 
 
 @dataclass
@@ -83,6 +95,13 @@ class SimResult:
     update_passes_sequential: float = 0.0  # one pass per push (per-job steps)
     update_passes_batched: float = 0.0  # one pass per tick round (engine)
     tick_limited_job_seconds: float = 0.0  # job-time spent at the staleness cap
+    # Wire accounting (push_compression / pull_interval in SimConfig):
+    # bytes every push would cost raw (fp32) vs on the modeled wire, and
+    # bytes readers pull full vs as versioned diffs.
+    push_bytes_raw: float = 0.0  # fp32 cost of every push
+    push_bytes_wire: float = 0.0  # same pushes under push_compression
+    pull_bytes_full: float = 0.0  # full-pull cost of the reader model
+    pull_bytes_wire: float = 0.0  # versioned-diff cost (dirty fraction)
     # Elastic-fleet CPU-tick accounting: each ALLOCATED Aggregator burns
     # one shard tick per tick_interval (its shard space wakes, drains,
     # applies) whether hot or cold -- so the integral of fleet size over
@@ -135,6 +154,20 @@ class SimResult:
         return 1.0 - self.replan_stalled_jobs / self.replan_coresident_jobs
 
     @property
+    def push_compression_ratio(self) -> float:
+        """wire / raw push bytes (<= 1; 1.0 when nothing was pushed)."""
+        if self.push_bytes_raw <= 0:
+            return 1.0
+        return self.push_bytes_wire / self.push_bytes_raw
+
+    @property
+    def pull_diff_saving(self) -> float:
+        """1 - wire/full pull bytes (0 when the reader model is off)."""
+        if self.pull_bytes_full <= 0:
+            return 0.0
+        return 1.0 - self.pull_bytes_wire / self.pull_bytes_full
+
+    @property
     def tick_batching_factor(self) -> float:
         """Sequential update passes per batched pass (>= 1): how many
         per-job step-functions one service tick replaces on average."""
@@ -177,6 +210,13 @@ class ClusterSimulator:
         running: Dict[str, TraceJob] = {}
         d_effs: Dict[str, float] = {}  # effective iteration durations
         last_t = t0
+        if cfg.push_compression is not None:
+            # Lazy like track_plan: the base simulator stays importable
+            # without the JAX-backed data-plane modules.
+            from repro.ps.compression import wire_bytes
+        else:
+            wire_bytes = None
+        dirty = min(1.0, max(0.0, cfg.pull_dirty_fraction))
         horizon = max(tj.arrival for tj in trace) + 1.0
         pending_work = len(trace)  # arrivals + exits not yet processed
 
@@ -212,6 +252,26 @@ class ClusterSimulator:
                     res.update_passes_sequential += dt * sum(rates)
                     res.update_passes_batched += dt * max(rates)
                     res.n_service_ticks += dt / cfg.tick_interval
+                if running and (wire_bytes is not None
+                                or cfg.pull_interval > 0):
+                    # Wire model: each job pushes its gradient bytes once
+                    # per effective iteration (tick-capped like above),
+                    # and readers pull it every pull_interval seconds --
+                    # full pulls raw, versioned diffs at the dirty
+                    # fraction of its blocks.
+                    cap = (1.0 / cfg.tick_interval
+                           if cfg.tick_interval > 0 else float("inf"))
+                    for jid, tj in running.items():
+                        rate = min(cap, 1.0 / max(1e-9, d_effs[jid]))
+                        nbytes = tj.profile.total_bytes
+                        res.push_bytes_raw += dt * rate * nbytes
+                        res.push_bytes_wire += dt * rate * (
+                            wire_bytes(nbytes // 4, cfg.push_compression)
+                            if wire_bytes is not None else nbytes)
+                        if cfg.pull_interval > 0:
+                            pulls = dt / cfg.pull_interval
+                            res.pull_bytes_full += pulls * nbytes
+                            res.pull_bytes_wire += pulls * nbytes * dirty
             last_t = now
 
         def track_plan() -> None:

@@ -1,0 +1,170 @@
+"""Push-path compression (PR 8): quantization round-trip bounds, block
+scaling edge cases, the error-feedback invariant, and the wire-size
+model -- property-based where randomness helps (hypothesis, or the
+seeded shim when it is not installed).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # fallback shim; see requirements-dev.txt
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.ps.compression import (
+    BLOCK,
+    ErrorFeedback,
+    _block_scales,
+    compress_decompress,
+    dequantize_int8,
+    ef_transform,
+    quantize_int8,
+    wire_bytes,
+)
+
+
+def _vec(seed, n, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+
+
+# ------------------------------------------------------------ int8 round trip
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=1, max_value=5000),
+       scale=st.floats(min_value=1e-3, max_value=1e3))
+def test_int8_round_trip_error_bound(seed, n, scale):
+    """Dequantized values sit within half a quantization step of the
+    input: |x - deq(q(x))| <= block_scale / 127 / 2 elementwise (the
+    round() in quantize_int8 picks the nearest of 255 levels)."""
+    x = _vec(seed, n, scale)
+    q, scales = quantize_int8(x)
+    err = np.abs(np.asarray(x - dequantize_int8(q, scales)))
+    per_elem = np.repeat(np.asarray(scales), BLOCK)[:n]
+    assert np.all(err <= per_elem / 127.0 * 0.5 + 1e-7)
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=1, max_value=5000))
+def test_int8_quantizer_outputs(seed, n):
+    x = _vec(seed, n)
+    q, scales = quantize_int8(x)
+    assert q.dtype == jnp.int8 and q.shape == (n,)
+    assert scales.shape == (-(-n // BLOCK),)
+    # clip keeps the code range symmetric: the max |x| of a block maps to
+    # exactly +-127, never -128.
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+
+
+# ------------------------------------------------------- _block_scales edges
+def test_block_scales_all_zero_block():
+    """A zero block quantizes to zeros and dequantizes to zeros (the
+    safe-scale guard, not a 0/0 NaN)."""
+    x = jnp.zeros((100,))
+    scales = _block_scales(x, 32)
+    np.testing.assert_array_equal(np.asarray(scales), 0.0)
+    q, s = quantize_int8(x, block=32)
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_int8(q, s, block=32)), 0.0)
+
+
+def test_block_scales_length_one():
+    scales = _block_scales(jnp.asarray([-3.5]), 8)
+    np.testing.assert_allclose(np.asarray(scales), [3.5])
+    q, s = quantize_int8(jnp.asarray([-3.5]), block=8)
+    np.testing.assert_allclose(np.asarray(dequantize_int8(q, s, block=8)),
+                               [-3.5], rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(min_value=1, max_value=300),
+       block=st.sampled_from([1, 3, 7, 32, 256]))
+def test_block_scales_ragged_lengths(n, block):
+    """Lengths not a multiple of the block: the pad must not leak into
+    any block's max (zero-padding |x| is safe because scales are maxes
+    of absolute values)."""
+    x = jnp.arange(1, n + 1, dtype=jnp.float32) * jnp.where(
+        jnp.arange(n) % 2 == 0, 1.0, -1.0)
+    scales = np.asarray(_block_scales(x, block))
+    assert scales.shape == (-(-n // block),)
+    xa = np.abs(np.asarray(x))
+    for b in range(scales.size):
+        np.testing.assert_allclose(
+            scales[b], xa[b * block:(b + 1) * block].max())
+
+
+# ------------------------------------------------------------- kind dispatch
+def test_compress_decompress_unknown_kind_raises():
+    with pytest.raises(ValueError, match="unknown compression"):
+        compress_decompress(jnp.ones((4,)), "fp8")
+
+
+def test_bf16_round_trip_is_cast():
+    x = _vec(3, 257)
+    np.testing.assert_array_equal(
+        np.asarray(compress_decompress(x, "bf16")),
+        np.asarray(x.astype(jnp.bfloat16).astype(jnp.float32)))
+
+
+# ------------------------------------------------------------ error feedback
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=1, max_value=3000),
+       kind=st.sampled_from(["bf16", "int8"]),
+       steps=st.integers(min_value=1, max_value=12))
+def test_error_feedback_invariant(seed, n, kind, steps):
+    """EF-SGD telescopes: sum of emitted updates + final residual ==
+    sum of gradients EXACTLY (each round satisfies q_t + r_t = g_t +
+    r_{t-1} by construction), so cumulative applied updates track
+    cumulative gradients within ONE quantization step (the residual)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), steps)
+    grads = [jax.random.normal(k, (n,)) for k in ks]
+    ef = ErrorFeedback((n,))
+    total_q = jnp.zeros((n,))
+    for g in grads:
+        total_q = total_q + ef.step(g, kind)
+    total_g = sum(grads)
+    np.testing.assert_allclose(np.asarray(total_q + ef.residual),
+                               np.asarray(total_g), rtol=1e-5, atol=1e-5)
+    # The gap is the LAST round's quantization error -- bounded by one
+    # step of the last compressed value, never an accumulating drift.
+    gap = np.abs(np.asarray(total_g - total_q))
+    if kind == "int8":
+        bound = np.repeat(np.asarray(
+            _block_scales(jnp.abs(total_g) + np.abs(np.asarray(total_q)),
+                          BLOCK)), BLOCK)[:n]
+        assert np.all(gap <= bound / 127.0 + 1e-5)
+
+
+def test_ef_transform_matches_manual_recurrence():
+    g, ef = _vec(5, 400), _vec(6, 400) * 0.01
+    q, resid = ef_transform(g, ef, "int8")
+    np.testing.assert_array_equal(
+        np.asarray(q), np.asarray(compress_decompress(g + ef, "int8")))
+    np.testing.assert_array_equal(np.asarray(resid),
+                                  np.asarray(g + ef - q))
+
+
+# ------------------------------------------------------------ wire-size model
+def test_wire_bytes_model():
+    assert wire_bytes(100, None) == 400
+    assert wire_bytes(100, "bf16") == 200
+    assert wire_bytes(100, "int8") == 100 + 4  # one scale block
+    assert wire_bytes(BLOCK + 1, "int8") == BLOCK + 1 + 8  # two blocks
+    assert wire_bytes(0, "int8") == 0
+    with pytest.raises(ValueError, match="unknown compression"):
+        wire_bytes(10, "fp8")
+    with pytest.raises(ValueError):
+        wire_bytes(-1, None)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(min_value=1, max_value=100_000))
+def test_wire_bytes_int8_under_half(n):
+    """The acceptance ratio the wire benchmark asserts: int8 payload +
+    scales always costs well under half the fp32 bytes."""
+    assert wire_bytes(n, "int8") <= 0.5 * wire_bytes(n, None)
+    assert wire_bytes(n, "bf16") == 0.5 * wire_bytes(n, None)

@@ -323,15 +323,105 @@ def test_small_k_tick_dispatches_per_job_and_stays_exact():
                                    rtol=1e-6, atol=1e-6)
 
 
-def test_engine_rejects_unknown_and_compressed_jobs():
-    rt, eng = _runtime(TREES_EVEN, engine=dict(max_staleness=0))
+def test_engine_rejects_unknown_and_accepts_compressed_jobs():
+    """Unknown jobs still fail loudly; compressed-push jobs flow through
+    the batched tick (PR 8): the shared state gains an error-feedback
+    buffer, the job trains, and the push-byte counters price the wire."""
+    rt, eng = _runtime(TREES_EVEN, jit=False,
+                       engine=dict(max_staleness=0, jit=False))
     with pytest.raises(ValueError, match="unknown job"):
         eng.submit_push("nope", {})
     with pytest.raises(ValueError, match="unknown job"):
         eng.pull("nope")
-    rt._jobs["a"]["step_opts"]["push_compression"] = "int8"
-    with pytest.raises(NotImplementedError, match="error-feedback"):
-        eng.step("a", {"target": _targets(TREES_EVEN)["a"]})
+    assert "ef" not in rt.state
+    tree_z = _tree(jax.random.PRNGKey(9), (32, 16))
+    nb = sum(4 * v.size for v in tree_z.values())
+    rt.add_job("z", tree_z, _quad_loss, lr=0.05, required_servers=1,
+               agg_throughput=nb / 0.6, push_compression="int8")
+    target = jax.tree_util.tree_map(lambda p: p * 0 + 1.0, tree_z)
+    losses = [float(eng.step("z", {"target": target})["loss"])
+              for _ in range(30)]
+    eng.drain()
+    assert "ef" in rt.state  # widened when the compressed push queued
+    assert losses[-1] < 0.5 * losses[0]
+    assert 0 < eng.stats.push_bytes_wire < eng.stats.push_bytes_raw
+
+
+def test_flat_engine_compressed_matches_runtime_step():
+    """Parity: a compressed job stepped through the engine lands bit-
+    exact on runtime.step()'s compressed path (both run the shared
+    ef_transform recurrence; eager, s=0)."""
+    targets = _targets(TREES_EVEN)
+
+    def build():
+        svc = ParameterService(total_budget=16, n_clusters=1,
+                               plan_pad_to=16)
+        rt = ServiceRuntime(svc, jit=False)
+        for i, (jid, tree) in enumerate(TREES_EVEN.items()):
+            nb = sum(4 * v.size for v in tree.values())
+            rt.add_job(jid, tree, _quad_loss, lr=0.05, required_servers=2,
+                       agg_throughput=nb / 0.45,
+                       **({"push_compression": "int8"} if i == 0 else {}))
+        return rt
+
+    rt_eng = build()
+    eng = rt_eng.attach_engine(max_staleness=0, jit=False)
+    rt_seq = build()
+    for _ in range(10):
+        for jid in TREES_EVEN:
+            eng.step(jid, {"target": targets[jid]})
+            rt_seq.step(jid, {"target": targets[jid]})
+    eng.drain()
+    for name in ("flat", "mu", "nu", "ef"):
+        np.testing.assert_array_equal(np.asarray(rt_eng.state[name]),
+                                      np.asarray(rt_seq.state[name]))
+
+
+# ------------------------------------------------- versioned pulls (PR 8)
+def test_versioned_pull_diffs_reconstruct_full_pull():
+    """since_version=0 bootstraps full; held vectors then diff-pull only
+    the blocks later ticks touched, and applying the chain reconstructs
+    the full payload bit-exactly.  An untouched job's diff is empty."""
+    rt, eng = _runtime(TREES_EVEN, jit=False,
+                       engine=dict(max_staleness=0, jit=False))
+    targets = _targets(TREES_EVEN)
+    for jid in TREES_EVEN:
+        eng.step(jid, {"target": targets[jid]})
+    eng.drain()
+
+    d0 = eng.pull("a", since_version=0)
+    assert d0.full and d0.bytes_wire == d0.bytes_full
+    eng.step("b", {"target": targets["b"]})  # "a" untouched this tick
+    eng.drain()
+    d1 = eng.pull("a", since_version=d0.version)
+    assert not d1.full and d1.block_ids.size == 0 and d1.bytes_wire == 0
+    eng.step("a", {"target": targets["a"]})
+    eng.drain()
+    d2 = eng.pull("a", since_version=d1.version)
+    assert not d2.full and d2.block_ids.size > 0
+    assert d2.bytes_wire <= d2.bytes_full
+    packed = d2.apply(d1.apply(d0.data))
+    np.testing.assert_array_equal(
+        np.asarray(packed), np.asarray(eng.pull("a", since_version=0).data))
+    assert eng.stats.n_diff_pulls == 2 and eng.stats.n_full_pulls == 2
+
+
+def test_versioned_pull_falls_back_full_across_replans():
+    """A replan invalidates every held vector (blocks renumber): the next
+    versioned pull of a stale vector is served full, with the new epoch."""
+    rt, eng = _runtime(TREES_EVEN, jit=False,
+                       engine=dict(max_staleness=0, jit=False))
+    targets = _targets(TREES_EVEN)
+    eng.step("a", {"target": targets["a"]})
+    eng.drain()
+    d0 = eng.pull("a", since_version=0)
+    nb = sum(4 * v.size for v in PROBE_EVEN.values())
+    rt.add_job("probe", PROBE_EVEN, _quad_loss, lr=0.05,
+               required_servers=1, agg_throughput=nb / 0.6)  # replan
+    d1 = eng.pull("a", since_version=d0.version)
+    assert d1.full and d1.version.epoch != d0.version.epoch
+    np.testing.assert_array_equal(np.asarray(d1.data),
+                                  np.asarray(d0.data))  # a never stepped
 
 
 # --------------------------------------------------- multi-job kernel

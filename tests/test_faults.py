@@ -372,3 +372,67 @@ def test_checkpoint_records_shard_health(tmp_path):
     rt.save_checkpoint(tmp_path, step=1)
     aux = load_aux(tmp_path, 1)
     assert aux["shard_health"] == {sid: HEALTHY for sid in rt.shard_ids}
+
+
+# --------------------------------------------- compressed-push faults (PR 8)
+def _sharded_mixed(n_shards=3, compressed=("a",), **engine_opts):
+    """Sharded fleet with a MIX of compressed and plain jobs."""
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+    rt = ShardedServiceRuntime(svc, jit=False)
+    engine_opts.setdefault("max_staleness", 0)
+    eng = rt.attach_engine(jit=False, **engine_opts)
+    for jid, t in TREES.items():
+        nbytes = sum(4 * v.size for v in t.values())
+        rt.add_job(jid, t, _loss, lr=0.05, required_servers=1,
+                   agg_throughput=nbytes / 0.2,
+                   **({"push_compression": "int8"}
+                      if jid in compressed else {}))
+    if n_shards > 1:
+        svc.scale_out(n_shards - 1)
+    return rt, eng
+
+
+def test_rollback_restores_ef_buffer_bit_exact():
+    """The error-feedback buffer lives in the lane's donated state, so a
+    snapshot rollback restores it with flat/mu/nu: a compressed job
+    recovered via replay matches a fault-free compressed twin at s=0 --
+    params AND the residual itself, bit for bit."""
+    inj = FaultInjector(seed=5)
+    rt, eng = _sharded_mixed(fault_injector=inj, snapshot_interval=4)
+    twin, teng = _sharded_mixed(snapshot_interval=4)
+    victim = rt.splan.job_layout("a").shard_ids[0]  # hosts the EF rows
+    inj.fail_apply(victim, at=3).fail_apply(victim, at=8)
+
+    _drive(eng, 12)
+    _drive(teng, 12)
+
+    assert inj.n_fired >= 1
+    assert eng.stats.n_rollbacks >= 1
+    assert eng.stats.n_quarantines == 0
+    _assert_params_equal(rt, twin)
+    for sid in rt.states:
+        st, tw = rt.states[sid], twin.states[sid]
+        assert ("ef" in st) == ("ef" in tw)
+        if "ef" in st:
+            np.testing.assert_array_equal(np.asarray(st["ef"]),
+                                          np.asarray(tw["ef"]))
+
+
+def test_chaos_mixed_compression_stays_quarantine_free():
+    """Seeded chaos over a mixed compressed/plain job fleet: transient
+    schedules must recover in place (no lane quarantined) and land on
+    the fault-free mixed twin bit for bit."""
+    for seed in (1, 3):
+        inj = FaultInjector(seed=seed)
+        rt, eng = _sharded_mixed(fault_injector=inj, snapshot_interval=4,
+                                 max_apply_retries=3)
+        twin, teng = _sharded_mixed(snapshot_interval=4)
+        inj.random_apply_faults(3, rt.shard_ids, max_at=15)
+        _drive(eng, 10)
+        _drive(teng, 10)
+        assert eng.stats.n_quarantines == 0, f"seed {seed} quarantined"
+        assert all(lane.health == HEALTHY
+                   for lane in eng._lanes.values())
+        _assert_params_equal(rt, twin)
+        if inj.n_fired:
+            assert eng.stats.n_rollbacks >= 1

@@ -325,24 +325,97 @@ def test_flat_engine_launch_accounting():
     assert per_job.n_per_job_dispatch == 1
 
 
-def test_push_compression_rejected_on_sharded_engine():
-    """Satellite: a push_compression job attaching to the sharded engine
-    fails LOUDLY with the job id and a pointer at the flat runtime's
-    error-feedback path, instead of silently dropping the option."""
+def test_push_compression_accepted_on_sharded_engine():
+    """Satellite: a push_compression job flows through the sharded engine
+    (PR 8) -- every hosting shard's state gains an error-feedback buffer,
+    the job trains through fused fleet ticks, and the wire counters land
+    on both the fleet stats and the hosting lanes'."""
     rt, eng = _runtime(engine=dict(max_staleness=0, jit=False))
-    nbytes = sum(4 * v.size for v in TREES["a"].values())
-    rt.add_job("z", _tree(jax.random.PRNGKey(9), (16,)), _loss, lr=0.05,
-               required_servers=1, agg_throughput=nbytes / 0.2,
+    tree_z = _tree(jax.random.PRNGKey(9), (32, 16))
+    nbytes = sum(4 * v.size for v in tree_z.values())
+    rt.add_job("z", tree_z, _loss, lr=0.05,
+               required_servers=2, agg_throughput=nbytes / 0.2,
                push_compression="int8")
-    with pytest.raises(ValueError, match="push_compression.*'z'|'z'.*push_compression"):
-        eng.step("z", {"target": jax.tree_util.tree_map(
-            lambda p: p * 0 + 1.0, _tree(jax.random.PRNGKey(9), (16,)))})
-    # The message routes users at the supported path.
-    with pytest.raises(ValueError, match="ServiceRuntime.step"):
-        eng.pull("z")
-    # Plain jobs on the same engine are unaffected.
+    target_z = jax.tree_util.tree_map(lambda p: p * 0 + 1.0, tree_z)
+    losses = []
+    for _ in range(30):
+        losses.append(float(eng.step("z", {"target": target_z})["loss"]))
+        for j in TREES:  # plain jobs tick through the same fused passes
+            eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+    assert losses[-1] < 0.5 * losses[0]
+    hosting = rt.splan.job_layout("z").shard_ids
+    for sid in hosting:
+        assert "ef" in rt.states[sid]
+        assert 0 < eng._lane(sid).stats.push_bytes_wire \
+            < eng._lane(sid).stats.push_bytes_raw
+    assert 0 < eng.stats.push_bytes_wire < eng.stats.push_bytes_raw
+
+
+def test_mixed_compression_fleet_matches_direct_step():
+    """Parity: compressed and plain jobs co-resident in one fused fleet
+    tick land bit-exact on the sequential ShardedServiceRuntime.step
+    twin -- the compressed path must be invisible to plain jobs and
+    identical (shared per-shard ef_transform) for compressed ones."""
+    def build(with_engine):
+        rt = ShardedServiceRuntime(_service(), jit=False)
+        eng = (rt.attach_engine(max_staleness=0, jit=False)
+               if with_engine else None)
+        for i, (jid, t) in enumerate(TREES.items()):
+            nbytes = sum(4 * v.size for v in t.values())
+            rt.add_job(jid, t, _loss, lr=0.05, required_servers=1,
+                       agg_throughput=nbytes / 0.2,
+                       **({"push_compression": "int8"} if i == 0 else {}))
+        rt.service.scale_out(2)
+        return rt, eng
+
+    rt_eng, eng = build(with_engine=True)
+    rt_seq, _ = build(with_engine=False)
+    for _ in range(10):
+        for j in TREES:
+            eng.step(j, {"target": TARGETS[j]})
+            rt_seq.step(j, {"target": TARGETS[j]})
+    eng.drain()
+    assert eng.stats.n_applied >= len(TREES)  # the fused path really ran
+    _assert_params_equal(rt_eng, rt_seq)
+    for sid in rt_eng.states:
+        st, tw = rt_eng.states[sid], rt_seq.states[sid]
+        assert ("ef" in st) == ("ef" in tw)
+        if "ef" in st:
+            np.testing.assert_array_equal(np.asarray(st["ef"]),
+                                          np.asarray(tw["ef"]))
+
+
+def test_sharded_versioned_pull_diffs_and_epoch_fence():
+    """Sharded diff pulls: a held vector pays only for blocks later
+    ticks touched (zero for an untouched job), the diff chain
+    reconstructs the full payload bit-exactly, and a replan's epoch
+    bump sends stale vectors to the full-pull fallback."""
+    rt, eng = _runtime(engine=dict(max_staleness=0, jit=False))
+    for j in TREES:
+        eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+
+    d0 = eng.pull("a", since_version=0)
+    assert d0.full
+    eng.step("b", {"target": TARGETS["b"]})  # "a" untouched
+    eng.drain()
+    d1 = eng.pull("a", since_version=d0.version)
+    assert not d1.full and d1.block_ids.size == 0 and d1.bytes_wire == 0
     eng.step("a", {"target": TARGETS["a"]})
     eng.drain()
+    d2 = eng.pull("a", since_version=d1.version)
+    assert not d2.full and 0 < d2.bytes_wire <= d2.bytes_full
+    packed = d2.apply(d1.apply(d0.data))
+    np.testing.assert_array_equal(
+        np.asarray(packed),
+        np.asarray(eng.pull("a", since_version=0).data))
+
+    nb = sum(4 * v.size for v in TREES["a"].values())
+    rt.add_job("probe", _tree(jax.random.PRNGKey(9), (16,)), _loss,
+               lr=0.05, required_servers=1, agg_throughput=nb / 0.2)
+    d3 = eng.pull("a", since_version=d2.version)
+    assert d3.full and d3.version.epoch != d2.version.epoch
 
 
 def test_n_launches_surfaced_in_debug_stats():
