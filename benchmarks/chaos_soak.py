@@ -1,0 +1,49 @@
+"""Chaos soak (PR 9): the fig11-style trace replayed through the REAL
+sharded data plane under a seeded fault schedule.
+
+Three sections, all driven by ``repro.sim.replay`` (eager, CPU):
+
+* ``chaos``: the seeded soak -- job arrivals/exits from the synthetic
+  Philly-like trace, the autoscaler resizing the fleet from measured
+  load, injected apply faults (snapshot rollback), a boundary AND a
+  mid-migration ``fail_migration`` (replan transaction abort -> registry
+  rollback -> retry), a dropped push piece, a killed shard
+  (quarantine -> ``recover_shard``), and a dead trainer reclaimed by its
+  lease.  Acceptance rows: zero registry/runtime divergence across every
+  window, and the dead job reclaimed within one lease interval.
+
+* ``nofault``: the identical replay with chaos off vs a FLAT eager
+  ``ServiceRuntime`` twin -- every live job's parameters bit-exact every
+  window at ``max_staleness=0``.
+
+* ``replan``: wall-clock of a RECOVERED replan (one injected migration
+  fault, abort + rollback + retry to success) vs a clean one.
+
+Run: PYTHONPATH=src python benchmarks/run.py --only chaos \
+         --json BENCH_chaos.json
+"""
+
+import os
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("HOTPATH_SMOKE"))
+
+
+def rows():
+    from repro.sim.replay import (ReplayConfig, replan_overhead_micro,
+                                  report_rows, run_replay)
+
+    windows = 8 if _smoke() else 12
+    n_jobs = 10 if _smoke() else 14
+    chaos = run_replay(ReplayConfig(chaos=True, max_windows=windows,
+                                    n_jobs=n_jobs))
+    parity = run_replay(ReplayConfig(chaos=False, parity_twin=True,
+                                     max_windows=windows, n_jobs=n_jobs))
+    micro = replan_overhead_micro(n_cycles=2 if _smoke() else 3)
+    return report_rows(chaos, parity, micro)
+
+
+if __name__ == "__main__":
+    for name, value, derived in rows():
+        print(f'{name},{value},"{derived}"')

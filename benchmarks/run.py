@@ -33,6 +33,7 @@ MODULES = [
     ("roofline", "roofline"),
     ("recovery", "recovery"),
     ("wire", "wire_path"),
+    ("chaos", "chaos_soak"),
 ]
 
 

@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Chaos-soak trace replay CLI (PR 9).
+
+Replays the synthetic Philly-like trace (``repro.sim.trace``) through the
+REAL sharded data plane -- ``ShardedServiceRuntime`` + sharded tick
+engine + ``ElasticScaler`` + ``FaultInjector`` -- twice:
+
+1. chaos on: seeded apply/migration/kill/drop faults plus a dead trainer
+   reclaimed by its lease; every window asserts the control plane and
+   the data plane agree on the layout.
+2. chaos off: the same replay vs a flat eager twin, bit-exact at s=0.
+
+Exits non-zero if any invariant fails (registry/runtime divergence,
+parity violation, lease reclaim slower than one interval), and seeds
+``BENCH_chaos.json`` with the same row payload shape as
+``benchmarks/run.py --json``.
+
+Usage:
+    PYTHONPATH=src python scripts/replay_trace.py --smoke
+    PYTHONPATH=src python scripts/replay_trace.py --windows 24 \
+        --jobs 30 --seed 3 --json BENCH_chaos.json
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink the soak for CI (8 windows, 10 jobs)")
+    ap.add_argument("--windows", type=int, default=12,
+                    help="replay windows (default 12)")
+    ap.add_argument("--jobs", type=int, default=14,
+                    help="trace jobs generated (default 14)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace + fault-schedule seed (default 0)")
+    ap.add_argument("--json", default="BENCH_chaos.json", metavar="PATH",
+                    help="write benchmark rows here (default "
+                         "BENCH_chaos.json; '-' to skip)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print the per-window log")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.windows, args.jobs = min(args.windows, 8), min(args.jobs, 10)
+
+    from repro.sim.replay import (ReplayConfig, replan_overhead_micro,
+                                  report_rows, run_replay)
+
+    print(f"chaos soak: {args.jobs} trace jobs, {args.windows} windows, "
+          f"seed {args.seed}")
+    chaos = run_replay(ReplayConfig(chaos=True, max_windows=args.windows,
+                                    n_jobs=args.jobs, seed=args.seed))
+    parity = run_replay(ReplayConfig(chaos=False, parity_twin=True,
+                                     max_windows=args.windows,
+                                     n_jobs=args.jobs, seed=args.seed))
+    micro = replan_overhead_micro(n_cycles=2 if args.smoke else 3)
+    if args.verbose:
+        for w in chaos["windows"]:
+            print("  " + " ".join(f"{k}={v}" for k, v in w.items()))
+
+    rows = report_rows(chaos, parity, micro)
+    for name, value, derived in rows:
+        print(f'{name},{value},"{derived}"')
+
+    failures = []
+    if chaos["registry_divergence_windows"] != 0:
+        failures.append(
+            f"registry/runtime divergence in "
+            f"{chaos['registry_divergence_windows']} window(s)")
+    if parity["parity_violations"] != 0:
+        failures.append(
+            f"{parity['parity_violations']} no-fault parity violation(s) "
+            f"vs the flat twin")
+    if chaos["dead_window"] is not None:
+        lat = chaos["reclaim_latency_windows"]
+        if lat is None or lat > int(chaos["lease_interval"]) + 1:
+            failures.append(
+                f"dead trainer reclaim latency {lat} windows exceeds the "
+                f"lease interval ({chaos['lease_interval']})")
+    if chaos["n_replan_aborts"] != chaos["n_replan_retries"]:
+        failures.append(
+            f"{chaos['n_replan_aborts']} replan abort(s) but only "
+            f"{chaos['n_replan_retries']} retried -- some replan died "
+            f"without recovery")
+
+    if args.json != "-":
+        payload = {"smoke": bool(args.smoke), "modules": ["chaos"],
+                   "rows": [{"name": n, "value": v, "derived": d}
+                            for n, v, d in rows]}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f'json/written,{len(rows)},"{args.json}"')
+
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
+    print(f"OK: {chaos['n_faults_fired']} faults absorbed, "
+          f"{chaos['n_replan_aborts']} replan(s) rolled back and retried, "
+          f"dead trainer reclaimed in {chaos['reclaim_latency_windows']} "
+          f"window(s), zero divergence, parity bit-exact")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

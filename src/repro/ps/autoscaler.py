@@ -77,11 +77,18 @@ class ElasticScaler:
         for window in workload:
             for job, batch in window:
                 eng.step(job, batch)
-            scaler.observe()        # fleet follows the measured load
+            eng.expire_leases()     # reclaim silent trainers first ...
+            scaler.observe()        # ... so the fleet sees the freed load
 
     ``observe()`` is pull-based on purpose: the caller decides the window
     (wall clock, tick rounds, or trace epochs), so simulators, benchmarks
-    and tests replay the identical policy deterministically.
+    and tests replay the identical policy deterministically.  Run the
+    engine's ``expire_leases()`` sweep on the same cadence, BEFORE
+    ``observe()``: a reclaimed job's queued pieces leave with it (both
+    halves of the load signal drop -- no window applies them and the
+    drain occupancy is cancelled), so the fleet shrinks away from dead
+    trainers instead of holding capacity for their stalled queues
+    (``scripts/replay_trace.py`` is the end-to-end demonstration).
     """
 
     def __init__(self, runtime, config: Optional[AutoscalerConfig] = None):

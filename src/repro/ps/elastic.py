@@ -543,12 +543,18 @@ def migrate_sharded_state(
     Returns ``(new_states, moved_elements, touched_jobs)``; the element
     count and touched set equal :func:`sharded_transition_summary`'s
     exactly -- the property the elastic-scaling benchmark asserts.
+
+    Abort safety: the input ``states`` are never mutated -- each shard's
+    relayout produces a NEW dict and arrivals scatter functionally -- so
+    a fault at the boundary or at any mid-migration fail point leaves
+    the caller's old states fully intact; nothing commits until the
+    caller assigns the returned ``new_states``.
     """
+    desc = f"sharded:{old.n_shards}->{new.n_shards}"
     if fault_injector is not None:
         # Chaos hook: a fault here models a migration dying BEFORE any
         # state moved (states untouched, caller's replan aborts).
-        fault_injector.on_migration(
-            f"sharded:{old.n_shards}->{new.n_shards}")
+        fault_injector.on_migration(desc)
     moved = 0
     touched: set = set()
     new_states: Dict[str, Dict[str, Any]] = {}
@@ -609,6 +615,11 @@ def migrate_sharded_state(
                         else pieces[0])
                 st[k] = buf.at[idx].set(
                     vals, unique_indices=True, indices_are_sorted=True)
+        if fault_injector is not None:
+            # Mid-migration fail point: this shard is fully relaid
+            # (delta + cross-shard arrivals); a fault here probes that
+            # a partially-built new_states is simply discarded.
+            fault_injector.on_migration_progress(len(new_states), desc)
     # Jobs that only exist on REMOVED shards (or left the fleet) are
     # touched too: diff the per-shard fingerprints like the summary does.
     _, sum_touched = sharded_transition_summary(old, new)

@@ -138,7 +138,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ps.compression import ef_transform, wire_bytes
-from repro.ps.faults import HEALTHY, QUARANTINED, EngineQuarantinedError
+from repro.ps.faults import (
+    HEALTHY,
+    QUARANTINED,
+    EngineQuarantinedError,
+    LeaseExpiredError,
+)
 from repro.ps.plan import FlatPlan
 from repro.ps.runtime import (
     _gather_owned,
@@ -168,7 +173,7 @@ class PushFuture:
     """
 
     __slots__ = ("job_id", "_engine", "_done", "_step", "_remaining",
-                 "_cancelled", "_rolled_back")
+                 "_cancelled", "_cancel_exc", "_rolled_back")
 
     def __init__(self, job_id: str, engine, parts: int = 1):
         self.job_id = job_id
@@ -177,6 +182,7 @@ class PushFuture:
         self._step = None
         self._remaining = int(parts)
         self._cancelled = None  # str reason once cancelled
+        self._cancel_exc = None  # contextual exception behind the cancel
         self._rolled_back = False  # applied, then lost with a dead shard
 
     def done(self) -> bool:
@@ -196,24 +202,35 @@ class PushFuture:
         """Block (force service ticks) until applied; returns the job's
         1-based step count as of this push.
 
-        ``timeout`` (seconds, wall clock): raise ``TimeoutError`` if the
-        push has not applied in time -- e.g. its hosting lane is
-        quarantined, or a piece was lost in transit.  With no timeout the
-        call never spins forever either: if ticking makes no progress and
-        the push cannot resolve, it raises the blocking lane's
-        :class:`~repro.ps.faults.EngineQuarantinedError` (or a
+        ``timeout`` (seconds, wall clock): raise at the deadline if the
+        push has not applied in time.  The error is CONTEXTUAL when the
+        engine knows why the push is stuck: a push whose lane was
+        quarantined mid-wait raises that lane's
+        :class:`~repro.ps.faults.EngineQuarantinedError`, and a push
+        whose job was lease-expired raises the stored
+        :class:`~repro.ps.faults.LeaseExpiredError`; only an
+        unexplained stall (e.g. a piece dropped in transit) raises a
+        bare ``TimeoutError``.  With no timeout the call never spins
+        forever either: if ticking makes no progress and the push cannot
+        resolve, it raises the blocking lane's quarantine error (or a
         ``RuntimeError`` when the piece is simply gone).  A cancelled
-        push raises ``RuntimeError`` immediately.  Note the flat engine
-        has a single lane, so its quarantine raises out of ``tick()``
-        itself regardless of ``timeout``."""
+        push without a stored exception raises ``RuntimeError``
+        immediately.  Note the flat engine has a single lane, so its
+        quarantine raises out of ``tick()`` itself regardless of
+        ``timeout``."""
         deadline = (None if timeout is None
                     else time.monotonic() + float(timeout))
         while not self._done:
             if self._cancelled is not None:
+                if self._cancel_exc is not None:
+                    raise self._cancel_exc
                 raise RuntimeError(
                     f"push for job {self.job_id!r} will never apply: "
                     f"{self._cancelled}")
             if deadline is not None and time.monotonic() >= deadline:
+                stall = self._engine._stall_error(self.job_id)
+                if isinstance(stall, EngineQuarantinedError):
+                    raise stall
                 raise TimeoutError(
                     f"push for job {self.job_id!r} still unapplied after "
                     f"{timeout} s (hosting lane quarantined, or a piece "
@@ -252,9 +269,14 @@ class PushFuture:
         if not self._done:
             self._remaining += 1
 
-    def _cancel(self, reason: str) -> None:
-        if not self._done:
+    def _cancel(self, reason: str,
+                exc: Optional[BaseException] = None) -> None:
+        """Cancel with an optional contextual exception for ``result()``
+        to re-raise (e.g. :class:`LeaseExpiredError`).  The FIRST
+        cancellation wins -- later ones must not overwrite its context."""
+        if not self._done and self._cancelled is None:
             self._cancelled = reason
+            self._cancel_exc = exc
 
 
 @dataclass
@@ -275,6 +297,7 @@ class TickStats:
     n_replayed: int = 0  # applied pushes re-queued for replay by rollbacks
     n_quarantines: int = 0  # lanes that exhausted retries and stopped
     n_fleet_fallbacks: int = 0  # fused fleet failures replayed per-shard
+    n_lease_expirations: int = 0  # jobs reclaimed by expire_leases (PR 9)
     # Wire accounting (PR 8).  Push bytes are counted at submit time with
     # the job's ``push_compression`` wire-size model (fp32 4 B/elem, bf16
     # 2, int8 1 + one fp32 scale per block); pull bytes count the payload
@@ -421,13 +444,18 @@ class ServiceTickEngine:
                  queue_capacity: Optional[int] = None, jit: bool = True,
                  interpret: Optional[bool] = None, min_batch_jobs: int = 3,
                  snapshot_interval: int = 8, max_apply_retries: int = 1,
-                 fault_injector=None):
+                 fault_injector=None, retry_policy=None,
+                 lease_interval: Optional[float] = None, clock=None):
         if max_staleness < 0:
             raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
         if snapshot_interval < 0:
             raise ValueError(
                 f"snapshot_interval must be >= 0 (0 disables rollback "
                 f"recovery), got {snapshot_interval}")
+        if lease_interval is not None and lease_interval <= 0:
+            raise ValueError(
+                f"lease_interval must be > 0 (None disables leases), "
+                f"got {lease_interval}")
         self.runtime = runtime
         self.max_staleness = int(max_staleness)
         self.queue_capacity = (self.max_staleness + 1 if queue_capacity is None
@@ -447,8 +475,23 @@ class ServiceTickEngine:
         # (a jitted exec failure then quarantines immediately, since the
         # donated buffers are unrecoverable).
         self.snapshot_interval = int(snapshot_interval)
-        self.max_apply_retries = int(max_apply_retries)
+        # Apply-retry schedule: ``retry_policy`` (repro.ps.faults
+        # .RetryPolicy) wins over the legacy ``max_apply_retries`` count;
+        # the attribute is kept in sync for introspection.
+        if retry_policy is None:
+            from repro.ps.faults import RetryPolicy
+
+            retry_policy = RetryPolicy(max_retries=int(max_apply_retries))
+        self.retry_policy = retry_policy
+        self.max_apply_retries = int(retry_policy.max_retries)
         self.fault_injector = fault_injector
+        # Job leases: pushes/pulls renew; ``expire_leases()`` reclaims
+        # jobs whose trainers went silent.  ``clock`` is injectable so
+        # chaos tests drive expiry deterministically.
+        self.lease_interval = (None if lease_interval is None
+                               else float(lease_interval))
+        self._clock = clock if clock is not None else time.monotonic
+        self._leases: Dict[str, float] = {}  # job -> expiry deadline
         self.stats = TickStats()
         self.health = HEALTHY
         self.quarantine_error: Optional[EngineQuarantinedError] = None
@@ -499,12 +542,59 @@ class ServiceTickEngine:
             # One sync at first contact; ticks keep the mirror in step.
             self._counts[job_id] = int(jax.device_get(
                 self.runtime.state["counts"][job_id]))
+        self._renew_lease(job_id)
         return self._queues.setdefault(job_id, deque())
 
     def outstanding(self, job_id: str) -> int:
         """Pushes submitted by the job but not yet applied by a tick."""
         q = self._queues.get(job_id)
         return len(q) if q else 0
+
+    # --------------------------------------------------------------- leases
+    def _renew_lease(self, job_id: str) -> None:
+        if self.lease_interval is not None:
+            self._leases[job_id] = self._clock() + self.lease_interval
+
+    def lease_deadline(self, job_id: str) -> Optional[float]:
+        """The job's current lease expiry (None: leases off / no contact)."""
+        return self._leases.get(job_id)
+
+    def expire_leases(self) -> Tuple[str, ...]:
+        """Reclaim every job whose lease has lapsed; returns their ids.
+
+        Every push/pull renews the submitting job's lease, so only a
+        trainer that went SILENT for a full ``lease_interval`` expires.
+        Reclaim is graceful: queued pieces are cancelled with a
+        contextual :class:`~repro.ps.faults.LeaseExpiredError` (held
+        futures re-raise it), then the job leaves through
+        ``runtime.remove_job`` -- i.e. the transactional replan path --
+        so its space frees and the autoscaler sees the load drop.  If
+        that replan itself aborts, the lease is re-armed one interval
+        out and the reclaim retries at the next ``expire_leases()``."""
+        if self.lease_interval is None:
+            return ()
+        now = self._clock()
+        expired = tuple(sorted(
+            j for j, deadline in self._leases.items()
+            if deadline <= now and j in self.runtime._jobs))
+        for job_id in expired:
+            err = LeaseExpiredError(job_id, self._leases[job_id], now)
+            q = self._queues.get(job_id)
+            if q:
+                for _, fut, _ in q:
+                    if fut is not None:
+                        fut._cancel(str(err), exc=err)
+                q.clear()
+            self._leases.pop(job_id, None)
+            self.stats.n_lease_expirations += 1
+            try:
+                self.runtime.remove_job(job_id)
+            except Exception:
+                # Reclaim replan failed: re-arm the lease so the next
+                # sweep retries instead of leaking the job forever.
+                self._leases[job_id] = now + self.lease_interval
+                raise
+        return expired
 
     def quiesce_for_replan(self, touched) -> int:
         """Drain ONLY the touched jobs' queues ahead of a migration.
@@ -581,6 +671,7 @@ class ServiceTickEngine:
         self._snapshot_log = [e for e in self._snapshot_log
                               if e[0] != job_id]
         self._counts.pop(job_id, None)
+        self._leases.pop(job_id, None)
         self._pull_fns.pop(job_id, None)
         self._grad_fns.pop(job_id, None)
         self._pack_fns.pop(job_id, None)
@@ -899,7 +990,8 @@ class ServiceTickEngine:
         table."""
         self._failures += 1
         can_roll = self._snapshot is not None
-        if can_roll and self._failures <= self.max_apply_retries:
+        if can_roll and self.retry_policy.should_retry(self._failures):
+            self.retry_policy.backoff(self._failures)
             self._rollback()
             return
         if can_roll:
@@ -1060,7 +1152,9 @@ class ShardedTickEngine:
                  queue_capacity: Optional[int] = None, jit: bool = True,
                  interpret: Optional[bool] = None, min_batch_jobs: int = 3,
                  fleet_tick: str = "fused", snapshot_interval: int = 8,
-                 max_apply_retries: int = 1, fault_injector=None):
+                 max_apply_retries: int = 1, fault_injector=None,
+                 retry_policy=None, lease_interval: Optional[float] = None,
+                 clock=None):
         if max_staleness < 0:
             raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
         if fleet_tick not in ("fused", "per_shard"):
@@ -1070,6 +1164,10 @@ class ShardedTickEngine:
             raise ValueError(
                 f"snapshot_interval must be >= 0 (0 disables rollback "
                 f"recovery), got {snapshot_interval}")
+        if lease_interval is not None and lease_interval <= 0:
+            raise ValueError(
+                f"lease_interval must be > 0 (None disables leases), "
+                f"got {lease_interval}")
         self.runtime = runtime
         self.max_staleness = int(max_staleness)
         self.queue_capacity = (self.max_staleness + 1 if queue_capacity is None
@@ -1083,8 +1181,20 @@ class ShardedTickEngine:
         # ticks, so one shard's failure rolls back (and quarantines) that
         # lane alone.
         self.snapshot_interval = int(snapshot_interval)
-        self.max_apply_retries = int(max_apply_retries)
+        # Shared retry schedule (see ServiceTickEngine): retry_policy
+        # wins over the legacy max_apply_retries count.
+        if retry_policy is None:
+            from repro.ps.faults import RetryPolicy
+
+            retry_policy = RetryPolicy(max_retries=int(max_apply_retries))
+        self.retry_policy = retry_policy
+        self.max_apply_retries = int(retry_policy.max_retries)
         self.fault_injector = fault_injector
+        # Job leases (see ServiceTickEngine.expire_leases).
+        self.lease_interval = (None if lease_interval is None
+                               else float(lease_interval))
+        self._clock = clock if clock is not None else time.monotonic
+        self._leases: Dict[str, float] = {}  # job -> expiry deadline
         self.stats = TickStats()  # fleet-aggregate counters
         self._jit = jit
         self._interpret = interpret
@@ -1129,7 +1239,47 @@ class ShardedTickEngine:
         if job_id not in self._counts:
             self._counts[job_id] = int(jax.device_get(
                 self.runtime.counts[job_id]))
+        self._renew_lease(job_id)
         return layout
+
+    # --------------------------------------------------------------- leases
+    def _renew_lease(self, job_id: str) -> None:
+        if self.lease_interval is not None:
+            self._leases[job_id] = self._clock() + self.lease_interval
+
+    def lease_deadline(self, job_id: str) -> Optional[float]:
+        """The job's current lease expiry (None: leases off / no contact)."""
+        return self._leases.get(job_id)
+
+    def expire_leases(self) -> Tuple[str, ...]:
+        """Reclaim every job whose lease has lapsed; returns their ids.
+
+        Identical contract to :meth:`ServiceTickEngine.expire_leases`,
+        with the job's queued PIECES cancelled on every hosting lane
+        before the job leaves through the transactional replan path."""
+        if self.lease_interval is None:
+            return ()
+        now = self._clock()
+        expired = tuple(sorted(
+            j for j, deadline in self._leases.items()
+            if deadline <= now and j in self.runtime._jobs))
+        for job_id in expired:
+            err = LeaseExpiredError(job_id, self._leases[job_id], now)
+            for lane in self._lanes.values():
+                q = lane.queues.get(job_id)
+                if q:
+                    for _, _, fut, _ in q:
+                        if fut is not None:
+                            fut._cancel(str(err), exc=err)
+                    q.clear()
+            self._leases.pop(job_id, None)
+            self.stats.n_lease_expirations += 1
+            try:
+                self.runtime.remove_job(job_id)
+            except Exception:
+                self._leases[job_id] = now + self.lease_interval
+                raise
+        return expired
 
     def outstanding(self, job_id: str) -> int:
         """Deepest per-shard queue of the job's not-yet-applied pieces."""
@@ -1535,7 +1685,8 @@ class ShardedTickEngine:
         work surfaces the stored error via drain/pull/result)."""
         lane.failures += 1
         can_roll = lane.snapshot is not None
-        if can_roll and lane.failures <= self.max_apply_retries:
+        if can_roll and self.retry_policy.should_retry(lane.failures):
+            self.retry_policy.backoff(lane.failures)
             self._rollback_lane(lane)
             return
         if can_roll:
@@ -1805,6 +1956,7 @@ class ShardedTickEngine:
             k: v for k, v in self._fleet_appliers.items()
             if not any(job_id in jobs for _, jobs in k)}
         self._counts.pop(job_id, None)
+        self._leases.pop(job_id, None)
         self._pull_fns.pop(job_id, None)
         self._grad_fns.pop(job_id, None)
         self._pack_fns.pop(job_id, None)

@@ -39,8 +39,9 @@ from __future__ import annotations
 
 import math
 import random
+import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 __all__ = [
     "HEALTHY",
@@ -48,6 +49,9 @@ __all__ = [
     "EngineQuarantinedError",
     "InjectedFault",
     "FaultInjector",
+    "LeaseExpiredError",
+    "ReplanAbortedError",
+    "RetryPolicy",
 ]
 
 # Lane health states (a lane is one shard space's service loop; the flat
@@ -106,6 +110,85 @@ class EngineQuarantinedError(RuntimeError):
             f"ticking -- {remedy}")
 
 
+class ReplanAbortedError(RuntimeError):
+    """A replan transaction exhausted its retries and was rolled back.
+
+    ``ParameterService`` runs every registry mutation (register/exit/
+    scale/evacuate) as a commit-or-abort transaction (PR 9): when a
+    listener -- i.e. the data plane's quiesce -> migrate -> commit
+    sequence -- fails, the registry is restored to its pre-transaction
+    snapshot and the mutation is retried under a :class:`RetryPolicy`.
+    This error means every attempt failed; control and data plane are
+    left AGREEING on the old layout.  ``original`` carries the last
+    underlying failure.
+    """
+
+    def __init__(self, op: str, attempts: int, original: BaseException):
+        self.op = op
+        self.attempts = int(attempts)
+        self.original = original
+        super().__init__(
+            f"replan transaction {op!r} aborted after {attempts} "
+            f"attempt(s): {type(original).__name__}: {original}; the "
+            f"task registry was rolled back to its pre-transaction "
+            f"snapshot, so control and data plane agree on the old "
+            f"layout")
+
+
+class LeaseExpiredError(RuntimeError):
+    """A job's lease lapsed and the engine reclaimed it.
+
+    Pushes and pulls renew a job's lease; a trainer that dies silently
+    stops renewing, and ``expire_leases()`` cancels its queued pieces
+    with this error and removes the job through the transactional
+    replan path, freeing its space for the autoscaler.
+    """
+
+    def __init__(self, job_id: str, deadline: float, now: float):
+        self.job_id = job_id
+        self.deadline = float(deadline)
+        self.now = float(now)
+        super().__init__(
+            f"job {job_id!r} lease expired at t={deadline:g} "
+            f"(now t={now:g}): its trainer stopped pushing/pulling, so "
+            f"the engine cancelled its queued pieces and reclaimed its "
+            f"space -- re-register the job to resume")
+
+
+@dataclass
+class RetryPolicy:
+    """Bounded-attempts + exponential-backoff retry schedule, shared by
+    the apply path (PR 7's snapshot-rollback retries) and the replan
+    transactions (PR 9).
+
+    ``should_retry(failures)`` is consulted with the number of
+    CONSECUTIVE failures so far (1-based); ``backoff(attempt)`` sleeps
+    ``min(max_delay, base_delay * 2**(attempt-1))`` seconds.  The
+    default ``base_delay=0.0`` disables sleeping (deterministic tests);
+    ``sleep`` is injectable for the same reason.
+    """
+
+    max_retries: int = 2
+    base_delay: float = 0.0
+    max_delay: float = 1.0
+    sleep: Callable[[float], None] = time.sleep
+
+    def should_retry(self, failures: int) -> bool:
+        return failures <= self.max_retries
+
+    def delay(self, attempt: int) -> float:
+        if self.base_delay <= 0.0:
+            return 0.0
+        return min(self.max_delay,
+                   self.base_delay * (2.0 ** (max(attempt, 1) - 1)))
+
+    def backoff(self, attempt: int) -> float:
+        d = self.delay(attempt)
+        if d > 0.0:
+            self.sleep(d)
+        return d
+
+
 @dataclass
 class _Rule:
     """One armed fault: fires on matching occurrences ``at`` through
@@ -119,6 +202,10 @@ class _Rule:
     times: float = 1  # math.inf = permanent (a killed shard)
     seen: int = 0  # matching occurrences observed so far
     fired: int = 0
+    # fail_migration only: None = fire at the migration BOUNDARY (before
+    # any shard is relaid); K = fire mid-migration, after K shards of
+    # the new plan have been relaid (abort-safety probe).
+    after_shards: Optional[int] = None
 
     def matches(self, shard_id: Optional[str],
                 job_id: Optional[str]) -> bool:
@@ -158,6 +245,8 @@ class FaultInjector:
     * ``on_push(job_id, shard_id)`` -- per enqueued piece; returns
       ``"deliver"``, ``"drop"``, or ``"duplicate"``.
     * ``on_migration(desc)`` -- at each state-migration boundary.
+    * ``on_migration_progress(n_relaid, desc)`` -- after each shard of a
+      sharded migration is relaid (mid-migration fail points).
     """
 
     def __init__(self, seed: int = 0):
@@ -201,10 +290,22 @@ class FaultInjector:
                                 job_id=job_id, at=at, times=times))
         return self
 
-    def fail_migration(self, *, at: int = 1,
-                       times: float = 1) -> "FaultInjector":
-        """Fail the ``at``-th state-migration boundary."""
-        self.rules.append(_Rule("fail_migration", at=at, times=times))
+    def fail_migration(self, *, at: int = 1, times: float = 1,
+                       after_shards: Optional[int] = None
+                       ) -> "FaultInjector":
+        """Fail the ``at``-th state migration.
+
+        With ``after_shards=None`` (default) the fault fires at the
+        migration BOUNDARY, before any shard is relaid.  With
+        ``after_shards=K`` it fires MID-migration, once K shards of the
+        new plan have been relaid -- ``migrate_sharded_state`` is
+        functional over its input states, so an abort at that point must
+        leave the old states untouched (the replan transaction's
+        abort-safety probe).  ``at`` counts matching migrations, not
+        shards.
+        """
+        self.rules.append(_Rule("fail_migration", at=at, times=times,
+                                after_shards=after_shards))
         return self
 
     def random_apply_faults(self, n: int, shard_ids, *,
@@ -251,14 +352,39 @@ class FaultInjector:
         return action
 
     def on_migration(self, desc: str = "") -> None:
-        """Raise InjectedFault if an armed migration rule fires."""
+        """Raise InjectedFault if an armed BOUNDARY migration rule fires
+        (mid-migration rules wait for ``on_migration_progress``)."""
         for rule in self.rules:
-            if rule.kind != "fail_migration":
+            if rule.kind != "fail_migration" or rule.after_shards is not None:
                 continue
             if rule.observe():
                 raise self._fire(rule, None, desc or None)
+
+    def on_migration_progress(self, n_relaid: int, desc: str = "") -> None:
+        """Raise InjectedFault if a mid-migration rule armed for this
+        progress point (``after_shards == n_relaid``) fires.  Called by
+        ``migrate_sharded_state`` after each shard of the new plan is
+        relaid; each matching call is one occurrence of the rule, so
+        ``at`` counts migrations reaching that point."""
+        for rule in self.rules:
+            if rule.kind != "fail_migration" or rule.after_shards is None:
+                continue
+            if rule.after_shards != n_relaid:
+                continue
+            if rule.observe():
+                raise self._fire(
+                    rule, None,
+                    f"{desc or 'migration'}@after_shards={n_relaid}")
 
     # ---------------------------------------------------------- inspection
     @property
     def n_fired(self) -> int:
         return len(self.log)
+
+    def fire_counts(self) -> Dict[str, int]:
+        """Fired-fault counts by rule kind (from ``log``) -- surfaced in
+        the runtimes' ``debug_stats()``."""
+        counts: Dict[str, int] = {}
+        for entry in self.log:
+            counts[entry["kind"]] = counts.get(entry["kind"], 0) + 1
+        return counts

@@ -187,9 +187,19 @@ class ServiceRuntime:
             # ones whose layout the exit actually disturbs.
             self._engine.quiesce_for_replan([job_id])
             self._engine._forget_job(job_id)
-        self._jobs.pop(job_id)
-        self._steps.pop(job_id, None)
-        self.service.job_exit(job_id)
+        info = self._jobs.pop(job_id)
+        step = self._steps.pop(job_id, None)
+        try:
+            self.service.job_exit(job_id)
+        except Exception:
+            # The exit replan aborted with the registry rolled back (see
+            # ParameterService._transact): restore this runtime's entries
+            # so both planes still agree the job is live.  Its queues
+            # were already drained, so nothing was lost.
+            self._jobs[job_id] = info
+            if step is not None:
+                self._steps[job_id] = step
+            raise
         if self.state is not None and job_id in self.state.get("counts", {}):
             counts = dict(self.state["counts"])
             counts.pop(job_id)
@@ -227,9 +237,16 @@ class ServiceRuntime:
             if engine is not None:
                 engine._on_plan_change()
             return
+        # Everything up to the COMMIT below is computed into locals: the
+        # migration functions are functional over the old state, so a
+        # failure anywhere (e.g. an injected migration fault) leaves
+        # plan/state/_steps on the old layout for the service's replan
+        # transaction to roll the registry back against (PR 9).
         delta = None
         touched = None  # None = every job's layout may have changed
-        if self.state is not None and old is not None:
+        relayout_bytes = 0
+        migrated = self.state is not None and old is not None
+        if migrated:
             if self.migration == "delta":
                 # Delta replan: quiesce ONLY the jobs whose layout the
                 # transition disturbs -- their queued pushes apply
@@ -239,33 +256,21 @@ class ServiceRuntime:
                 if engine is not None:
                     engine.quiesce_for_replan(
                         [j for j in touched if j in self._jobs])
-                self.state = migrate_flat_state_delta(
+                state = migrate_flat_state_delta(
                     self.state, old, new, delta=delta)
-                self.last_relayout_bytes = delta.moved_bytes()
-                self.total_relayout_bytes += self.last_relayout_bytes
+                relayout_bytes = delta.moved_bytes()
             else:
                 # Full-gather oracle path: hard-quiesce everything.
                 if engine is not None:
                     engine.drain()
-                self.state = migrate_flat_state(self.state, old, new)
-            moved = migration_bytes(old, new)
-            self.last_migration_bytes = moved
-            self.total_migration_bytes += moved
-            self.n_replans += 1
-            self.last_replan_touched = (tuple(sorted(touched))
-                                        if touched is not None
-                                        else tuple(self._jobs))
+                state = migrate_flat_state(self.state, old, new)
         else:
             if engine is not None and self.state is not None:
                 engine.drain()
-            self.state = init_shared_state(new, needs_ef=self._needs_ef())
-        if self._needs_ef() and "ef" not in self.state:
+            state = init_shared_state(new, needs_ef=self._needs_ef())
+        if self._needs_ef() and "ef" not in state:
             # A compressed job joined a runtime whose state predates it.
-            self.state = dict(self.state,
-                              ef=jnp.zeros_like(self.state["flat"]))
-        self.plan = new
-        if engine is not None:
-            engine._on_plan_change(touched)
+            state = dict(state, ef=jnp.zeros_like(state["flat"]))
         steps: Dict[str, Callable] = {}
         for job_id, info in self._jobs.items():
             # An untouched block-mode job's step closes over a layout that
@@ -287,6 +292,22 @@ class ServiceRuntime:
             steps[job_id] = (
                 jax.jit(step, donate_argnums=(0,)) if self._jit else step
             )
+        # ---- COMMIT: the new layout becomes visible as a unit ----
+        self.state = state
+        if migrated:
+            if delta is not None:
+                self.last_relayout_bytes = relayout_bytes
+                self.total_relayout_bytes += relayout_bytes
+            moved = migration_bytes(old, new)
+            self.last_migration_bytes = moved
+            self.total_migration_bytes += moved
+            self.n_replans += 1
+            self.last_replan_touched = (tuple(sorted(touched))
+                                        if touched is not None
+                                        else tuple(self._jobs))
+        self.plan = new
+        if engine is not None:
+            engine._on_plan_change(touched)
         self._steps = steps
 
 
@@ -294,10 +315,13 @@ class ServiceRuntime:
 def _debug_stats(rt, extra_runtime: Dict[str, Any],
                  shards: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """Shared debug_stats assembly for both runtimes: plan-pair cache +
-    migration counters + the attached engine's TickStats; the sharded
-    runtime adds its per-shard section via ``shards``."""
+    migration counters + the service's replan-transaction counters + the
+    attached engine's TickStats and fault-injector fire counts; the
+    sharded runtime adds its per-shard section via ``shards``."""
     import dataclasses
 
+    engine = rt._engine
+    injector = engine.fault_injector if engine is not None else None
     out = {
         "plan_cache": plan_cache_stats(),
         "runtime": {
@@ -308,8 +332,17 @@ def _debug_stats(rt, extra_runtime: Dict[str, Any],
             "last_replan_touched": list(rt.last_replan_touched),
             **extra_runtime,
         },
-        "engine": (dataclasses.asdict(rt._engine.stats)
-                   if rt._engine is not None else None),
+        "transactions": {
+            "n_replan_commits": rt.service.n_replan_commits,
+            "n_replan_aborts": rt.service.n_replan_aborts,
+            "n_replan_retries": rt.service.n_replan_retries,
+        },
+        "engine": (dataclasses.asdict(engine.stats)
+                   if engine is not None else None),
+        "faults": (None if injector is None else {
+            "n_fired": injector.n_fired,
+            "by_kind": injector.fire_counts(),
+        }),
     }
     if shards is not None:
         out["shards"] = shards
@@ -550,10 +583,21 @@ class ShardedServiceRuntime:
         if self._engine is not None:
             self._engine.quiesce_for_replan([job_id])
             self._engine._forget_job(job_id)
-        self._jobs.pop(job_id)
-        self._steps.pop(job_id, None)
-        self.counts.pop(job_id, None)
-        self.service.job_exit(job_id)
+        info = self._jobs.pop(job_id)
+        step = self._steps.pop(job_id, None)
+        count = self.counts.pop(job_id, None)
+        try:
+            self.service.job_exit(job_id)
+        except Exception:
+            # Exit replan aborted, registry rolled back: restore this
+            # runtime's entries so both planes agree the job is live
+            # (its queues were drained before the attempt, nothing lost).
+            self._jobs[job_id] = info
+            if step is not None:
+                self._steps[job_id] = step
+            if count is not None:
+                self.counts[job_id] = count
+            raise
 
     def _seed_job(self, job_id: str, params) -> None:
         layout = self.splan.job_layout(job_id)
@@ -744,42 +788,38 @@ class ShardedServiceRuntime:
             return
         new = self.service.compile_sharded_plan()
         old = self.splan
+        # Everything up to the COMMIT below is computed into locals:
+        # ``migrate_sharded_state`` is functional over the old states, so
+        # a failure at any fail point -- the migration boundary or after
+        # K shards relaid -- leaves splan/states/_steps on the old layout
+        # for the service's replan transaction to roll the registry back
+        # against and retry (PR 9).
         touched = None  # None = every job's layout may have changed
-        if old is not None and self.states:
+        moved_elems = 0
+        migrated = old is not None and bool(self.states)
+        if migrated:
             _, touched_pre = sharded_transition_summary(old, new)
             if engine is not None:
                 engine.quiesce_for_replan(
                     [j for j in touched_pre if j in self._jobs])
-            self.states, moved_elems, touched_exec = migrate_sharded_state(
+            states, moved_elems, touched_exec = migrate_sharded_state(
                 self.states, old, new, needs_ef=self._needs_ef(),
                 fault_injector=(engine.fault_injector
                                 if engine is not None else None))
-            self.last_relayout_bytes = moved_elems * 12
-            self.total_relayout_bytes += self.last_relayout_bytes
             touched = set(touched_exec)
-            self.last_replan_touched = tuple(sorted(touched))
-            self.n_replans += 1
-            if old_flat is not None:
-                moved = migration_bytes(old_flat, new_flat)
-                self.last_migration_bytes = moved
-                self.total_migration_bytes += moved
         else:
             if engine is not None and self.states:
                 engine.drain()
-            self.states = {sid: _init_shard_state(sp,
-                                                  needs_ef=self._needs_ef())
-                           for sid, sp in zip(new.shard_ids, new.shards)}
+            states = {sid: _init_shard_state(sp,
+                                             needs_ef=self._needs_ef())
+                      for sid, sp in zip(new.shard_ids, new.shards)}
         if self._needs_ef():
             # A compressed job joined shards whose states predate it:
             # widen each with a zero error-feedback buffer (surviving
             # shards' migrated states keep theirs bit-exactly).
-            for sid, st in self.states.items():
+            for sid, st in states.items():
                 if "ef" not in st:
-                    self.states[sid] = dict(
-                        st, ef=jnp.zeros_like(st["flat"]))
-        self.splan = new
-        if engine is not None:
-            engine._on_plan_change(touched)
+                    states[sid] = dict(st, ef=jnp.zeros_like(st["flat"]))
         steps: Dict[str, Any] = {}
         for job_id, info in self._jobs.items():
             # An untouched job's layout is bit-identical on every hosting
@@ -797,4 +837,18 @@ class ShardedServiceRuntime:
             if self._jit:
                 fn = jax.jit(fn, donate_argnums=(0,))
             steps[job_id] = (layout.shard_ids, fn)
+        # ---- COMMIT: the new layout becomes visible as a unit ----
+        self.states = states
+        if migrated:
+            self.last_relayout_bytes = moved_elems * 12
+            self.total_relayout_bytes += self.last_relayout_bytes
+            self.last_replan_touched = tuple(sorted(touched))
+            self.n_replans += 1
+            if old_flat is not None:
+                moved = migration_bytes(old_flat, new_flat)
+                self.last_migration_bytes = moved
+                self.total_migration_bytes += moved
+        self.splan = new
+        if engine is not None:
+            engine._on_plan_change(touched)
         self._steps = steps

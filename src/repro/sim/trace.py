@@ -14,7 +14,7 @@ offline, so we generate a synthetic one matching its published statistics:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -67,3 +67,45 @@ def philly_like_trace(
                            chunk_bytes=chunk_bytes)
         jobs.append(TraceJob(f"j{i}", t, duration, profile))
     return jobs
+
+
+@dataclass(frozen=True)
+class TraceWindow:
+    """One fixed-width slice of a trace: who arrives, who exits, who is
+    live at the window's END (arrivals-then-exits within a window, so a
+    job that both arrives and exits inside it appears in both lists but
+    not in ``live``)."""
+
+    index: int
+    t0: float
+    t1: float
+    arrivals: Tuple[str, ...]
+    exits: Tuple[str, ...]
+    live: Tuple[str, ...]
+
+
+def window_schedule(jobs: List[TraceJob], window: float,
+                    max_windows: Optional[int] = None) -> List[TraceWindow]:
+    """Bucket a trace into fixed-width windows -- the replay harness's
+    clock (scripts/replay_trace.py).  ``window`` is in trace seconds;
+    ``max_windows`` truncates the schedule (jobs still live at the cut
+    simply never exit within it)."""
+    if window <= 0:
+        raise ValueError(f"window must be > 0, got {window}")
+    if not jobs:
+        return []
+    ends = {j.job_id: j.arrival + j.duration for j in jobs}
+    horizon = max(ends.values())
+    n = int(np.ceil(horizon / window))
+    if max_windows is not None:
+        n = min(n, int(max_windows))
+    out: List[TraceWindow] = []
+    for i in range(n):
+        t0, t1 = i * window, (i + 1) * window
+        arrivals = tuple(j.job_id for j in jobs if t0 <= j.arrival < t1)
+        exits = tuple(j.job_id for j in jobs
+                      if j.arrival < t1 and t0 <= ends[j.job_id] < t1)
+        live = tuple(j.job_id for j in jobs
+                     if j.arrival < t1 and ends[j.job_id] >= t1)
+        out.append(TraceWindow(i, t0, t1, arrivals, exits, live))
+    return out

@@ -356,12 +356,19 @@ def test_autoscaler_holds_on_quarantined_fleet():
 
 
 def test_migration_fault_hook_fires_on_replan():
+    """A migration fault during a replan no longer escapes: the replan
+    transaction (PR 9) rolls the registry back and retries, so the
+    scale-out SUCCEEDS and both planes agree on the new layout."""
     inj = FaultInjector()
     rt, eng = _sharded(n_shards=2, fault_injector=inj)
     inj.fail_migration(at=1)
-    with pytest.raises(InjectedFault) as ei:
-        rt.service.scale_out(1)
-    assert ei.value.kind == "fail_migration"
+    assert rt.service.scale_out(1) == 1
+    assert inj.n_fired == 1
+    assert inj.log[0]["kind"] == "fail_migration"
+    assert rt.service.n_replan_aborts == 1
+    assert rt.service.n_replan_retries == 1
+    assert rt.service.compile_sharded_plan() == rt.splan
+    assert rt.n_shards == 3
 
 
 def test_checkpoint_records_shard_health(tmp_path):

@@ -1,0 +1,222 @@
+"""Job leases (PR 9): every push/pull renews, an injected clock drives
+deterministic expiry, and a silent trainer is reclaimed gracefully --
+queued futures cancelled with a contextual error, the job removed
+through the TRANSACTIONAL replan path, and the freed load visible to the
+autoscaler.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ParameterService
+from repro.ps.autoscaler import AutoscalerConfig, ElasticScaler
+from repro.ps.faults import (
+    EngineQuarantinedError,
+    FaultInjector,
+    LeaseExpiredError,
+    ReplanAbortedError,
+    RetryPolicy,
+)
+from repro.ps.service_runtime import ServiceRuntime, ShardedServiceRuntime
+
+
+class Clock:
+    def __init__(self, now=0.0):
+        self.now = float(now)
+
+    def __call__(self):
+        return self.now
+
+
+def _tree(key, sizes):
+    ks = jax.random.split(key, len(sizes))
+    return {f"t{i}": jax.random.normal(k, (n,))
+            for i, (k, n) in enumerate(zip(ks, sizes))}
+
+
+def _loss(params, batch):
+    return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+               for k in params)
+
+
+TREES = {
+    "a": _tree(jax.random.PRNGKey(0), (48, 16, 32)),
+    "b": _tree(jax.random.PRNGKey(1), (32, 16)),
+    "c": _tree(jax.random.PRNGKey(2), (48, 16)),
+}
+TARGETS = {j: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+           for j, t in TREES.items()}
+
+
+def _add_jobs(rt, trees=TREES):
+    for jid, t in trees.items():
+        nbytes = sum(4 * v.size for v in t.values())
+        rt.add_job(jid, t, _loss, lr=0.05, required_servers=1,
+                   agg_throughput=nbytes / 0.2)
+
+
+def _sharded(n_shards=2, trees=TREES, **engine_opts):
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+    rt = ShardedServiceRuntime(svc, jit=False)
+    engine_opts.setdefault("max_staleness", 0)
+    eng = rt.attach_engine(jit=False, **engine_opts)
+    _add_jobs(rt, trees)
+    if n_shards > 1:
+        svc.scale_out(n_shards - 1)
+    return rt, eng
+
+
+def _flat(trees=TREES, **engine_opts):
+    rt = ServiceRuntime(
+        ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16),
+        jit=False)
+    engine_opts.setdefault("max_staleness", 0)
+    eng = rt.attach_engine(jit=False, **engine_opts)
+    _add_jobs(rt, trees)
+    return rt, eng
+
+
+def _grads(job):
+    return jax.tree_util.tree_map(jnp.ones_like, TREES[job])
+
+
+# ---------------------------------------------------------------- renewal
+@pytest.mark.parametrize("build", [_flat, _sharded], ids=["flat", "sharded"])
+def test_pushes_and_pulls_renew_the_lease(build):
+    clock = Clock()
+    rt, eng = build(lease_interval=5.0, clock=clock)
+    assert eng.lease_deadline("a") is None  # no contact yet
+    eng.step("a", {"target": TARGETS["a"]})
+    assert eng.lease_deadline("a") == pytest.approx(5.0)
+    clock.now = 3.0
+    eng.pull("a")
+    assert eng.lease_deadline("a") == pytest.approx(8.0)
+    clock.now = 4.0
+    fut = eng.submit_push("a", _grads("a"))
+    assert eng.lease_deadline("a") == pytest.approx(9.0)
+    eng.drain()
+    assert fut.done()
+    # An active trainer never expires.
+    clock.now = 8.9
+    assert eng.expire_leases() == ()
+    assert "a" in rt._jobs
+
+
+@pytest.mark.parametrize("build", [_flat, _sharded], ids=["flat", "sharded"])
+def test_silent_trainer_is_reclaimed_through_the_replan_path(build):
+    clock = Clock()
+    rt, eng = build(lease_interval=2.0, clock=clock)
+    for j in TREES:
+        eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+    # a and b keep renewing; c goes silent.
+    for t in (1.0, 2.0, 3.0):
+        clock.now = t
+        eng.step("a", {"target": TARGETS["a"]})
+        eng.step("b", {"target": TARGETS["b"]})
+        assert eng.expire_leases() == (("c",) if t == 2.0 else ())
+    assert eng.stats.n_lease_expirations == 1
+    assert "c" not in rt._jobs
+    assert "c" not in rt.service._jobs
+    assert eng.lease_deadline("c") is None
+    if isinstance(rt, ShardedServiceRuntime):
+        assert rt.service.compile_sharded_plan() == rt.splan
+    # Survivors train on.
+    eng.step("a", {"target": TARGETS["a"]})
+    eng.drain()
+
+
+def test_lease_interval_validated_and_off_by_default():
+    rt, eng = _sharded()
+    assert eng.lease_interval is None
+    assert eng.expire_leases() == ()  # no-op with leases off
+    with pytest.raises(ValueError):
+        _sharded(lease_interval=0.0)
+
+
+# ------------------------------------------------- graceful cancellation
+def test_expired_jobs_queued_futures_raise_lease_expired():
+    clock = Clock()
+    rt, eng = _sharded(max_staleness=8, lease_interval=2.0, clock=clock)
+    fut = eng.submit_push("c", _grads("c"))
+    clock.now = 5.0
+    assert eng.expire_leases() == ("c",)
+    assert fut.cancelled() and not fut.done()
+    with pytest.raises(LeaseExpiredError) as ei:
+        fut.result(timeout=1.0)
+    assert ei.value.job_id == "c"
+    assert "lease" in str(ei.value)
+    # Immediate re-raise: the stored error, not a timeout wait.
+    with pytest.raises(LeaseExpiredError):
+        fut.result(timeout=30.0)
+
+
+def test_quarantined_lane_future_raises_quarantine_not_timeout():
+    """``result(timeout=...)`` is contextual the other way too: a push
+    stuck behind a lane that died mid-wait raises that lane's
+    ``EngineQuarantinedError`` at the deadline, not a bare timeout."""
+    inj = FaultInjector()
+    rt, eng = _sharded(max_staleness=8, fault_injector=inj)
+    victim = rt.shard_ids[-1]
+    job = next(j for j in TREES
+               if victim in rt.splan.job_layout(j).shard_ids)
+    inj.kill_shard(victim, at=1)
+    fut = eng.submit_push(job, _grads(job))
+    # Tick until the kill lands (the victim quarantines on its first
+    # failed apply + exhausted retry) so the deadline below races
+    # nothing; the piece on the dead lane keeps the future pending.
+    for _ in range(8):
+        if victim in eng.quarantined_shards():
+            break
+        eng.tick()
+    assert victim in eng.quarantined_shards()
+    assert not fut.done()
+    with pytest.raises(EngineQuarantinedError) as ei:
+        fut.result(timeout=0.3)
+    assert ei.value.shard_id == victim
+
+
+def test_reclaim_frees_load_the_autoscaler_sees():
+    clock = Clock()
+    rt, eng = _sharded(max_staleness=64, lease_interval=2.0, clock=clock)
+    scaler = ElasticScaler(rt, AutoscalerConfig(
+        shard_capacity=4.0, max_shards=4, cooldown=1))
+    for _ in range(8):
+        eng.submit_push("c", _grads("c"))
+    assert scaler.queued_pieces() > 0
+    clock.now = 5.0
+    assert eng.expire_leases() == ("c",)
+    # The dead trainer's queued pieces are gone with it: the drain
+    # occupancy half of the load signal drops to zero, so the next
+    # window scales from the survivors' (idle) load alone.
+    assert scaler.queued_pieces() == 0
+    decision = scaler.observe()
+    assert decision.action in ("hold", "shrink")
+
+
+def test_failed_reclaim_rearms_the_lease_and_retries():
+    clock = Clock()
+    inj = FaultInjector()
+    rt, eng = _sharded(n_shards=2, lease_interval=2.0, clock=clock,
+                       fault_injector=inj,
+                       retry_policy=RetryPolicy(max_retries=0))
+    for j in TREES:
+        eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+    inj.fail_migration(at=1, times=math.inf)
+    clock.now = 5.0
+    with pytest.raises(ReplanAbortedError):
+        eng.expire_leases()
+    # The job leaked nowhere: still registered on BOTH planes, lease
+    # re-armed one interval out so the next sweep tries again.
+    for j in TREES:
+        assert j in rt._jobs and j in rt.service._jobs
+    assert eng.lease_deadline("a") == pytest.approx(7.0)
+    assert rt.service.compile_sharded_plan() == rt.splan
+    inj.rules.clear()
+    clock.now = 8.0
+    assert set(eng.expire_leases()) == set(TREES)
+    assert not rt._jobs and not rt.service._jobs

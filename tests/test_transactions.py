@@ -1,0 +1,264 @@
+"""Replan transactions (PR 9): commit-or-abort registry mutations with
+rollback and shared-policy retry.
+
+Every ``ParameterService`` mutator (register/exit/scale/evacuate) now
+runs as a transaction: the registry is snapshotted, the replan runs, and
+any listener failure rolls the snapshot back before the shared
+``RetryPolicy`` decides whether to retry with a FRESH snapshot or raise
+``ReplanAbortedError``.  The invariant under test everywhere: after any
+outcome -- commit, retried commit, or abort -- the control plane
+(``service.compile_sharded_plan()``) and the data plane (``rt.splan``)
+describe the SAME layout, and training continues bit-exact on it.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParameterService
+from repro.core.service import _ReplanFailure
+from repro.ps.faults import (
+    FaultInjector,
+    InjectedFault,
+    ReplanAbortedError,
+    RetryPolicy,
+)
+from repro.ps.service_runtime import ServiceRuntime, ShardedServiceRuntime
+
+
+def _tree(key, sizes):
+    ks = jax.random.split(key, len(sizes))
+    return {f"t{i}": jax.random.normal(k, (n,))
+            for i, (k, n) in enumerate(zip(ks, sizes))}
+
+
+def _loss(params, batch):
+    return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+               for k in params)
+
+
+TREES = {
+    "a": _tree(jax.random.PRNGKey(0), (48, 16, 32)),
+    "b": _tree(jax.random.PRNGKey(1), (32, 16)),
+    "c": _tree(jax.random.PRNGKey(2), (48, 16)),
+}
+TARGETS = {j: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+           for j, t in TREES.items()}
+
+
+def _add_jobs(rt, trees=TREES):
+    for jid, t in trees.items():
+        nbytes = sum(4 * v.size for v in t.values())
+        rt.add_job(jid, t, _loss, lr=0.05, required_servers=1,
+                   agg_throughput=nbytes / 0.2)
+
+
+def _sharded(n_shards=2, trees=TREES, **engine_opts):
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+    rt = ShardedServiceRuntime(svc, jit=False)
+    engine_opts.setdefault("max_staleness", 0)
+    eng = rt.attach_engine(jit=False, **engine_opts)
+    _add_jobs(rt, trees)
+    if n_shards > 1:
+        svc.scale_out(n_shards - 1)
+    return rt, eng
+
+
+def _drive(eng, n, trees=TREES):
+    for _ in range(n):
+        for j in trees:
+            eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+
+
+def _assert_params_equal(rt_a, rt_b, jobs=TREES):
+    for j in jobs:
+        pa, pb = rt_a.params_of(j), rt_b.params_of(j)
+        for k in pa:
+            np.testing.assert_array_equal(np.asarray(pa[k]),
+                                          np.asarray(pb[k]))
+
+
+def _agree(rt):
+    """Control plane and data plane describe the same layout."""
+    assert rt.service.compile_sharded_plan() == rt.splan
+    assert set(rt.service._jobs) == set(rt._jobs)
+
+
+# ----------------------------------------------------------- retry policy
+def test_retry_policy_backoff_and_budget():
+    slept = []
+    pol = RetryPolicy(max_retries=3, base_delay=0.1, max_delay=0.25,
+                      sleep=slept.append)
+    assert pol.should_retry(1) and pol.should_retry(3)
+    assert not pol.should_retry(4)
+    assert pol.delay(1) == pytest.approx(0.1)
+    assert pol.delay(2) == pytest.approx(0.2)
+    assert pol.delay(3) == pytest.approx(0.25)  # capped
+    for i in (1, 2, 3):
+        pol.backoff(i)
+    assert slept == pytest.approx([0.1, 0.2, 0.25])
+    # zero base_delay (the test default) never sleeps
+    quiet = RetryPolicy(max_retries=2, sleep=slept.append)
+    quiet.backoff(1)
+    assert len(slept) == 3
+
+
+# -------------------------------------------- divergence regression (sat 1)
+def test_transient_migration_fault_retries_and_planes_agree():
+    """THE regression: a fault inside the replan used to leave the
+    registry scaled out while the data plane kept the old layout.  Now
+    the abort rolls the registry back and the retry lands both planes on
+    the new layout together."""
+    inj = FaultInjector()
+    rt, eng = _sharded(n_shards=2, fault_injector=inj)
+    ref, ref_eng = _sharded(n_shards=2)
+    _drive(eng, 2)
+    _drive(ref_eng, 2)
+
+    inj.fail_migration(at=1)  # transient: first attempt dies, retry wins
+    assert rt.service.scale_out(1) == 1
+    assert rt.service.n_replan_aborts == 1
+    assert rt.service.n_replan_retries == 1
+    assert rt.n_shards == 3
+    _agree(rt)
+
+    ref_rt_svc = ref.service
+    assert ref_rt_svc.scale_out(1) == 1  # fault-free twin, same transition
+    _drive(eng, 3)
+    _drive(ref_eng, 3)
+    _assert_params_equal(rt, ref)
+
+
+def test_persistent_migration_fault_aborts_and_rolls_back():
+    inj = FaultInjector()
+    rt, eng = _sharded(n_shards=2, fault_injector=inj,
+                       retry_policy=RetryPolicy(max_retries=2))
+    ref, ref_eng = _sharded(n_shards=2)
+    _drive(eng, 2)
+    _drive(ref_eng, 2)
+
+    inj.fail_migration(at=1, times=math.inf)
+    with pytest.raises(ReplanAbortedError) as ei:
+        rt.service.scale_out(1)
+    assert ei.value.op == "scale_out"
+    assert ei.value.attempts == 3  # 1 try + 2 retries
+    assert isinstance(ei.value.original, InjectedFault)
+    assert "rolled back" in str(ei.value)
+    assert rt.service.n_replan_aborts == 3
+    assert rt.service.n_replan_retries == 2
+
+    # Both planes still on the OLD layout; training unaffected.
+    assert rt.n_shards == 2
+    _agree(rt)
+    inj.rules.clear()
+    _drive(eng, 3)
+    _drive(ref_eng, 3)
+    _assert_params_equal(rt, ref)
+
+
+def test_mid_migration_fault_is_abort_safe():
+    """``after_shards=1`` kills the migration AFTER one shard of the new
+    plan is relaid: the transaction must still leave the committed states
+    untouched (migrate_sharded_state is functional over its inputs)."""
+    inj = FaultInjector()
+    rt, eng = _sharded(n_shards=2, fault_injector=inj,
+                       retry_policy=RetryPolicy(max_retries=0))
+    ref, ref_eng = _sharded(n_shards=2)
+    _drive(eng, 2)
+    _drive(ref_eng, 2)
+
+    inj.fail_migration(at=1, after_shards=1, times=math.inf)
+    with pytest.raises(ReplanAbortedError):
+        rt.service.scale_out(1)
+    assert rt.n_shards == 2
+    _agree(rt)
+    inj.rules.clear()
+    _drive(eng, 3)
+    _drive(ref_eng, 3)
+    _assert_params_equal(rt, ref)
+
+
+def test_register_and_exit_aborts_restore_both_planes():
+    inj = FaultInjector()
+    rt, eng = _sharded(n_shards=2, fault_injector=inj,
+                       retry_policy=RetryPolicy(max_retries=0))
+    _drive(eng, 1)
+
+    # register_job: the new job must not exist anywhere after the abort.
+    inj.fail_migration(at=1, times=math.inf)
+    tree_d = _tree(jax.random.PRNGKey(7), (24, 24))
+    with pytest.raises(ReplanAbortedError):
+        rt.add_job("d", tree_d, _loss, lr=0.05, required_servers=1,
+                   agg_throughput=sum(4 * v.size
+                                      for v in tree_d.values()) / 0.2)
+    assert "d" not in rt._jobs
+    _agree(rt)
+
+    # job_exit: the departing job must STAY everywhere after the abort.
+    with pytest.raises(ReplanAbortedError):
+        rt.remove_job("a")
+    assert "a" in rt._jobs
+    assert "a" in rt.service._jobs
+    _agree(rt)
+
+    # ... and still trains after the rules clear.
+    inj.rules.clear()
+    _drive(eng, 2)
+    rt.remove_job("a")
+    _agree(rt)
+
+
+def test_validation_errors_bypass_retry():
+    """Control-plane validation failures are not transactions to retry:
+    they raise unchanged with zero abort/retry counted."""
+    rt, _eng = _sharded(n_shards=1)
+    with pytest.raises(KeyError):
+        rt.service.job_exit("nope")
+    with pytest.raises(ValueError):
+        rt.service.evacuate_aggregator("c9/a99")
+    assert rt.service.n_replan_aborts == 0
+    assert rt.service.n_replan_retries == 0
+
+
+def test_replan_failure_marker_wraps_original():
+    boom = RuntimeError("boom")
+    wrapped = _ReplanFailure(boom)
+    assert wrapped.original is boom
+
+
+# -------------------------------------------------- debug stats (sat 3)
+def test_debug_stats_surface_transactions_and_faults():
+    inj = FaultInjector()
+    rt, eng = _sharded(n_shards=2, fault_injector=inj)
+    inj.fail_apply(None, at=1)
+    inj.fail_migration(at=1)
+    _drive(eng, 2)
+    assert rt.service.scale_out(1) == 1
+
+    stats = rt.debug_stats()
+    assert stats["transactions"] == {
+        "n_replan_commits": rt.service.n_replan_commits,
+        "n_replan_aborts": 1,
+        "n_replan_retries": 1,
+    }
+    assert stats["faults"]["n_fired"] == inj.n_fired >= 2
+    assert stats["faults"]["by_kind"] == inj.fire_counts()
+    assert stats["faults"]["by_kind"]["fail_migration"] == 1
+    assert stats["engine"]["n_lease_expirations"] == 0
+
+    # Flat runtime surfaces the same sections (faults None when detached
+    # from any injector).
+    flat = ServiceRuntime(
+        ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16),
+        jit=False)
+    flat.attach_engine(max_staleness=0, jit=False)
+    _add_jobs(flat, {"a": TREES["a"]})
+    fstats = flat.debug_stats()
+    assert fstats["transactions"]["n_replan_commits"] >= 1
+    assert fstats["transactions"]["n_replan_aborts"] == 0
+    assert fstats["faults"] is None
+    assert fstats["engine"]["n_lease_expirations"] == 0
