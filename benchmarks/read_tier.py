@@ -1,0 +1,282 @@
+"""High-QPS read tier (PR 10): snapshot-published pull replicas with
+batched lookup, on REAL engines (eager, CPU).
+
+Four sections:
+
+* ``parity`` (asserted BEFORE any timing): a replica-served pull --
+  both the parameter pytree and the versioned full payload -- is
+  bit-exact vs ``engine.pull()`` at the same published version, for
+  every job, after a force-refresh publish.
+
+* ``scaling``: pulls/sec vs replica count (1, 2, 4).  Each replica is
+  an independent serving endpooint holding the same shared snapshots,
+  so the aggregate rate is the sum of per-replica serve rates under a
+  round-robin load (in-process, the replicas time-slice one CPU; the
+  per-replica rate is what each endpoint sustains on its own core in a
+  deployment).
+
+* ``batch``: the batched lookup API.  8 jobs pulled from ONE replica as
+  8 sequential versioned pulls vs one ``pull_batch`` (all jobs' changed
+  rows in ONE jitted gather); the acceptance row asserts the batch is
+  >= 2x faster.
+
+* ``diff``: replica-served diff pulls must charge the same wire bytes
+  as the engine's own diff accounting for the identical read schedule
+  (same version vectors, same dirty blocks).
+
+Run: PYTHONPATH=src python benchmarks/run.py --only read \
+         --json BENCH_read.json
+"""
+
+import os
+import time
+
+BATCH_SPEEDUP_FLOOR = 2.0  # acceptance: pull_batch >= 2x sequential
+N_JOBS = 8
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("HOTPATH_SMOKE"))
+
+
+def _trees():
+    import jax
+
+    sizes = ((96, 32, 64), (64, 32), (48, 16), (80, 32), (64, 16),
+             (48, 32, 16), (96, 16), (32, 32))
+
+    def tree(key, ss):
+        ks = jax.random.split(key, len(ss))
+        return {f"t{i}": jax.random.normal(k, (n,))
+                for i, (k, n) in enumerate(zip(ks, ss))}
+
+    return {f"j{i}": tree(jax.random.PRNGKey(i), ss)
+            for i, ss in enumerate(sizes[:N_JOBS])}
+
+
+def _loss():
+    import jax.numpy as jnp
+
+    def loss(params, batch):
+        return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+                   for k in params)
+
+    return loss
+
+
+def _build(n_shards=3, n_replicas=2, **replica_opts):
+    """Sharded runtime + engine + attached ReplicaSet over N_JOBS jobs."""
+    import jax
+
+    from repro.core import ParameterService
+    from repro.ps.replica import ReplicaSet
+    from repro.ps.service_runtime import ShardedServiceRuntime
+
+    trees = _trees()
+    targets = {j: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+               for j, t in trees.items()}
+    svc = ParameterService(total_budget=32, n_clusters=1, plan_pad_to=16)
+    rt = ShardedServiceRuntime(svc, jit=False)
+    eng = rt.attach_engine(max_staleness=0, jit=False)
+    for jid, t in trees.items():
+        nb = sum(4 * v.size for v in t.values())
+        rt.add_job(jid, t, _loss(), lr=0.05, required_servers=1,
+                   agg_throughput=nb / 0.2)
+    if n_shards > 1:
+        svc.scale_out(n_shards - 1)
+    rs = ReplicaSet(eng, n_replicas=n_replicas, **replica_opts)
+    return rt, eng, rs, targets
+
+
+def _run_steps(eng, targets, n):
+    for _ in range(n):
+        for j in targets:
+            eng.step(j, {"target": targets[j]})
+    eng.drain()
+
+
+def _assert_parity(eng, rs, targets) -> int:
+    """Replica-served pulls bit-exact vs the engine at the same
+    published version; returns jobs compared (raises on mismatch)."""
+    import numpy as np
+
+    rs.refresh()  # publish the CURRENT state: engine and replica now
+    # serve the same version by construction
+    checked = 0
+    for j in targets:
+        a, b = eng.pull(j), rs.pull(j)
+        for k in a:
+            if not np.array_equal(np.asarray(a[k]), np.asarray(b[k])):
+                raise AssertionError(
+                    f"replica tree pull diverges from engine.pull "
+                    f"for {j!r}/{k!r}")
+        da = eng.pull(j, since_version=0)  # full payload, same version
+        db = rs.pull(j, since_version=0)
+        if not np.array_equal(np.asarray(da.data), np.asarray(db.data)):
+            raise AssertionError(
+                f"replica full payload diverges from the engine's "
+                f"for {j!r}")
+        if da.bytes_full != db.bytes_full:
+            raise AssertionError(
+                f"full-pull byte accounting diverges for {j!r}: "
+                f"engine {da.bytes_full} vs replica {db.bytes_full}")
+        checked += 1
+    return checked
+
+
+def _parity_rows():
+    n_steps = 3 if _smoke() else 10
+    rt, eng, rs, targets = _build()
+    _run_steps(eng, targets, n_steps)
+    checked = _assert_parity(eng, rs, targets)
+    return [
+        ("read/parity_jobs", str(checked),
+         f"jobs compared bit-exact (tree + full payload) after "
+         f"{n_steps} step rounds, replica vs engine.pull at the same "
+         f"published version"),
+        ("read/parity_bit_exact", "1",
+         "acceptance: replica-served pulls match the engine exactly "
+         "(asserted before any timing; must be 1)"),
+    ]
+
+
+def _scaling_rows():
+    n_pulls = 120 if _smoke() else 600
+    rows = []
+    rates = {}
+    for n_rep in (1, 2, 4):
+        rt, eng, rs, targets = _build(n_replicas=n_rep)
+        _run_steps(eng, targets, 2)
+        rs.refresh()
+        jobs = list(targets)
+        for j in jobs:  # warm every replica's serve path
+            for rep in rs.replicas:
+                rep.pull(j)
+        for rep in rs.replicas:  # count only the timed load below
+            rep.stats.n_pulls = 0
+            rep.stats.serve_seconds = 0.0
+        for i in range(n_pulls):  # round-robin load over the set
+            rs.pull(jobs[i % len(jobs)])
+        # Aggregate = sum of per-replica serve rates: each replica is an
+        # independent endpoint on its own copy-free snapshot view.
+        agg = sum(rep.stats.n_pulls / max(rep.stats.serve_seconds, 1e-9)
+                  for rep in rs.replicas)
+        rates[n_rep] = agg
+        rows.append((
+            f"read/pulls_per_sec_{n_rep}r", f"{agg:.0f}",
+            f"{n_pulls} tree pulls round-robin over {n_rep} replica(s), "
+            f"summed per-endpoint serve rates"))
+    scaling = rates[4] / rates[1]
+    rows += [
+        ("read/replica_scaling_4r_vs_1r", f"{scaling:.2f}",
+         "aggregate pulls/sec at 4 replicas / at 1 replica"),
+        ("read/replica_scaling_up", str(int(rates[4] > rates[1])),
+         "acceptance: aggregate read rate grows with replica count "
+         "(must be 1)"),
+    ]
+    return rows
+
+
+def _batch_rows():
+    rounds = 4 if _smoke() else 12
+    rt, eng, rs, targets = _build(n_replicas=2)
+    jobs = list(targets)
+    _run_steps(eng, targets, 2)
+    rs.refresh()
+    seq_rep, bat_rep = rs.replicas[0], rs.replicas[1]
+    # Bootstrap both readers' version vectors (full payloads, untimed),
+    # and warm the batched gather's jit cache.
+    seq_vec = {j: seq_rep.pull(j, since_version=0).version for j in jobs}
+    bat_vec = {d.job_id: d.version
+               for d in bat_rep.pull_batch([(j, 0) for j in jobs])}
+    seq_s = bat_s = 0.0
+    for r in range(rounds):
+        # A subset of jobs steps between read rounds, so diffs carry
+        # real changed rows (round-robin which jobs are dirty).
+        dirty = jobs[r % len(jobs):][:3] or jobs[:3]
+        for j in dirty:
+            eng.step(j, {"target": targets[j]})
+        eng.drain()
+        rs.refresh()
+        t0 = time.perf_counter()
+        for j in jobs:
+            d = seq_rep.pull(j, since_version=seq_vec[j])
+            seq_vec[j] = d.version
+        seq_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        diffs = bat_rep.pull_batch([(j, bat_vec[j]) for j in jobs])
+        bat_s += time.perf_counter() - t0
+        for j, d in zip(jobs, diffs):
+            bat_vec[j] = d.version
+    speedup = seq_s / max(bat_s, 1e-9)
+    return [
+        ("read/seq_pull_ms_8jobs", f"{1e3 * seq_s / rounds:.3f}",
+         f"{len(jobs)} sequential versioned pulls per round, "
+         f"{rounds} rounds, one replica"),
+        ("read/batch_pull_ms_8jobs", f"{1e3 * bat_s / rounds:.3f}",
+         "same 8 jobs as ONE pull_batch (single jitted gather) per "
+         "round"),
+        ("read/batch_speedup", f"{speedup:.2f}",
+         "sequential / batched wall time at 8 jobs"),
+        ("read/batch_2x", str(int(speedup >= BATCH_SPEEDUP_FLOOR)),
+         f"acceptance: pull_batch >= {BATCH_SPEEDUP_FLOOR:.0f}x "
+         f"sequential per-job pulls at 8 jobs (must be 1)"),
+    ]
+
+
+def _diff_rows():
+    import numpy as np
+
+    rounds = 3 if _smoke() else 8
+    rt, eng, rs, targets = _build(n_replicas=1)
+    jobs = list(targets)
+    _run_steps(eng, targets, 2)
+    rs.refresh()
+    rep = rs.replicas[0]
+    eng_vec = {j: eng.pull(j, since_version=0).version for j in jobs}
+    rep_vec = {j: rep.pull(j, since_version=0).version for j in jobs}
+    eng_bytes = rep_bytes = 0
+    mismatches = 0
+    for r in range(rounds):
+        dirty = jobs[r % len(jobs):][:2] or jobs[:2]
+        for j in dirty:
+            eng.step(j, {"target": targets[j]})
+        eng.drain()
+        rs.refresh()  # replica now holds the engine's exact state
+        for j in jobs:
+            de = eng.pull(j, since_version=eng_vec[j])
+            dr = rep.pull(j, since_version=rep_vec[j])
+            eng_vec[j], rep_vec[j] = de.version, dr.version
+            eng_bytes += de.bytes_wire
+            rep_bytes += dr.bytes_wire
+            same = (de.full == dr.full
+                    and np.array_equal(de.block_ids, dr.block_ids)
+                    and np.array_equal(np.asarray(de.data),
+                                       np.asarray(dr.data)))
+            if not same:
+                mismatches += 1
+    return [
+        ("read/diff_bytes_engine", str(eng_bytes),
+         f"{rounds} diff-pull rounds x {len(jobs)} jobs straight off "
+         f"the engine"),
+        ("read/diff_bytes_replica", str(rep_bytes),
+         "identical read schedule served by a replica"),
+        ("read/diff_accounting_match",
+         str(int(eng_bytes == rep_bytes and mismatches == 0)),
+         "acceptance: replica diff pulls ship the same blocks and "
+         "charge the same wire bytes as the engine (must be 1)"),
+        ("read/publish_snapshot_reuse",
+         str(rs.n_reused_snapshot_copies),
+         f"publishes that rode the PR-7 rollback copy instead of "
+         f"taking their own (of {rs.n_publishes} total)"),
+    ]
+
+
+def rows():
+    return (_parity_rows() + _scaling_rows() + _batch_rows()
+            + _diff_rows())
+
+
+if __name__ == "__main__":
+    for name, value, derived in rows():
+        print(f'{name},{value},"{derived}"')

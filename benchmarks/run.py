@@ -34,6 +34,7 @@ MODULES = [
     ("recovery", "recovery"),
     ("wire", "wire_path"),
     ("chaos", "chaos_soak"),
+    ("read", "read_tier"),
 ]
 
 

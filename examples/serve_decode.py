@@ -1,4 +1,7 @@
-"""Batched LM serving with a KV cache (smoke-size granite-8b).
+"""Batched LM serving with a KV cache (smoke-size granite-8b), reading
+its decode weights through the Parameter Service read tier: the model's
+parameters are hosted as one service job and pulled -- bit-exact --
+from a two-replica ``repro.ps.replica.ReplicaSet`` before decoding.
 
 Run: PYTHONPATH=src python examples/serve_decode.py
 """
@@ -9,6 +12,6 @@ import sys
 subprocess.run(
     [sys.executable, "-m", "repro.launch.serve", "--arch", "granite-8b",
      "--smoke", "--batch", "4", "--prompt-len", "8", "--gen", "24",
-     "--temperature", "0.8"],
+     "--temperature", "0.8", "--replicas", "2"],
     check=True,
 )

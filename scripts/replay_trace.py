@@ -10,10 +10,15 @@ engine + ``ElasticScaler`` + ``FaultInjector`` -- twice:
    the data plane agree on the layout.
 2. chaos off: the same replay vs a flat eager twin, bit-exact at s=0.
 
+A per-window read consumer drives one versioned pull per live job, so
+the report (and the ``--verbose`` window log) also carries the PR-8 wire
+counters -- full vs diff pulls and ``pull_bytes_wire`` -- pricing the
+read path through the same chaos.
+
 Exits non-zero if any invariant fails (registry/runtime divergence,
-parity violation, lease reclaim slower than one interval), and seeds
-``BENCH_chaos.json`` with the same row payload shape as
-``benchmarks/run.py --json``.
+parity violation, lease reclaim slower than one interval, a read path
+that drove zero pulls), and seeds ``BENCH_chaos.json`` with the same row
+payload shape as ``benchmarks/run.py --json``.
 
 Usage:
     PYTHONPATH=src python scripts/replay_trace.py --smoke
@@ -88,6 +93,10 @@ def main(argv=None) -> int:
             f"{chaos['n_replan_aborts']} replan abort(s) but only "
             f"{chaos['n_replan_retries']} retried -- some replan died "
             f"without recovery")
+    if chaos["n_reads"] == 0:
+        failures.append(
+            "read consumer drove zero versioned pulls -- the soak no "
+            "longer prices the pull wire")
 
     if args.json != "-":
         payload = {"smoke": bool(args.smoke), "modules": ["chaos"],

@@ -2,6 +2,16 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
       --batch 4 --prompt-len 16 --gen 32
+
+By default the decode weights are read THROUGH the Parameter Service
+read tier (PR 10): the model's parameters are hosted as one job in a
+``ServiceRuntime``, a :class:`repro.ps.replica.ReplicaSet` of
+``--replicas`` pull-only endpoints subscribes to its tick engine, and
+the decode loop runs on a replica-served pull -- asserted bit-exact
+against the hosted weights before any token is generated (the service
+hosts fp32; bf16 params round-trip bf16 -> fp32 -> bf16 losslessly).
+``--direct`` skips the service and decodes straight off ``init_params``,
+the pre-PR-10 path.
 """
 
 from __future__ import annotations
@@ -16,6 +26,41 @@ import numpy as np
 from repro.configs import registry
 
 
+def _pull_params_via_replicas(params, n_replicas: int):
+    """Host ``params`` as one Parameter Service job and read them back
+    through a fresh ReplicaSet; returns (replica-served params in the
+    original dtypes, the ReplicaSet).  Asserts the served fp32 payload
+    is bit-exact vs the hosted fp32 weights."""
+    from repro.core import ParameterService
+    from repro.ps.replica import ReplicaSet
+    from repro.ps.service_runtime import ServiceRuntime
+
+    # The service aggregates in fp32; bf16 -> fp32 is exact and the cast
+    # back after the pull restores the original bits.
+    hosted = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32), params)
+    svc = ParameterService(total_budget=16, n_clusters=1)
+    rt = ServiceRuntime(svc, jit=False)
+    eng = rt.attach_engine(max_staleness=0, jit=False)
+    nbytes = sum(4 * int(v.size)
+                 for v in jax.tree_util.tree_leaves(hosted))
+    rt.add_job("lm", hosted, lambda p, b: 0.0, lr=0.0,
+               required_servers=1, agg_throughput=nbytes / 0.2)
+    rs = ReplicaSet(eng, n_replicas=n_replicas, publish_interval=1)
+    rs.refresh()  # no tick has run yet: force the first publish
+    served = rs.pull("lm")
+    ok = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(served),
+                        jax.tree_util.tree_leaves(hosted)))
+    if not ok:
+        raise AssertionError(
+            "replica-served parameters diverge from the hosted weights")
+    out = jax.tree_util.tree_map(
+        lambda v, p: v.astype(p.dtype), served, params)
+    return out, rs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -24,6 +69,12 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="read-tier replica count the decode weights are "
+                         "pulled through (default 2)")
+    ap.add_argument("--direct", action="store_true",
+                    help="skip the Parameter Service read tier and decode "
+                         "straight off init_params")
     args = ap.parse_args()
 
     spec = registry._module(args.arch).spec()
@@ -33,6 +84,13 @@ def main() -> None:
 
     cfg = registry.get_smoke_config(args.arch) if args.smoke else spec.model
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    if not args.direct:
+        params, rs = _pull_params_via_replicas(params, args.replicas)
+        st = rs.replicas[0].stats
+        print(f"[serve] weights read through {len(rs.replicas)} pull "
+              f"replicas (bit-exact vs hosted): {st.n_full_serves} full "
+              f"serve(s), {st.bytes_served} B served, "
+              f"{rs.n_publishes} publish(es)")
     serve = jax.jit(tf.make_serve_step(cfg), donate_argnums=(1,))
 
     rng = np.random.default_rng(0)

@@ -518,6 +518,9 @@ class ServiceTickEngine:
         self._pull_fns: Dict[str, Callable] = {}
         self._grad_fns: Dict[str, Callable] = {}
         self._pack_fns: Dict[str, Callable] = {}
+        # Read tier (PR 10): a ReplicaSet registers itself here and gets
+        # offered a publishable snapshot every applying tick.
+        self._replica_hub = None
 
     # ------------------------------------------------------------- plumbing
     @property
@@ -632,6 +635,10 @@ class ServiceTickEngine:
         # Block versions index the OLD geometry; the epoch bump already
         # invalidates every held PullVersion, so restart the vector.
         self._block_versions = None
+        if self._replica_hub is not None:
+            # Read-tier snapshots hold the old geometry too; the epoch
+            # fence marks them stale and the next serve resubscribes.
+            self._replica_hub.on_replan()
         if touched is None:
             assert not any(self._queues.values()), (
                 "replan with queued pushes: runtime must drain the "
@@ -695,6 +702,12 @@ class ServiceTickEngine:
         owned blocks whose version moved, plus the new vector.  A stale
         or cross-epoch vector falls back to a full-payload diff; plain
         (``None``) pulls keep returning the parameter pytree."""
+        if self.health == QUARANTINED:
+            # No fallback: the state froze at the last-good snapshot and
+            # will never advance, so serving it as if live would feed the
+            # trainer silently stale parameters.  Read-tier replicas
+            # (repro.ps.replica) are the degraded-serving path.
+            raise self.quarantine_error
         self._queue(job_id)  # validates the job id
         while self.outstanding(job_id) > self.max_staleness:
             self.stats.n_forced_staleness += 1
@@ -894,7 +907,12 @@ class ServiceTickEngine:
         # Refresh the lane snapshot BEFORE any donated apply can consume
         # the live buffers (queues are still intact, so the snapshot plus
         # the -- now empty -- replay log reconstructs this exact moment).
-        self._maybe_snapshot()
+        snapped = self._maybe_snapshot()
+        if self._replica_hub is not None:
+            # Publish point for the read tier, co-located with the
+            # rollback snapshot: on a refresh tick the hub rides the copy
+            # just taken instead of making its own.
+            self._replica_hub.on_tick(None, snapped)
         applied = 0
         for key in groups:
             heads = [self._queues[j].popleft() for j in key]
@@ -948,11 +966,13 @@ class ServiceTickEngine:
         return applied
 
     # ------------------------------------------------------- fault recovery
-    def _maybe_snapshot(self) -> None:
+    def _maybe_snapshot(self) -> bool:
         """Copy (state, counts mirror) as the rollback anchor, every
-        ``snapshot_interval`` applying ticks, BEFORE the donated apply."""
+        ``snapshot_interval`` applying ticks, BEFORE the donated apply.
+        Returns True when the anchor was refreshed this call (the read
+        tier reuses its fresh copy instead of taking another)."""
         if self.snapshot_interval <= 0:
-            return
+            return False
         if (self._snapshot is None
                 or self._ticks_since_snapshot >= self.snapshot_interval):
             self._snapshot = (_copy_state(self.runtime.state),
@@ -960,6 +980,8 @@ class ServiceTickEngine:
             self._snapshot_log = []
             self._ticks_since_snapshot = 0
             self.stats.n_snapshots += 1
+            return True
+        return False
 
     def _rollback(self) -> None:
         """Restore the last-good snapshot and re-queue the logged pushes
@@ -1208,6 +1230,9 @@ class ShardedTickEngine:
         self._pull_fns: Dict[str, Callable] = {}
         self._grad_fns: Dict[str, Callable] = {}
         self._pack_fns: Dict[str, Callable] = {}
+        # Read tier (PR 10): a ReplicaSet registers itself here and gets
+        # offered each ticking lane for publication.
+        self._replica_hub = None
 
     # ------------------------------------------------------------- plumbing
     @property
@@ -1346,6 +1371,14 @@ class ShardedTickEngine:
         :class:`PullVersion` -- versions concatenate over the hosting
         shards in shard order, matching the packed piece order."""
         layout = self._layout(job_id)
+        for sid in layout.shard_ids:
+            lane = self._lanes.get(sid)
+            if lane is not None and lane.health == QUARANTINED:
+                # A hosting lane froze at its last-good snapshot and will
+                # never advance: raise its error instead of serving
+                # silently stale parameters.  Read-tier replicas
+                # (repro.ps.replica) are the degraded-serving path.
+                raise lane.quarantine_error
         while self.outstanding(job_id) > self.max_staleness:
             self.stats.n_forced_staleness += 1
             if self.tick() == 0:
@@ -1581,7 +1614,11 @@ class ShardedTickEngine:
             lane.stats.n_per_job_dispatch += 1
         else:
             groups = [tuple(pending)]
-        self._maybe_snapshot_lane(lane)
+        snapped = self._maybe_snapshot_lane(lane)
+        if self._replica_hub is not None:
+            # Read-tier publish point, co-located with the rollback
+            # snapshot so a refresh tick's copy is shared, not repeated.
+            self._replica_hub.on_tick(shard_id, snapped)
         applied = 0
         for key in groups:
             heads = [lane.queues[j].popleft() for j in key]
@@ -1642,13 +1679,14 @@ class ShardedTickEngine:
         return applied
 
     # ------------------------------------------------------- fault recovery
-    def _maybe_snapshot_lane(self, lane: _ShardLane) -> None:
+    def _maybe_snapshot_lane(self, lane: _ShardLane) -> bool:
         """Refresh this lane's rollback anchor every ``snapshot_interval``
         of ITS applying ticks, BEFORE the donated apply (queues intact,
         replay log emptied: snapshot + log reconstructs any later
-        moment)."""
+        moment).  Returns True when the anchor was refreshed this call
+        (the read tier reuses its fresh copy instead of taking another)."""
         if self.snapshot_interval <= 0:
-            return
+            return False
         if (lane.snapshot is None
                 or lane.ticks_since_snapshot >= self.snapshot_interval):
             lane.snapshot = _copy_state(self.runtime.states[lane.shard_id])
@@ -1656,6 +1694,8 @@ class ShardedTickEngine:
             lane.ticks_since_snapshot = 0
             lane.stats.n_snapshots += 1
             self.stats.n_snapshots += 1
+            return True
+        return False
 
     def _rollback_lane(self, lane: _ShardLane) -> None:
         """Restore the lane's last-good state and re-queue its logged
@@ -1764,7 +1804,9 @@ class ShardedTickEngine:
         # intact, so each lane's (snapshot, empty log) anchors a rollback
         # of this very launch.
         for sid, _ in key:
-            self._maybe_snapshot_lane(self._lanes[sid])
+            snapped = self._maybe_snapshot_lane(self._lanes[sid])
+            if self._replica_hub is not None:
+                self._replica_hub.on_tick(sid, snapped)
         popped = []  # (sid, job, head) in key order == table order
         for sid, jobs in key:
             lane = self._lanes[sid]
@@ -1902,6 +1944,10 @@ class ShardedTickEngine:
             # already sends every held PullVersion to the full-pull
             # fallback, so restart the vector.
             lane.versions = None
+        if self._replica_hub is not None:
+            # Read-tier snapshots hold the old geometry too; the epoch
+            # fence marks them stale and the next serve resubscribes.
+            self._replica_hub.on_replan()
         if touched is None:
             assert not any(q for lane in self._lanes.values()
                            for q in lane.queues.values()), (

@@ -363,15 +363,26 @@ class ShardedPlan:
         participating shards do not share one ``block_align``.
         """
         if shard_ids is None:
+            ids = list(self.shard_ids)
             shards = list(self.shards)
         else:
+            ids = list(shard_ids)
             shards = [self.shard_of(sid) for sid in shard_ids]
         aligns = {sp.block_align for sp in shards}
         if len(aligns) != 1:
+            by_align: Dict[int, List[str]] = {}
+            for sid, sp in zip(ids, shards):
+                by_align.setdefault(sp.block_align, []).append(sid)
+            detail = "; ".join(
+                f"block_align={a}: {', '.join(sids)}"
+                for a, sids in sorted(by_align.items()))
             raise ValueError(
                 f"concatenated view needs one block granularity across "
-                f"shards, got block_align={sorted(aligns)}; recompile the "
-                f"plan with a uniform pad_to")
+                f"the participating shards, but they disagree -- "
+                f"{detail}.  Tick the fleet with fleet_tick='per_shard' "
+                f"(one launch group per lane tolerates mixed "
+                f"granularities), or recompile the plan with a uniform "
+                f"pad_to to restore the single fused launch")
         block = aligns.pop()
         offs: List[int] = []
         off = 0

@@ -1,0 +1,630 @@
+"""High-QPS read tier: pull-only parameter replicas fed by
+publish-on-tick snapshots of the engines' shard spaces (PR 10).
+
+The paper decouples aggregation from training so a SHARED service can
+amortize bursty work; the ROADMAP's north star ("serve heavy traffic
+from millions of users") means reads must dominate writes -- yet every
+``engine.pull()`` contends with the tick engines' write path (it forces
+ticks at the staleness bound, touches the live donated buffers, and
+dies with a quarantined lane).  This module puts the PR-8 version
+machinery behind a dedicated read tier:
+
+  publish      every applying tick, each lane (a ``_ShardLane``; the
+               flat engine is one unnamed lane) offers the hub an
+               immutable ``(flat, version_vector, epoch)`` snapshot at a
+               configurable ``publish_interval``.  Publishing is
+               CO-LOCATED with the PR-7 rollback snapshot -- both fire
+               pre-apply, so on ticks where the lane refreshes its
+               rollback anchor the published ``flat`` IS the anchor's
+               copy (no extra state copy); other publish ticks copy the
+               one ``flat`` buffer only (never mu/nu/ef).
+  pull         a :class:`ParameterReplica` serves ``pull(job_id)``
+               (parameter pytree) and versioned ``pull(job_id,
+               since_version=...)`` diffs (the PR-8 :class:`PullDiff`
+               protocol, byte-compatible with the engines' own) from its
+               held snapshots -- ZERO work on the write path.
+  pull_batch   the batched lookup API: ``[(job_id, since_version), ...]``
+               gathers every requested job's changed rows in ONE jitted
+               concat+gather launch per replica instead of K sequential
+               per-job pulls.
+  staleness    ``max_staleness_ticks`` bounds how far a served snapshot
+               may trail the lane's tick counter; a replica REFUSES to
+               serve past the bound and forces a refresh
+               (``ReadStats.n_forced_refreshes``).
+
+Failure semantics mirror the engines':
+
+* REPLANS -- the epoch fence.  A replan bumps the engine epoch; held
+  snapshots (old geometry) are detected stale on the next serve and the
+  replica resubscribes via a forced full publish.  Client-held
+  ``PullVersion`` vectors cross the same fence and fall back to full.
+* QUARANTINE -- a quarantined lane stops publishing, and a forced
+  refresh of it is impossible; the replica keeps serving its LAST-GOOD
+  snapshot with the serve flagged ``degraded``
+  (``ReadStats.n_degraded_serves``).  This is the read tier's point:
+  direct ``engine.pull()`` raises the lane's
+  :class:`~repro.ps.faults.EngineQuarantinedError`, replicas stay up.
+
+Usage::
+
+    eng = rt.attach_engine(...)
+    rs = ReplicaSet(eng, n_replicas=4, publish_interval=1,
+                    max_staleness_ticks=8)
+    ... train: every applying tick publishes ...
+    params = rs.pull("job")               # round-robin over replicas
+    diff = rs.pull("job", since_version=held_vector)
+    diffs = rs.pull_batch([("a", va), ("b", 0), ...])  # one gather
+    rs.refresh()                          # force-publish current state
+
+Both runtimes surface per-replica :class:`ReadStats` under the
+``"replicas"`` key of ``debug_stats()``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ps.engine import PullDiff, PullVersion
+from repro.ps.faults import QUARANTINED
+
+__all__ = ["ParameterReplica", "ReadStats", "ReplicaSet", "ShardSnapshot"]
+
+# The flat engine is one unnamed lane; its snapshots key on None.
+_FLAT_LANE = None
+
+
+@dataclass(frozen=True)
+class ShardSnapshot:
+    """One lane's published state: immutable by convention -- ``flat``
+    is never mutated in place by the engine (rollback restores COPY the
+    anchor; donated applies consume the live buffers, not this copy), so
+    every subscribed replica shares the same arrays."""
+
+    shard_id: Optional[str]  # None: the flat engine's single lane
+    epoch: int  # plan epoch the geometry belongs to
+    tick: int  # lane's applying-tick counter at publish (staleness base)
+    seq: int  # hub-wide publish sequence number
+    flat: Any  # (shard_len,) parameter buffer
+    versions: np.ndarray  # per-``block_align``-block versions, full space
+
+
+@dataclass
+class ReadStats:
+    """Per-replica serving counters (PR 10), surfaced by both runtimes'
+    ``debug_stats()`` under ``"replicas"``."""
+
+    n_pulls: int = 0  # single-job pulls served (full + diff)
+    n_batches: int = 0  # pull_batch calls served
+    n_batch_jobs: int = 0  # jobs served inside those batches
+    n_full_serves: int = 0  # full-payload serves (bootstrap/fallback)
+    n_diff_serves: int = 0  # changed-blocks-only serves
+    bytes_served: int = 0  # payload bytes shipped (fp32 wire model)
+    n_snapshots_seen: int = 0  # publishes this replica received
+    n_forced_refreshes: int = 0  # staleness-bound / epoch-fence refreshes
+    n_degraded_serves: int = 0  # serves from a quarantined lane's last-good
+    serve_seconds: float = 0.0  # wall time inside pull/pull_batch
+    # Snapshot age at serve time, in lane ticks: {staleness: serves}.
+    staleness_hist: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def pulls_per_sec(self) -> float:
+        """Jobs served per second of serve time (batched jobs count)."""
+        if self.serve_seconds <= 0:
+            return 0.0
+        return (self.n_pulls + self.n_batch_jobs) / self.serve_seconds
+
+    def _record_staleness(self, ticks: int) -> None:
+        t = int(ticks)
+        self.staleness_hist[t] = self.staleness_hist.get(t, 0) + 1
+
+
+class ParameterReplica:
+    """One pull-only serving endpoint: holds its own map of published
+    :class:`ShardSnapshot` objects (shared immutable arrays -- N
+    replicas cost one publish, not N copies) and serves reads from them
+    without ever touching the engine's write path."""
+
+    def __init__(self, hub: "ReplicaSet", replica_id: int):
+        self.replica_id = int(replica_id)
+        self._hub = hub
+        self._snaps: Dict[Optional[str], ShardSnapshot] = {}
+        self.stats = ReadStats()
+        self._gather_fns: Dict[int, Any] = {}  # n_lanes -> jitted gather
+        self.degraded_lanes: Tuple[Optional[str], ...] = ()
+
+    # ------------------------------------------------------------ freshness
+    def _ensure_fresh(self, keys: Sequence[Optional[str]]) -> bool:
+        """Bring every named lane's snapshot within the epoch fence and
+        the staleness bound; returns True when any serve had to fall
+        back to a quarantined lane's last-good snapshot (degraded)."""
+        hub = self._hub
+        epoch = hub.epoch
+        bound = hub.max_staleness_ticks
+        stale: List[Optional[str]] = []
+        degraded: List[Optional[str]] = []
+        for key in keys:
+            snap = self._snaps.get(key)
+            if hub.lane_quarantined(key):
+                # The lane will never tick (or publish) again.  A
+                # matching-epoch snapshot is its last-good state: serve
+                # it, flagged -- regardless of any staleness bound.  A
+                # cross-epoch (or missing) snapshot has the WRONG
+                # geometry -- nothing safe to serve.
+                if snap is not None and snap.epoch == epoch:
+                    degraded.append(key)
+                    continue
+                raise hub.lane_error(key)
+            fence = snap is None or snap.epoch != epoch
+            over = (not fence and bound is not None
+                    and hub.lane_tick(key) - snap.tick > bound)
+            if fence or over:
+                stale.append(key)
+        if stale:
+            # Stale epoch -> resubscribe + full publish; over the
+            # staleness bound -> refuse to serve, force a refresh.
+            self.stats.n_forced_refreshes += 1
+            hub.refresh(stale)
+        self.degraded_lanes = tuple(degraded)
+        max_stale = 0
+        for key in keys:
+            if key in self.degraded_lanes:
+                continue
+            snap = self._snaps[key]
+            max_stale = max(max_stale, hub.lane_tick(key) - snap.tick)
+        self.stats._record_staleness(max_stale)
+        if degraded:
+            self.stats.n_degraded_serves += 1
+        return bool(degraded)
+
+    def _publish(self, snap: ShardSnapshot) -> None:
+        self._snaps[snap.shard_id] = snap
+        self.stats.n_snapshots_seen += 1
+
+    # ----------------------------------------------------------- single pull
+    def pull(self, job_id: str, since_version=None):
+        """Serve one job from held snapshots: a parameter pytree, or --
+        with ``since_version`` -- a :class:`PullDiff` of the blocks whose
+        published version moved past the client's vector (``0``
+        bootstraps full).  Same protocol as ``engine.pull``, served from
+        the read tier."""
+        t0 = time.perf_counter()
+        keys, layouts = self._hub.job_lanes(job_id)
+        self._ensure_fresh(keys)
+        if since_version is not None and isinstance(since_version,
+                                                    PullVersion):
+            # A client that last pulled from the ENGINE may hold versions
+            # AHEAD of this replica's snapshot; serving a diff against
+            # older published versions would silently report "no change".
+            # Refuse and refresh to at least the client's view.
+            vers = self._job_versions(keys, layouts)
+            if (since_version.epoch == self._hub.epoch
+                    and since_version.versions.size == vers.size
+                    and np.any(since_version.versions > vers)):
+                self.stats.n_forced_refreshes += 1
+                self._hub.refresh([k for k in keys
+                                   if k not in self.degraded_lanes])
+        try:
+            if since_version is None:
+                out = self._serve_tree(job_id, keys, layouts)
+            else:
+                out = self._serve_diff(job_id, keys, layouts,
+                                       since_version)
+            self.stats.n_pulls += 1
+            return out
+        finally:
+            self.stats.serve_seconds += time.perf_counter() - t0
+
+    def _job_versions(self, keys, layouts) -> np.ndarray:
+        parts = [self._snaps[k].versions[np.asarray(l.blocks)]
+                 for k, l in zip(keys, layouts)]
+        return parts[0].copy() if len(parts) == 1 else np.concatenate(parts)
+
+    def _serve_tree(self, job_id, keys, layouts):
+        from repro.ps.runtime import _unpack_slots
+
+        layout, abstract = self._hub.job_layout_abstract(job_id)
+        pieces = []
+        for key, l in zip(keys, layouts):
+            flat = self._snaps[key].flat
+            pieces.append(flat.reshape(-1, l.block)[
+                jnp.asarray(np.asarray(l.blocks))].reshape(-1))
+        packed = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
+        self.stats.n_full_serves += 1
+        self.stats.bytes_served += 4 * int(layout.packed_len)
+        return _unpack_slots(layout, packed, abstract)
+
+    def _serve_diff(self, job_id, keys, layouts, since) -> PullDiff:
+        vers = self._job_versions(keys, layouts)
+        version = PullVersion(epoch=self._hub.epoch, versions=vers)
+        blocks = {l.block for l in layouts}
+        uniform = len(blocks) == 1
+        packed_len = sum(int(np.asarray(l.blocks).size) * l.block
+                         for l in layouts)
+        bytes_full = 4 * packed_len
+        full = (not uniform
+                or not isinstance(since, PullVersion)
+                or since.epoch != self._hub.epoch
+                or since.versions.size != vers.size)
+        if full:
+            pieces = [self._snaps[k].flat.reshape(-1, l.block)[
+                jnp.asarray(np.asarray(l.blocks))].reshape(-1)
+                for k, l in zip(keys, layouts)]
+            data = (pieces[0] if len(pieces) == 1
+                    else jnp.concatenate(pieces))
+            diff = PullDiff(
+                job_id=job_id, version=version, full=True,
+                block=(blocks.pop() if uniform else 0),
+                block_ids=np.empty(0, np.int64), data=data,
+                bytes_wire=bytes_full, bytes_full=bytes_full)
+            self.stats.n_full_serves += 1
+        else:
+            block = blocks.pop()
+            changed = vers > since.versions
+            data_parts, id_parts = [], []
+            off = 0
+            for key, l in zip(keys, layouts):
+                nb = int(np.asarray(l.blocks).size)
+                sel = np.nonzero(changed[off:off + nb])[0]
+                if sel.size:
+                    flat = self._snaps[key].flat
+                    data_parts.append(flat.reshape(-1, l.block)[
+                        jnp.asarray(np.asarray(l.blocks)[sel])])
+                    id_parts.append(off + sel)
+                off += nb
+            if data_parts:
+                data = (jnp.concatenate(data_parts)
+                        if len(data_parts) > 1 else data_parts[0])
+                ids = np.concatenate(id_parts).astype(np.int64)
+            else:
+                data = jnp.zeros((0, block), jnp.float32)
+                ids = np.empty(0, np.int64)
+            diff = PullDiff(
+                job_id=job_id, version=version, full=False, block=block,
+                block_ids=ids, data=data,
+                bytes_wire=4 * int(ids.size) * block,
+                bytes_full=bytes_full)
+            self.stats.n_diff_serves += 1
+        self.stats.bytes_served += diff.bytes_wire
+        return diff
+
+    # ---------------------------------------------------------- batched pull
+    def pull_batch(self, requests: Sequence[Tuple[str, Any]]
+                   ) -> List[PullDiff]:
+        """Serve K jobs in ONE jitted concat+gather launch: every
+        requested job's needed rows (all owned blocks for a bootstrap or
+        fallback, changed blocks for a held vector) collect into one
+        global row-index array over the involved lanes' stacked
+        snapshot matrices, one gather ships them all, and the rows split
+        back into per-job :class:`PullDiff` results -- the K per-job
+        gathers (and K python round-trips) of sequential pulls collapse
+        to one.  Falls back to the per-job path only when the involved
+        lanes disagree on ``block_align`` (mixed granularity has no
+        single row width)."""
+        t0 = time.perf_counter()
+        try:
+            reqs = [(j, since) for j, since in requests]
+            lanes: List[Optional[str]] = []
+            per_job = []
+            for j, _ in reqs:
+                keys, layouts = self._hub.job_lanes(j)
+                per_job.append((keys, layouts))
+                for k in keys:
+                    if k not in lanes:
+                        lanes.append(k)
+            self._ensure_fresh(lanes)
+            blocks = {l.block for _, layouts in per_job for l in layouts}
+            out: List[PullDiff] = []
+            if len(blocks) != 1:
+                for (j, since), _ in zip(reqs, per_job):
+                    out.append(self._serve_diff(
+                        j, *self._hub.job_lanes(j),
+                        since if since is not None else 0))
+            else:
+                out = self._serve_batch_uniform(reqs, per_job, lanes,
+                                                blocks.pop())
+            self.stats.n_batches += 1
+            self.stats.n_batch_jobs += len(reqs)
+            return out
+        finally:
+            self.stats.serve_seconds += time.perf_counter() - t0
+
+    def _serve_batch_uniform(self, reqs, per_job, lanes, block):
+        epoch = self._hub.epoch
+        base: Dict[Optional[str], int] = {}
+        rows_so_far = 0
+        mats = []
+        for key in lanes:
+            base[key] = rows_so_far
+            flat = self._snaps[key].flat
+            rows_so_far += int(flat.shape[0]) // block
+            mats.append(flat.reshape(-1, block))
+        plan_rows: List[np.ndarray] = []  # global row ids, request order
+        metas = []  # (job_id, version, full, ids, n_rows, bytes_full)
+        for (j, since), (keys, layouts) in zip(reqs, per_job):
+            vers = self._job_versions(keys, layouts)
+            version = PullVersion(epoch=epoch, versions=vers)
+            packed_len = sum(int(np.asarray(l.blocks).size) * block
+                             for l in layouts)
+            bytes_full = 4 * packed_len
+            full = (not isinstance(since, PullVersion)
+                    or since.epoch != epoch
+                    or since.versions.size != vers.size)
+            if full:
+                g = np.concatenate(
+                    [np.asarray(l.blocks) + base[k]
+                     for k, l in zip(keys, layouts)])
+                ids = np.empty(0, np.int64)
+            else:
+                changed = vers > since.versions
+                g_parts, id_parts = [], []
+                off = 0
+                for k, l in zip(keys, layouts):
+                    nb = int(np.asarray(l.blocks).size)
+                    sel = np.nonzero(changed[off:off + nb])[0]
+                    if sel.size:
+                        g_parts.append(np.asarray(l.blocks)[sel] + base[k])
+                        id_parts.append(off + sel)
+                    off += nb
+                g = (np.concatenate(g_parts) if g_parts
+                     else np.empty(0, np.int64))
+                ids = (np.concatenate(id_parts).astype(np.int64)
+                       if id_parts else np.empty(0, np.int64))
+            plan_rows.append(g.astype(np.int32))
+            metas.append((j, version, full, ids, int(g.size), bytes_full))
+        all_rows = (np.concatenate(plan_rows) if plan_rows
+                    else np.empty(0, np.int32))
+        fn = self._gather_fns.get(len(mats))
+        if fn is None:
+            def fn(ms, rows):
+                mat = ms[0] if len(ms) == 1 else jnp.concatenate(ms)
+                return mat[rows]
+
+            fn = self._gather_fns[len(mats)] = jax.jit(fn)
+        n_rows_total = int(all_rows.size)
+        if n_rows_total:
+            # Pad the row plan to the request set's total owned blocks (a
+            # request-shape constant; also the bootstrap full pull's
+            # shape) so the jitted gather compiles ONCE per batch shape
+            # instead of retracing on every distinct changed-row count;
+            # then split the wire payload back per job on the HOST --
+            # device-side slicing would recompile an eager dynamic_slice
+            # for every new (dirty pattern, job) shape.
+            cap = sum(m[5] // (4 * block) for m in metas)
+            padded = np.zeros(cap, np.int32)
+            padded[:n_rows_total] = all_rows
+            gathered = np.asarray(fn(tuple(mats), jnp.asarray(padded)))
+        else:
+            gathered = np.zeros((0, block), np.float32)
+        out: List[PullDiff] = []
+        off = 0
+        for j, version, full, ids, n_rows, bytes_full in metas:
+            rows = gathered[off:off + n_rows]
+            off += n_rows
+            if full:
+                diff = PullDiff(
+                    job_id=j, version=version, full=True, block=block,
+                    block_ids=np.empty(0, np.int64),
+                    data=jnp.asarray(rows.reshape(-1)),
+                    bytes_wire=bytes_full, bytes_full=bytes_full)
+                self.stats.n_full_serves += 1
+            else:
+                diff = PullDiff(
+                    job_id=j, version=version, full=False, block=block,
+                    block_ids=ids, data=jnp.asarray(rows),
+                    bytes_wire=4 * n_rows * block, bytes_full=bytes_full)
+                self.stats.n_diff_serves += 1
+            self.stats.bytes_served += diff.bytes_wire
+            out.append(diff)
+        return out
+
+
+class ReplicaSet:
+    """N pull-only replicas subscribed to one tick engine.
+
+    The set registers itself as the engine's replica hub: every applying
+    tick the engine offers each lane for publication (pre-apply,
+    co-located with the PR-7 rollback snapshot so a snapshot tick adds
+    no extra state copy), and the hub re-publishes to every replica --
+    the snapshots are shared immutable objects, so N replicas cost one
+    copy.  Reads route round-robin via :meth:`pull` / :meth:`pull_batch`
+    (or pick a replica directly from :attr:`replicas`)."""
+
+    def __init__(self, engine, n_replicas: int = 2, *,
+                 publish_interval: int = 1,
+                 max_staleness_ticks: Optional[int] = None):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        if publish_interval < 1:
+            raise ValueError(
+                f"publish_interval must be >= 1, got {publish_interval}")
+        if max_staleness_ticks is not None and max_staleness_ticks < 0:
+            raise ValueError(
+                f"max_staleness_ticks must be >= 0 (None disables the "
+                f"bound), got {max_staleness_ticks}")
+        if getattr(engine, "_replica_hub", None) is not None:
+            raise ValueError("engine already has a ReplicaSet attached")
+        self.engine = engine
+        self.publish_interval = int(publish_interval)
+        self.max_staleness_ticks = (None if max_staleness_ticks is None
+                                    else int(max_staleness_ticks))
+        self._sharded = hasattr(engine, "_lanes")
+        self._seq = 0
+        self._since_pub: Dict[Optional[str], int] = {}
+        self.n_publishes = 0
+        self.n_reused_snapshot_copies = 0  # publishes riding the PR-7 copy
+        self._rr = 0
+        self.replicas: Tuple[ParameterReplica, ...] = tuple(
+            ParameterReplica(self, i) for i in range(n_replicas))
+        engine._replica_hub = self
+
+    # ------------------------------------------------------- engine facing
+    @property
+    def epoch(self) -> int:
+        return self.engine._epoch
+
+    def _lane_keys(self) -> List[Optional[str]]:
+        if not self._sharded:
+            return [_FLAT_LANE]
+        plan = self.engine.plan
+        return [] if plan is None else list(plan.shard_ids)
+
+    def lane_tick(self, key: Optional[str]) -> int:
+        if key is _FLAT_LANE and not self._sharded:
+            return self.engine.stats.n_ticks
+        lane = self.engine._lanes.get(key)
+        return 0 if lane is None else lane.stats.n_ticks
+
+    def lane_quarantined(self, key: Optional[str]) -> bool:
+        if key is _FLAT_LANE and not self._sharded:
+            return self.engine.health == QUARANTINED
+        lane = self.engine._lanes.get(key)
+        return lane is not None and lane.health == QUARANTINED
+
+    def lane_error(self, key: Optional[str]):
+        if key is _FLAT_LANE and not self._sharded:
+            return self.engine.quarantine_error
+        return self.engine._lanes[key].quarantine_error
+
+    def _lane_versions(self, key: Optional[str]) -> np.ndarray:
+        eng = self.engine
+        if key is _FLAT_LANE and not self._sharded:
+            return eng._versions_array()
+        return eng._lane_versions(eng._lane(key))
+
+    def _live_flat(self, key: Optional[str]):
+        if key is _FLAT_LANE and not self._sharded:
+            return self.engine.runtime.state["flat"]
+        return self.engine.runtime.states[key]["flat"]
+
+    def _anchor_flat(self, key: Optional[str]):
+        """The PR-7 rollback anchor's ``flat`` (already a copy), or None
+        when the lane holds no snapshot."""
+        if key is _FLAT_LANE and not self._sharded:
+            snap = self.engine._snapshot
+            return None if snap is None else snap[0]["flat"]
+        lane = self.engine._lanes.get(key)
+        return None if lane is None or lane.snapshot is None \
+            else lane.snapshot["flat"]
+
+    def on_tick(self, key: Optional[str], snapped: bool) -> None:
+        """Engine hook, called once per applying tick of the named lane,
+        PRE-apply (right after the lane's rollback-snapshot point).  The
+        published state is therefore the result of every COMPLETED tick;
+        with ``snapped`` the rollback anchor was refreshed this very
+        tick and its ``flat`` copy is published as-is."""
+        count = self._since_pub.get(key, 0) + 1
+        snap = None
+        for rep in self.replicas:
+            snap = rep._snaps.get(key)
+            break
+        due = (count >= self.publish_interval
+               or snap is None or snap.epoch != self.engine._epoch)
+        if not due:
+            self._since_pub[key] = count
+            return
+        if snapped:
+            flat = self._anchor_flat(key)
+            if flat is None:  # snapshots disabled mid-flight
+                flat = self._live_flat(key).copy()
+            else:
+                self.n_reused_snapshot_copies += 1
+        else:
+            flat = self._live_flat(key).copy()
+        self._publish(key, flat)
+        self._since_pub[key] = 0
+
+    def on_replan(self) -> None:
+        """Engine hook: a replan landed (epoch bumped).  Held snapshots
+        keep serving as last-good only behind the quarantine path; the
+        next serve of any lane detects the stale epoch and resubscribes
+        via a forced full publish."""
+        self._since_pub.clear()
+
+    # ---------------------------------------------------------- publication
+    def _publish(self, key: Optional[str], flat) -> None:
+        snap = ShardSnapshot(
+            shard_id=key, epoch=self.engine._epoch,
+            tick=self.lane_tick(key), seq=self._seq, flat=flat,
+            versions=self._lane_versions(key).copy())
+        self._seq += 1
+        self.n_publishes += 1
+        for rep in self.replicas:
+            rep._publish(snap)
+
+    def refresh(self, keys: Optional[Sequence[Optional[str]]] = None
+                ) -> List[Optional[str]]:
+        """Force-publish the CURRENT state of the named lanes (default:
+        every live lane) -- the staleness-bound / epoch-fence refresh
+        path, and the way to expose the final state after a drain (the
+        on-tick publish is pre-apply, so it trails the in-flight tick).
+        Quarantined lanes cannot republish (their last-good snapshot
+        stands); returns the lanes actually published."""
+        if keys is None:
+            keys = self._lane_keys()
+        published = []
+        for key in keys:
+            if self.lane_quarantined(key):
+                continue
+            self._publish(key, self._live_flat(key).copy())
+            self._since_pub[key] = 0
+            published.append(key)
+        return published
+
+    # ------------------------------------------------------------ job lookup
+    def job_lanes(self, job_id: str):
+        """(lane keys, per-lane JobLayouts) hosting the job, in shard
+        order -- the flat engine is the single ``None`` lane."""
+        plan = self.engine.plan
+        if plan is None:
+            raise ValueError("no plan compiled: the service hosts no jobs")
+        layout = plan.job_layout(job_id)
+        if self._sharded:
+            return list(layout.shard_ids), list(layout.layouts)
+        return [_FLAT_LANE], [layout]
+
+    def job_layout_abstract(self, job_id: str):
+        return (self.engine.plan.job_layout(job_id),
+                self.engine.runtime._jobs[job_id]["abstract"])
+
+    # -------------------------------------------------------------- serving
+    def _next(self) -> ParameterReplica:
+        rep = self.replicas[self._rr % len(self.replicas)]
+        self._rr += 1
+        return rep
+
+    def pull(self, job_id: str, since_version=None):
+        """Round-robin a replica and serve (see
+        :meth:`ParameterReplica.pull`)."""
+        return self._next().pull(job_id, since_version=since_version)
+
+    def pull_batch(self, requests: Sequence[Tuple[str, Any]]
+                   ) -> List[PullDiff]:
+        """Round-robin a replica and serve the batch in one gather (see
+        :meth:`ParameterReplica.pull_batch`)."""
+        return self._next().pull_batch(requests)
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Any]:
+        """Per-replica ReadStats (plus hub publish counters) as plain
+        dicts -- the ``debug_stats()["replicas"]`` payload."""
+        import dataclasses
+
+        out: Dict[str, Any] = {
+            "n_replicas": len(self.replicas),
+            "publish_interval": self.publish_interval,
+            "max_staleness_ticks": self.max_staleness_ticks,
+            "n_publishes": self.n_publishes,
+            "n_reused_snapshot_copies": self.n_reused_snapshot_copies,
+        }
+        for rep in self.replicas:
+            d = dataclasses.asdict(rep.stats)
+            d["pulls_per_sec"] = rep.stats.pulls_per_sec
+            out[f"replica_{rep.replica_id}"] = d
+        return out

@@ -344,6 +344,10 @@ def _debug_stats(rt, extra_runtime: Dict[str, Any],
             "by_kind": injector.fire_counts(),
         }),
     }
+    # Read tier (PR 10): per-replica ReadStats when a ReplicaSet is
+    # attached to the engine.
+    hub = getattr(engine, "_replica_hub", None)
+    out["replicas"] = hub.stats() if hub is not None else None
     if shards is not None:
         out["shards"] = shards
     return out

@@ -175,8 +175,9 @@ def run_replay(cfg: ReplayConfig) -> Dict[str, Any]:
     live: List[str] = []
     dead: set = set()  # trainers gone silent (chaos)
     reclaimed: set = set()  # lease-expired jobs
+    read_vectors: Dict[str, Any] = {}  # reader's held PullVersions (PR 10)
     skipped_arrivals = 0
-    n_exits = n_steps = n_recoveries = 0
+    n_exits = n_steps = n_reads = n_recoveries = 0
     dead_job = None
     dead_window = reclaim_window = None
     parity_violations = 0
@@ -209,8 +210,28 @@ def run_replay(cfg: ReplayConfig) -> Dict[str, Any]:
         if twin is not None:
             twin.step(jid, {"target": targets[jid]})
 
+    def read(jid: str) -> None:
+        """One versioned pull per live job per window -- the read-path
+        consumer that makes the soak price the pull wire (PR-8 counters;
+        diff pulls across rollbacks/replans, full-pull fallbacks)."""
+        nonlocal n_reads, n_recoveries
+        try:
+            diff = eng.pull(jid, since_version=read_vectors.get(jid, 0))
+        except EngineQuarantinedError:
+            # A hosting lane died before the read: re-host it (same
+            # recovery path the trainer uses) and retry once.
+            for sid in eng.quarantined_shards():
+                rt.recover_shard(sid)
+                n_recoveries += 1
+            diff = eng.pull(jid, since_version=read_vectors.get(jid, 0))
+        read_vectors[jid] = diff.version
+        n_reads += 1
+
     for w in windows:
         clock.now = float(w.index)
+        pulls_at_start = (eng.stats.n_full_pulls, eng.stats.n_diff_pulls,
+                          eng.stats.pull_bytes_wire,
+                          eng.stats.pull_bytes_full)
         for jid in w.arrivals:
             if len(live) >= cfg.max_live:
                 skipped_arrivals += 1
@@ -236,6 +257,13 @@ def run_replay(cfg: ReplayConfig) -> Dict[str, Any]:
             for _ in range(cfg.steps_per_window):
                 step(jid)
                 n_steps += 1
+        # Read path: the dead trainer's job is NOT read -- a pull renews
+        # its lease, and the point of the dead-job scenario is that only
+        # the lease reclaims it.
+        for jid in list(live):
+            if jid in dead or jid in reclaimed:
+                continue
+            read(jid)
         expired = eng.expire_leases()
         for jid in expired:
             reclaimed.add(jid)
@@ -276,7 +304,13 @@ def run_replay(cfg: ReplayConfig) -> Dict[str, Any]:
             window=w.index, arrivals=len(w.arrivals), exits=len(w.exits),
             live=len(live), n_shards=rt.n_shards, action=decision.action,
             agree=bool(agree), parity=bool(window_parity),
-            faults_fired=inj.n_fired))
+            faults_fired=inj.n_fired,
+            # PR-8 wire counters, this window's deltas: the soak prices
+            # the read path alongside the chaos invariants.
+            full_pulls=eng.stats.n_full_pulls - pulls_at_start[0],
+            diff_pulls=eng.stats.n_diff_pulls - pulls_at_start[1],
+            pull_bytes_wire=eng.stats.pull_bytes_wire - pulls_at_start[2],
+            pull_bytes_full=eng.stats.pull_bytes_full - pulls_at_start[3]))
 
     return dict(
         windows=window_log,
@@ -286,6 +320,11 @@ def run_replay(cfg: ReplayConfig) -> Dict[str, Any]:
         n_skipped_arrivals=skipped_arrivals,
         n_exits=n_exits,
         n_steps=n_steps,
+        n_reads=n_reads,
+        n_full_pulls=eng.stats.n_full_pulls,
+        n_diff_pulls=eng.stats.n_diff_pulls,
+        pull_bytes_wire=eng.stats.pull_bytes_wire,
+        pull_bytes_full=eng.stats.pull_bytes_full,
         n_recoveries=n_recoveries,
         faults_by_kind=inj.fire_counts(),
         n_faults_fired=inj.n_fired,
@@ -363,6 +402,12 @@ def replan_overhead_micro(n_cycles: int = 3) -> Dict[str, float]:
     )
 
 
+def _pull_saving(report: Dict[str, Any]) -> float:
+    """Shipped pull bytes as a fraction of the all-full-pull cost."""
+    full = report.get("pull_bytes_full", 0)
+    return report.get("pull_bytes_wire", 0) / full if full else 1.0
+
+
 def report_rows(chaos: Dict[str, Any], parity: Dict[str, Any],
                 micro: Optional[Dict[str, float]] = None):
     """Flatten two replay reports (+ the replan micro-bench) into the
@@ -402,6 +447,15 @@ def report_rows(chaos: Dict[str, Any], parity: Dict[str, Any],
         ("chaos/zero_divergence",
          str(int(chaos["registry_divergence_windows"] == 0)),
          "acceptance: zero registry/runtime divergence under chaos"),
+        ("chaos/reads", str(chaos["n_reads"]),
+         "versioned pulls driven by the per-window read consumer"),
+        ("chaos/read_full_pulls", str(chaos["n_full_pulls"]),
+         "full-payload pulls (bootstraps + replan/rollback fallbacks)"),
+        ("chaos/read_diff_pulls", str(chaos["n_diff_pulls"]),
+         "pulls that shipped changed blocks only"),
+        ("chaos/read_pull_bytes_wire", str(chaos["pull_bytes_wire"]),
+         f"vs {chaos['pull_bytes_full']} B as all-full pulls "
+         f"({_pull_saving(chaos):.2f}x of full)"),
         ("nofault/windows", str(parity["n_windows"]),
          "chaos-free replay vs a flat eager twin at s=0"),
         ("nofault/parity_violations", str(parity["parity_violations"]),

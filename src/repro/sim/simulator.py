@@ -68,6 +68,20 @@ class SimConfig:
     push_compression: Optional[str] = None
     pull_interval: float = 0.0
     pull_dirty_fraction: float = 1.0
+    # Read tier (PR 10).  With ``read_qps > 0`` a replica set of
+    # ``n_read_replicas`` pull-only endpoints (repro.ps.replica) serves
+    # an aggregate ``read_qps`` requests/sec, round-robin over the
+    # running jobs.  Replicas hold snapshots published every
+    # ``replica_publish_interval`` seconds (0 = every service tick, i.e.
+    # ``tick_interval``): ONE publish is shared by every replica (the
+    # ReplicaSet ships one immutable copy, not N), so the publish wire is
+    # priced once per interval while reads scale with traffic; a served
+    # read is on average half a publish interval stale.  Reads ship
+    # ``pull_dirty_fraction`` of the job's bytes (versioned diff model,
+    # same knob as engine pulls).
+    read_qps: float = 0.0
+    n_read_replicas: int = 1
+    replica_publish_interval: float = 0.0
 
 
 @dataclass
@@ -102,6 +116,14 @@ class SimResult:
     push_bytes_wire: float = 0.0  # same pushes under push_compression
     pull_bytes_full: float = 0.0  # full-pull cost of the reader model
     pull_bytes_wire: float = 0.0  # versioned-diff cost (dirty fraction)
+    # Read-tier accounting (read_qps > 0 in SimConfig): requests served
+    # by the replica set, the bytes they shipped, the bytes the engines
+    # published to feed the replicas (one shared copy per interval), and
+    # the integral of snapshot age over served reads.
+    reads_served: float = 0.0
+    read_bytes_served: float = 0.0
+    publish_bytes_total: float = 0.0
+    read_staleness_seconds: float = 0.0  # sum over reads of snapshot age
     # Elastic-fleet CPU-tick accounting: each ALLOCATED Aggregator burns
     # one shard tick per tick_interval (its shard space wakes, drains,
     # applies) whether hot or cold -- so the integral of fleet size over
@@ -131,6 +153,7 @@ class SimResult:
                 / self.shard_tick_seconds)
 
     _tick: float = 1.0  # tick_interval used (for the tick properties)
+    _n_read_replicas: int = 1  # replica count used (read-tier properties)
 
     @property
     def cpu_time_saving(self) -> float:
@@ -168,6 +191,31 @@ class SimResult:
         return 1.0 - self.pull_bytes_wire / self.pull_bytes_full
 
     @property
+    def reads_per_replica_per_sec(self) -> float:
+        """Sustained serve rate one replica carried (read_qps > 0)."""
+        if self.elapsed_seconds <= 0:
+            return 0.0
+        return (self.reads_served / self.elapsed_seconds
+                / max(1, self._n_read_replicas))
+
+    @property
+    def mean_read_staleness_seconds(self) -> float:
+        """Mean snapshot age a served read observed: half the publish
+        interval under steady publishing (0 when the read tier is off)."""
+        if self.reads_served <= 0:
+            return 0.0
+        return self.read_staleness_seconds / self.reads_served
+
+    @property
+    def read_publish_fanout(self) -> float:
+        """Read bytes served per publish byte spent (the read-tier
+        amortization claim: one shared publish feeds N replicas' worth
+        of read traffic; higher = the tier pays for itself)."""
+        if self.publish_bytes_total <= 0:
+            return 0.0
+        return self.read_bytes_served / self.publish_bytes_total
+
+    @property
     def tick_batching_factor(self) -> float:
         """Sequential update passes per batched pass (>= 1): how many
         per-job step-functions one service tick replaces on average."""
@@ -197,6 +245,12 @@ class ClusterSimulator:
         cfg = self.cfg
         res = SimResult()
         res._tick = cfg.tick_interval if cfg.tick_interval > 0 else 1.0
+        res._n_read_replicas = max(1, int(cfg.n_read_replicas))
+        # Publish cadence of the read tier: explicit interval, else every
+        # service tick, else 1 s (read_qps without any tick model).
+        publish_period = (cfg.replica_publish_interval
+                          if cfg.replica_publish_interval > 0
+                          else res._tick)
         self._last_plan = None  # plan accounting must not leak across runs
         events: List[Tuple[float, int, str, Optional[TraceJob]]] = []
         for tj in trace:
@@ -272,6 +326,27 @@ class ClusterSimulator:
                             pulls = dt / cfg.pull_interval
                             res.pull_bytes_full += pulls * nbytes
                             res.pull_bytes_wire += pulls * nbytes * dirty
+                if running and cfg.read_qps > 0:
+                    # Read tier: read_qps requests/sec land round-robin
+                    # on the running jobs, so each read ships the MEAN
+                    # job's bytes (dirty fraction under the versioned
+                    # reader model); publishing ships each running job's
+                    # bytes ONCE per publish interval regardless of the
+                    # replica count (one shared immutable snapshot), and
+                    # a served read observes on average half a publish
+                    # interval of snapshot staleness.
+                    reads = dt * cfg.read_qps
+                    mean_bytes = (sum(j.profile.total_bytes
+                                      for j in running.values())
+                                  / len(running))
+                    res.reads_served += reads
+                    res.read_bytes_served += reads * mean_bytes * dirty
+                    res.publish_bytes_total += (
+                        dt / publish_period
+                        * sum(j.profile.total_bytes
+                              for j in running.values()))
+                    res.read_staleness_seconds += (
+                        reads * publish_period / 2.0)
             last_t = now
 
         def track_plan() -> None:

@@ -425,6 +425,62 @@ def test_rollback_restores_ef_buffer_bit_exact():
                                           np.asarray(tw["ef"]))
 
 
+# ------------------------------------------- versioned pulls under faults
+def test_versioned_pull_after_rollback_restamp_patches_to_full():
+    """A rollback replay re-stamps every replayed block (PR 8), so a
+    client vector held from BEFORE the fault sees exactly the replayed
+    blocks in its next diff -- never a silently-skipped stale block:
+    patching the held payload must land on a fresh full pull bit for
+    bit, and a job that never stepped stays an empty diff."""
+    inj = FaultInjector()
+    rt, eng = _flat(snapshot_interval=2, fault_injector=inj)
+    for _ in range(3):  # only a and b move; c's blocks never stamp
+        for j in ("a", "b"):
+            eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+    held = {j: eng.pull(j, since_version=0) for j in TREES}
+    inj.fail_apply(at=1)  # rules count from arming: the NEXT apply dies
+    for j in ("a", "b"):
+        eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+    assert inj.n_fired == 1
+    assert eng.stats.n_rollbacks >= 1
+    da = eng.pull("a", since_version=held["a"].version)
+    assert not da.full and da.block_ids.size > 0
+    for j in ("a", "b"):
+        d = (da if j == "a"
+             else eng.pull(j, since_version=held[j].version))
+        fresh = eng.pull(j, since_version=0)
+        np.testing.assert_array_equal(
+            np.asarray(d.apply(held[j].data)), np.asarray(fresh.data))
+    dc = eng.pull("c", since_version=held["c"].version)
+    assert not dc.full and dc.block_ids.size == 0
+
+
+def test_versioned_pull_against_quarantined_lane_raises():
+    """Direct versioned pulls die with the hosting lane (the read tier's
+    replicas are the degraded-serving path); jobs off the dead shard
+    keep serving diffs."""
+    inj = FaultInjector()
+    rt, eng = _sharded(fault_injector=inj)
+    victim = rt.shard_ids[-1]
+    inj.kill_shard(victim, at=2)
+    with pytest.raises(EngineQuarantinedError):
+        _drive(eng, 12)
+    hosted = [j for j in TREES
+              if victim in rt.splan.job_layout(j).shard_ids]
+    spared = [j for j in TREES
+              if victim not in rt.splan.job_layout(j).shard_ids]
+    assert hosted and spared, "placement left nothing to compare"
+    with pytest.raises(EngineQuarantinedError) as ei:
+        eng.pull(hosted[0], since_version=0)
+    assert ei.value.shard_id == victim
+    with pytest.raises(EngineQuarantinedError):
+        eng.pull(hosted[0])  # the plain tree pull dies the same way
+    d = eng.pull(spared[0], since_version=0)
+    assert d.full and d.bytes_full > 0
+
+
 def test_chaos_mixed_compression_stays_quarantine_free():
     """Seeded chaos over a mixed compressed/plain job fleet: transient
     schedules must recover in place (no lane quarantined) and land on

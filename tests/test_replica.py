@@ -1,0 +1,382 @@
+"""Read tier (PR 10): publish-on-tick snapshots, pull-only replicas,
+batched lookup, staleness bounds, and degraded serving.
+
+Parity notes.  Publishes fire PRE-apply (co-located with the PR-7
+rollback snapshot), so a replica legitimately trails the live state by
+the in-flight tick; ``ReplicaSet.refresh()`` force-publishes the CURRENT
+state and every replica-vs-engine comparison below refreshes first --
+after that the two must match bit for bit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParameterService
+from repro.ps.faults import (
+    QUARANTINED,
+    EngineQuarantinedError,
+    FaultInjector,
+)
+from repro.ps.replica import ParameterReplica, ReadStats, ReplicaSet
+from repro.ps.service_runtime import ServiceRuntime, ShardedServiceRuntime
+
+
+def _tree(key, sizes):
+    ks = jax.random.split(key, len(sizes))
+    return {f"t{i}": jax.random.normal(k, (n,))
+            for i, (k, n) in enumerate(zip(ks, sizes))}
+
+
+def _loss(params, batch):
+    return sum(jnp.sum((params[k] - batch["target"][k]) ** 2)
+               for k in params)
+
+
+TREES = {
+    "a": _tree(jax.random.PRNGKey(0), (48, 16, 32)),
+    "b": _tree(jax.random.PRNGKey(1), (32, 16)),
+    "c": _tree(jax.random.PRNGKey(2), (48, 16)),
+}
+TARGETS = {j: jax.tree_util.tree_map(lambda p: p * 0 + 1.0, t)
+           for j, t in TREES.items()}
+
+
+def _add_jobs(rt):
+    for jid, t in TREES.items():
+        nbytes = sum(4 * v.size for v in t.values())
+        rt.add_job(jid, t, _loss, lr=0.05, required_servers=1,
+                   agg_throughput=nbytes / 0.2)
+
+
+def _flat(**engine_opts):
+    rt = ServiceRuntime(
+        ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16),
+        jit=False)
+    engine_opts.setdefault("max_staleness", 0)
+    eng = rt.attach_engine(jit=False, **engine_opts)
+    _add_jobs(rt)
+    return rt, eng
+
+
+def _sharded(n_shards=3, **engine_opts):
+    svc = ParameterService(total_budget=16, n_clusters=1, plan_pad_to=16)
+    rt = ShardedServiceRuntime(svc, jit=False)
+    engine_opts.setdefault("max_staleness", 0)
+    eng = rt.attach_engine(jit=False, **engine_opts)
+    _add_jobs(rt)
+    if n_shards > 1:
+        svc.scale_out(n_shards - 1)
+    return rt, eng
+
+
+def _drive(eng, n):
+    for _ in range(n):
+        for j in TREES:
+            eng.step(j, {"target": TARGETS[j]})
+    eng.drain()
+
+
+def _assert_trees_equal(a, b):
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ------------------------------------------------------------- construction
+def test_replica_set_validates_arguments():
+    rt, eng = _flat()
+    with pytest.raises(ValueError, match="n_replicas"):
+        ReplicaSet(eng, n_replicas=0)
+    with pytest.raises(ValueError, match="publish_interval"):
+        ReplicaSet(eng, publish_interval=0)
+    with pytest.raises(ValueError, match="max_staleness_ticks"):
+        ReplicaSet(eng, max_staleness_ticks=-1)
+    rs = ReplicaSet(eng, n_replicas=3)
+    assert len(rs.replicas) == 3
+    assert all(isinstance(r, ParameterReplica) for r in rs.replicas)
+    with pytest.raises(ValueError, match="already has a ReplicaSet"):
+        ReplicaSet(eng)
+
+
+# ------------------------------------------------------- publish + parity
+@pytest.mark.parametrize("build", [_flat, _sharded],
+                         ids=["flat", "sharded"])
+def test_tree_pull_parity_after_refresh(build):
+    rt, eng = build()
+    rs = ReplicaSet(eng, n_replicas=2)
+    _drive(eng, 4)
+    assert rs.n_publishes > 0  # every applying tick offered a publish
+    rs.refresh()
+    for j in TREES:
+        _assert_trees_equal(eng.pull(j), rs.pull(j))
+    for rep in rs.replicas:
+        assert rep.stats.n_snapshots_seen > 0
+
+
+@pytest.mark.parametrize("build", [_flat, _sharded],
+                         ids=["flat", "sharded"])
+def test_versioned_pull_and_diff_chain_parity(build):
+    rt, eng = build()
+    rs = ReplicaSet(eng, n_replicas=1)
+    _drive(eng, 3)
+    rs.refresh()
+    rep = rs.replicas[0]
+    for j in TREES:
+        de = eng.pull(j, since_version=0)
+        d0 = rep.pull(j, since_version=0)
+        assert d0.full and d0.bytes_full == de.bytes_full
+        np.testing.assert_array_equal(np.asarray(d0.data),
+                                      np.asarray(de.data))
+        # Chain: step only "a", diff against the held vector, patch.
+    for _ in range(2):
+        eng.step("a", {"target": TARGETS["a"]})
+    eng.drain()
+    rs.refresh()
+    held = rep.pull("a", since_version=0)
+    base = rep.pull("b", since_version=0)
+    d1 = rep.pull("b", since_version=base.version)
+    assert not d1.full and d1.block_ids.size == 0  # "b" never moved
+    d2 = rep.pull("a", since_version=held.version)
+    # held was served at the same refresh: the extra steps landed after,
+    # so this diff is empty too; now move "a" and diff again.
+    eng.step("a", {"target": TARGETS["a"]})
+    eng.drain()
+    rs.refresh()
+    d3 = rep.pull("a", since_version=d2.version)
+    assert not d3.full and d3.block_ids.size > 0
+    assert d3.bytes_wire == 4 * d3.block_ids.size * d3.block
+    patched = d3.apply(d2.apply(held.data))
+    np.testing.assert_array_equal(
+        np.asarray(patched), np.asarray(eng.pull("a",
+                                                 since_version=0).data))
+
+
+def test_pull_batch_matches_sequential_pulls():
+    rt, eng = _sharded()
+    rs = ReplicaSet(eng, n_replicas=1)
+    _drive(eng, 3)
+    rs.refresh()
+    rep = rs.replicas[0]
+    boot = rep.pull_batch([(j, 0) for j in TREES])
+    assert [d.job_id for d in boot] == list(TREES)
+    for d in boot:
+        ref = eng.pull(d.job_id, since_version=0)
+        assert d.full
+        np.testing.assert_array_equal(np.asarray(d.data),
+                                      np.asarray(ref.data))
+    vec = {d.job_id: d.version for d in boot}
+    for _ in range(2):  # only "a" moves
+        eng.step("a", {"target": TARGETS["a"]})
+    eng.drain()
+    rs.refresh()
+    batch = rep.pull_batch([(j, vec[j]) for j in TREES])
+    for d in batch:
+        ref = rep.pull(d.job_id, since_version=vec[d.job_id])
+        assert d.full == ref.full
+        np.testing.assert_array_equal(d.block_ids, ref.block_ids)
+        np.testing.assert_array_equal(np.asarray(d.data),
+                                      np.asarray(ref.data))
+        assert d.bytes_wire == ref.bytes_wire
+    moved = {d.job_id: d.block_ids.size for d in batch}
+    assert moved["a"] > 0 and moved["b"] == 0 and moved["c"] == 0
+    assert rep.stats.n_batches == 2
+    assert rep.stats.n_batch_jobs == 2 * len(TREES)
+
+
+# ------------------------------------------------------------ epoch fence
+def test_replan_fences_snapshots_and_resubscribes():
+    rt, eng = _sharded(n_shards=2)
+    rs = ReplicaSet(eng, n_replicas=2)
+    _drive(eng, 3)
+    rs.refresh()
+    before = rs.epoch
+    assert rt.service.scale_out(1) == 1  # replan: epoch bump
+    assert rs.epoch > before
+    # New-geometry ticks resubscribe as they apply: the epoch check in
+    # on_tick overrides publish_interval.
+    _drive(eng, 2)
+    assert all(rep._snaps[k].epoch == rs.epoch
+               for rep in rs.replicas for k in rep._snaps)
+    rs.refresh()
+    for j in TREES:  # post-replan serve is bit-exact on the new geometry
+        _assert_trees_equal(eng.pull(j), rs.pull(j))
+
+
+def test_stale_epoch_pull_forces_refresh_not_stale_serve():
+    rt, eng = _sharded(n_shards=2)
+    rs = ReplicaSet(eng, n_replicas=1, publish_interval=1000)
+    rep = rs.replicas[0]
+    _drive(eng, 2)
+    rs.refresh()
+    rep.pull("a")
+    assert rt.service.scale_out(1) == 1
+    # No tick has run at the new epoch: the held snapshots still carry
+    # the OLD epoch (a post-replan tick would have resubscribed -- the
+    # epoch check overrides publish_interval); the fence must force a
+    # refresh rather than serve the wrong geometry.
+    n_before = rep.stats.n_forced_refreshes
+    _assert_trees_equal(eng.pull("a"), rep.pull("a"))
+    assert rep.stats.n_forced_refreshes == n_before + 1
+
+
+# -------------------------------------------------------- staleness bound
+def test_staleness_bound_forces_refresh():
+    rt, eng = _flat()
+    rs = ReplicaSet(eng, n_replicas=1, publish_interval=1000,
+                    max_staleness_ticks=1)
+    rep = rs.replicas[0]
+    _drive(eng, 1)
+    rs.refresh()
+    _drive(eng, 4)  # way past the bound, nothing republished
+    n_before = rep.stats.n_forced_refreshes
+    _assert_trees_equal(eng.pull("a"), rep.pull("a"))
+    assert rep.stats.n_forced_refreshes == n_before + 1
+    assert max(rep.stats.staleness_hist) <= 1
+
+
+def test_unbounded_staleness_serves_old_snapshot():
+    rt, eng = _flat()
+    rs = ReplicaSet(eng, n_replicas=1, publish_interval=1000,
+                    max_staleness_ticks=None)
+    rep = rs.replicas[0]
+    _drive(eng, 1)
+    rs.refresh()
+    held = {j: rep.pull(j) for j in TREES}
+    _drive(eng, 4)
+    for j in TREES:  # no bound: the old snapshot keeps serving
+        _assert_trees_equal(held[j], rep.pull(j))
+    assert rep.stats.n_forced_refreshes == 0
+    assert max(rep.stats.staleness_hist) > 1
+
+
+def test_client_ahead_of_replica_forces_refresh():
+    rt, eng = _flat()
+    rs = ReplicaSet(eng, n_replicas=1, publish_interval=1000)
+    rep = rs.replicas[0]
+    _drive(eng, 2)
+    rs.refresh()
+    _drive(eng, 2)
+    # The client bootstrapped off the ENGINE (live state): its vector is
+    # AHEAD of the replica's held snapshot.  A naive diff would report
+    # "no change"; the replica must refresh to at least the client view.
+    ahead = eng.pull("a", since_version=0)
+    d = rep.pull("a", since_version=ahead.version)
+    assert rep.stats.n_forced_refreshes >= 1
+    assert not d.full and d.block_ids.size == 0
+    np.testing.assert_array_equal(d.version.versions,
+                                  ahead.version.versions)
+
+
+# ------------------------------------------------------ degraded serving
+def test_quarantined_lane_serves_last_good_degraded():
+    inj = FaultInjector()
+    rt, eng = _sharded(fault_injector=inj)
+    rs = ReplicaSet(eng, n_replicas=1)
+    rep = rs.replicas[0]
+    victim = rt.shard_ids[-1]
+    _drive(eng, 2)
+    rs.refresh()
+    inj.kill_shard(victim, at=1)
+    with pytest.raises(EngineQuarantinedError):
+        _drive(eng, 8)
+    assert eng.shard_health()[victim] == QUARANTINED
+    hosted = [j for j in TREES
+              if victim in rt.splan.job_layout(j).shard_ids]
+    assert hosted, "placement left no job on the victim shard"
+    frozen = rep._snaps[victim]  # the dead lane's last-good snapshot
+    for j in hosted:
+        # Direct engine pulls die with the lane; the replica keeps
+        # serving -- the victim's rows off its last-good snapshot
+        # (healthy lanes' rows stay current), flagged degraded.
+        with pytest.raises(EngineQuarantinedError):
+            eng.pull(j)
+        served = rep.pull(j)
+        assert victim in rep.degraded_lanes
+        _assert_trees_equal(served, rep.pull(j))  # deterministic
+    assert rep._snaps[victim] is frozen  # nothing republished the lane
+    assert rep.stats.n_degraded_serves >= len(hosted)
+    # refresh() skips the dead lane instead of touching its buffers.
+    published = rs.refresh()
+    assert victim not in published
+
+
+def test_quarantined_lane_without_snapshot_raises():
+    inj = FaultInjector()
+    rt, eng = _sharded(fault_injector=inj)
+    victim = rt.shard_ids[-1]
+    inj.kill_shard(victim, at=1)
+    with pytest.raises(EngineQuarantinedError):
+        _drive(eng, 8)
+    # Subscribing AFTER the lane died: no last-good snapshot exists, so
+    # a pull of a hosted job propagates the lane's quarantine error.
+    rs = ReplicaSet(eng, n_replicas=1)
+    hosted = [j for j in TREES
+              if victim in rt.splan.job_layout(j).shard_ids]
+    with pytest.raises(EngineQuarantinedError) as ei:
+        rs.pull(hosted[0])
+    assert ei.value.shard_id == victim
+
+
+# ------------------------------------------------------- publish interval
+def test_publish_interval_batches_publishes():
+    rt, eng = _flat()
+    every = ReplicaSet(eng, n_replicas=1, publish_interval=1)
+    _drive(eng, 6)
+    n_every = every.n_publishes
+
+    rt2, eng2 = _flat()
+    sparse = ReplicaSet(eng2, n_replicas=1, publish_interval=4)
+    _drive(eng2, 6)
+    assert 0 < sparse.n_publishes < n_every
+
+
+def test_publish_reuses_rollback_snapshot_copy():
+    rt, eng = _flat(snapshot_interval=2)
+    rs = ReplicaSet(eng, n_replicas=2)
+    _drive(eng, 6)
+    # Publishes co-located with a PR-7 anchor refresh ride that copy.
+    assert rs.n_reused_snapshot_copies > 0
+    assert rs.n_reused_snapshot_copies <= rs.n_publishes
+
+
+def test_snapshots_are_shared_not_copied_per_replica():
+    rt, eng = _flat()
+    rs = ReplicaSet(eng, n_replicas=4)
+    _drive(eng, 2)
+    rs.refresh()
+    snaps = [rep._snaps[None] for rep in rs.replicas]
+    assert all(s is snaps[0] for s in snaps[1:])
+
+
+# ------------------------------------------------------------------ stats
+@pytest.mark.parametrize("build", [_flat, _sharded],
+                         ids=["flat", "sharded"])
+def test_debug_stats_surfaces_read_tier(build):
+    rt, eng = build()
+    assert rt.debug_stats()["replicas"] is None
+    rs = ReplicaSet(eng, n_replicas=2, max_staleness_ticks=8)
+    _drive(eng, 2)
+    rs.refresh()
+    rs.pull("a")
+    rs.pull_batch([("b", 0)])
+    out = rt.debug_stats()["replicas"]
+    assert out["n_replicas"] == 2
+    assert out["max_staleness_ticks"] == 8
+    assert out["n_publishes"] == rs.n_publishes
+    r0 = out["replica_0"]
+    assert set(r0) >= {"n_pulls", "n_batches", "bytes_served",
+                       "staleness_hist", "pulls_per_sec"}
+    assert r0["n_pulls"] == 1 and r0["bytes_served"] > 0
+    assert out["replica_1"]["n_batches"] == 1
+    assert isinstance(ReadStats().pulls_per_sec, float)
+
+
+def test_round_robin_spreads_load():
+    rt, eng = _flat()
+    rs = ReplicaSet(eng, n_replicas=3)
+    _drive(eng, 2)
+    rs.refresh()
+    for _ in range(6):
+        rs.pull("a")
+    assert [rep.stats.n_pulls for rep in rs.replicas] == [2, 2, 2]
